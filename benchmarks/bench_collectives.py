@@ -1,0 +1,54 @@
+"""Paper Fig. 10-12 + §4.1 — allreduce algorithm comparison.
+
+(a) the alpha-beta cost model across p and message size (ring vs tree/PS vs
+hierarchical vs 2D-mesh — Tables/figures 10-12's shapes), and (b) MEASURED
+wall times of our ppermute implementations on an 8-device host mesh, run in
+a subprocess so this process keeps its 1-device view."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+from repro.core.collectives import LinkParams, allreduce_cost_s
+
+MEASURE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core.collectives import allreduce
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 1 << 20))
+for algo in ("psum", "ring", "tree", "hierarchical"):
+    f = jax.jit(jax.shard_map(lambda v: allreduce(v, algo, ("data",)),
+                mesh=mesh, in_specs=P("data", None), out_specs=P(None),
+                axis_names={"data"}, check_vma=False))
+    jax.block_until_ready(f(x))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(f(x))
+        ts.append(time.perf_counter() - t0)
+    print(f"MEASURED,{algo},{sorted(ts)[2]*1e6:.1f}")
+"""
+
+
+def run():
+    link = LinkParams(alpha_s=1e-6, beta_s_per_byte=1 / 50e9)
+    for p in (16, 256, 512):
+        for nbytes, tag in ((1e4, "10KB"), (1e8, "100MB")):
+            for algo in ("ring", "tree", "hierarchical", "mesh2d",
+                         "mesh2d_split"):
+                t = allreduce_cost_s(algo, nbytes, p, link)
+                emit(f"fig10/{algo}/p{p}/{tag}", t * 1e6,
+                     f"alpha-beta model")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", MEASURE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    for line in res.stdout.splitlines():
+        if line.startswith("MEASURED,"):
+            _, algo, us = line.split(",")
+            emit(f"fig10/measured_8dev/{algo}", float(us), "4MiB allreduce")

@@ -1,0 +1,58 @@
+"""Paper Fig. 7 + §3.2 — compression schemes side by side.
+
+For each compressor: wire bits per step (the figure's visual), measured
+compress+decompress cost, and one-shot reconstruction error on an identical
+gradient — plus the Pallas fused-EF kernels' timings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.compression import get_compressor
+
+SHAPES = [(1024, 1024)]     # a ~1M-element layer gradient (fp32: 4 MB)
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    g = jax.random.normal(rng, SHAPES[0]) * 0.01
+    dense_bits = g.size * 32
+    cases = [
+        ("none", {}), ("sign", {}), ("terngrad", {}),
+        ("qsgd", {"levels": 127}), ("qsgd4", None), ("int8", {}),
+        ("topk", {"ratio": 0.01}), ("randomk", {"ratio": 0.01}),
+        ("powersgd", {"rank": 4}), ("svd", {"rank": 4}),
+    ]
+    for name, kwargs in cases:
+        if name == "qsgd4":
+            comp = get_compressor("qsgd", levels=7)   # ~4-bit QSGD
+        else:
+            comp = get_compressor(name, **kwargs)
+
+        def roundtrip(g, r):
+            if comp.name == "powersgd":
+                payload, meta = comp.compress(g, rng=r)
+                return comp.decompress(payload, meta)
+            payload, meta = comp.compress(g, r)
+            return comp.decompress(payload, meta)
+
+        f = jax.jit(roundtrip)
+        us = time_fn(f, g, rng)
+        g_hat = f(g, rng)
+        err = float(jnp.linalg.norm(g_hat - g) / jnp.linalg.norm(g))
+        bits = comp.payload_bits(g.shape)
+        emit(f"fig7/{name}", us,
+             f"ratio={dense_bits / bits:.1f}x;rel_err={err:.4f};bits={bits}")
+
+    # Pallas fused kernels (interpret mode on CPU)
+    from repro.kernels import ops
+    flat = g.reshape(-1)
+    e = jnp.zeros_like(flat)
+    emit("fig7/pallas_quantize_ef", time_fn(ops.quantize_ef, flat, e),
+         "fused EF+int8 kernel")
+    emit("fig7/pallas_topk_mask",
+         time_fn(lambda x: ops.topk_mask(x, ratio=0.01), flat),
+         "block top-k kernel")

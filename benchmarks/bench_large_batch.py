@@ -1,0 +1,49 @@
+"""Paper Table 1 / Fig. 4 — large-batch training.
+
+The survey's Table 1 compares ResNet-50 wall-clocks across batch sizes and
+LR recipes; the transferable quantities here are (a) comm rounds and bytes
+per epoch as batch grows (Eq. 1: batch x iters = dataset), (b) the LR that
+each scaling rule + warmup produces, and (c) the measured per-step cost of
+the large-batch optimizers (SGD/LARS/LAMB) on an identical model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.optim import (apply_updates, make_optimizer, scale_lr_for_batch,
+                         warmup_cosine, legw_warmup_steps)
+
+DATASET = 1_281_167          # ImageNet-1k, as in the paper's example
+BASE_BATCH, BASE_LR = 256, 0.1
+GRAD_BYTES = 97 * 2**20      # ResNet-50 fp32 gradients (the paper's 97 MB)
+
+
+def run():
+    # (a) rounds/bytes per epoch vs batch (survey Eq. 1)
+    for batch in (256, 1024, 8192, 32768, 65536):
+        iters = DATASET // batch
+        lr_lin = scale_lr_for_batch(BASE_LR, BASE_BATCH, batch, "linear")
+        lr_sqrt = scale_lr_for_batch(BASE_LR, BASE_BATCH, batch, "sqrt")
+        warm = legw_warmup_steps(5 * (DATASET // BASE_BATCH) // 100,
+                                 BASE_BATCH, batch)
+        emit(f"table1/rounds_per_epoch/b{batch}", 0.0,
+             f"iters={iters};bytes={iters * GRAD_BYTES:.3e};"
+             f"lr_linear={lr_lin:.3f};lr_sqrt={lr_sqrt:.3f};legw_warmup={warm}")
+
+    # (c) optimizer step cost at fixed model size
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (512, 512)),
+              "b": jnp.zeros((512,))}
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 1e-3, params)
+    for name in ("sgd", "adam", "lars", "lamb"):
+        opt = make_optimizer(name, lr=warmup_cosine(0.1, 10, 100))
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s, g):
+            u, s = opt.update(g, s, p, jnp.asarray(1))
+            return apply_updates(p, u), s
+
+        us = time_fn(step, params, state, grads)
+        emit(f"table1/opt_step/{name}", us, "per-step optimizer cost")

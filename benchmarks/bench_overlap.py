@@ -1,0 +1,49 @@
+"""Paper Fig. 8 + §3.3 — computation-communication overlap schedules.
+
+The analytic WFBP/MG-WFBP/P3 model over a realistic transformer layer
+profile, swept across network regimes (the figure's three cases), plus the
+measured effect of grad-sync bucket size (tensor fusion) on payload
+structure."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.grad_sync import bucketize
+from repro.core.schedule import (LayerProfile, iteration_time_fifo,
+                                 iteration_time_mg_wfbp, iteration_time_p3,
+                                 iteration_time_wfbp, wfbp_case)
+
+
+def transformer_profile(layers=24, d=2048, ff=8192, t_flop=197e12, tokens=2048):
+    per_layer_flops = tokens * (8 * d * d + 6 * d * ff)
+    grad_bytes = (4 * d * d + 3 * d * ff) * 4
+    return [LayerProfile(per_layer_flops / t_flop * 3, grad_bytes)] * layers
+
+
+def run():
+    layers = transformer_profile()
+    regimes = {
+        "fast_ici": (1e-6, 1 / 50e9),
+        "datacenter": (5e-6, 1 / 10e9),
+        "commodity": (50e-6, 1 / 1.25e9),  # the survey's 10 GbE setting
+    }
+    for name, (a, b) in regimes.items():
+        fifo = iteration_time_fifo(layers, a, b)
+        wfbp = iteration_time_wfbp(layers, a, b)
+        mg = iteration_time_mg_wfbp(layers, a, b, bucket_bytes=64 * 2**20)
+        p3 = iteration_time_p3(layers, a, b, slice_bytes=4 * 2**20)
+        case = wfbp_case(layers, a, b)
+        emit(f"fig8/{name}/fifo", fifo * 1e6, f"case={case}")
+        emit(f"fig8/{name}/wfbp", wfbp * 1e6,
+             f"speedup={fifo / wfbp:.2f}x")
+        emit(f"fig8/{name}/mg_wfbp", mg * 1e6,
+             f"speedup={fifo / mg:.2f}x")
+        emit(f"fig8/{name}/p3", p3 * 1e6, f"speedup={fifo / p3:.2f}x")
+
+    # bucket-size sweep on a real gradient pytree (tensor fusion, §4.2)
+    grads = {f"layer{i}": jnp.zeros((512, 512)) for i in range(32)}
+    for mb in (1, 4, 32, 256):
+        defs, _, _ = bucketize(grads, mb * 2**20)
+        emit(f"fig8/buckets/{mb}MiB", 0.0, f"n_buckets={len(defs)}")

@@ -1,0 +1,33 @@
+"""Paper §4.3 — network protocol comparison as an alpha/beta parameter study.
+
+RDMA/IPoIB/TCP have no TPU analogue (DESIGN.md §5): their effect is lower
+per-message latency and higher effective bandwidth, so the survey's
+comparison (e.g. IPoIB 53% vs RDMA 96% scaling of Inception-v3 on 100 GPUs)
+is reproduced by sweeping (alpha, beta) through published protocol numbers
+and reporting the predicted scaling efficiency of a ring allreduce-per-step
+training loop."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.collectives import LinkParams, allreduce_cost_s
+
+PROTOCOLS = {
+    # alpha (latency), beta (1/bandwidth) — representative published values
+    "tcp_socket": (50e-6, 1 / 1.2e9),
+    "ipoib": (20e-6, 1 / 4e9),
+    "rdma_verbs": (2e-6, 1 / 11e9),
+    "tpu_ici": (1e-6, 1 / 50e9),
+}
+
+STEP_COMPUTE_S = 0.25     # Inception-v3-ish step
+GRAD_BYTES = 95e6         # ~24M params fp32
+
+
+def run():
+    for name, (a, b) in PROTOCOLS.items():
+        link = LinkParams(alpha_s=a, beta_s_per_byte=b)
+        for p in (8, 100):
+            t_comm = allreduce_cost_s("ring", GRAD_BYTES, p, link)
+            eff = STEP_COMPUTE_S / (STEP_COMPUTE_S + t_comm)
+            emit(f"protocols/{name}/p{p}", t_comm * 1e6,
+                 f"scaling_eff={eff:.2%}")

@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (benchmarks/run.py
+contract); ``derived`` carries the table-specific metric.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (results blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

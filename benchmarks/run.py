@@ -1,0 +1,46 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_collectives, bench_compression,
+                        bench_large_batch, bench_overlap, bench_periodic,
+                        bench_protocols)
+
+SUITES = {
+    "table1": bench_large_batch,
+    "table2": bench_periodic,
+    "fig7": bench_compression,
+    "fig8": bench_overlap,
+    "fig10": bench_collectives,
+    "protocols": bench_protocols,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SUITES), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{name},nan,SUITE FAILED", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

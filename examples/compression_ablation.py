@@ -1,0 +1,74 @@
+"""Compression ablation (survey §3.2 in miniature): train the same reduced
+model with each gradient compressor and report final losses + wire bytes —
+the accuracy/compression trade-off the survey's Fig. 7 discusses.
+
+    PYTHONPATH=src python examples/compression_ablation.py [--steps 80]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import GradientSynchronizer, SyncConfig
+from repro.data import DataConfig, SyntheticPipeline
+from repro.models import Model
+from repro.optim import apply_updates, make_optimizer
+
+CASES = [
+    ("none", ()),
+    ("sign", ()),
+    ("int8", ()),
+    ("qsgd", (("levels", 15),)),
+    ("topk", (("ratio", 0.05),)),
+    ("powersgd", (("rank", 4),)),
+]
+
+
+def train_once(compressor, cargs, steps, seed=0):
+    cfg = reduced(get_config("xlstm-125m"))
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    opt = make_optimizer("adam", lr=3e-3)
+    opt_state = opt.init(params)
+    sync = GradientSynchronizer(
+        SyncConfig(compressor=compressor, compressor_args=cargs, algo="ring"),
+        axes=())
+    sync_state = sync.init_state(params)
+    data = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=64, global_batch=8))
+
+    @jax.jit
+    def step(params, opt_state, sync_state, batch, i, rng):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, sync_state = sync(grads, sync_state, rng)
+        updates, opt_state = opt.update(grads, opt_state, params, i)
+        return apply_updates(params, updates), opt_state, sync_state, loss
+
+    loss = None
+    for i in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt_state, sync_state, loss = step(
+            params, opt_state, sync_state, batch, jnp.asarray(i),
+            jax.random.fold_in(rng, i))
+    bits = sync.payload_bits(params)
+    return float(loss), bits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+    print(f"{'compressor':<10} {'final_loss':>10} {'wire_bits':>12} {'ratio':>7}")
+    dense_bits = None
+    for name, cargs in CASES:
+        loss, bits = train_once(name, cargs, args.steps)
+        dense_bits = dense_bits or bits
+        print(f"{name:<10} {loss:>10.4f} {bits:>12,} "
+              f"{dense_bits / bits:>6.1f}x")
+    print("ablation OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example (deliverable b): prefill a batch of prompts and
+decode continuations with KV caches / recurrent state, across three
+architecture families (dense GQA, MLA+MoE, SSM).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("gemma-2b", "deepseek-v2-lite-16b", "xlstm-125m"):
+        serve_mod.main(["--arch", arch, "--batch", "4",
+                        "--prompt-len", "24", "--gen", "12"])
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Checkpointing: save/restore arbitrary pytrees (params, optimizer state,
+comm-optimizer state, data-pipeline step) as a flat .npz plus a JSON
+manifest of the tree structure.
+
+Sharded-aware: arrays are gathered to host before writing and re-placed with
+``jax.device_put(..., sharding)`` on restore, so the same checkpoint moves
+between mesh layouts (the usual resharding-restore pattern).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path + ".npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(path + ".json", "w") as f:
+        json.dump({"treedef": str(treedef), "step": step,
+                   "keys": sorted(arrays)}, f)
+
+
+def restore(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedSharding to place shards directly."""
+    data = np.load(path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    flat_shard = _flatten_with_paths(shardings) if shardings is not None else None
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for path_key, leaf in flat_like.items():
+        arr = data[path_key]
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[path_key])
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

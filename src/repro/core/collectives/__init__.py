@@ -1,0 +1,7 @@
+from repro.core.collectives.api import (  # noqa: F401
+    ALGOS, LinkParams, allreduce, allreduce_cost_s)
+from repro.core.collectives.ring import (  # noqa: F401
+    ring_allreduce, ring_reduce_scatter, ring_all_gather_chunks)
+from repro.core.collectives.tree import tree_allreduce  # noqa: F401
+from repro.core.collectives.hierarchical import hierarchical_allreduce  # noqa: F401
+from repro.core.collectives.mesh2d import mesh2d_allreduce  # noqa: F401

@@ -1,0 +1,29 @@
+"""Hierarchical Allreduce (survey §4.1.2, Fig. 12; Jia et al. 2018).
+
+The paper's three phases — intra-group ring, inter-group (masters) ring,
+intra-group broadcast — map onto two nested mesh axes in SPMD: a ring
+reduce-scatter + all-gather inside the pod (``data`` axis), with the
+inter-pod ring (``pod`` axis) run on the *scattered shards* between the two
+intra-pod phases.  Because every rank participates symmetrically, the
+"master" designation of the GPU formulation disappears (DESIGN.md §5), but
+the traffic per link matches: 4(k-1)/k·(n/p_outer) intra + 2(p_outer-1)/
+p_outer·(n/k) inter.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.collectives.ring import (ring_all_gather_chunks,
+                                         ring_allreduce, ring_reduce_scatter)
+
+
+def hierarchical_allreduce(x, inner_axis: str, outer_axis: str):
+    """Ring RS over ``inner_axis``; ring allreduce of the shard over
+    ``outer_axis``; ring AG over ``inner_axis``."""
+    p_in = jax.lax.axis_size(inner_axis)
+    if p_in == 1:
+        return ring_allreduce(x, outer_axis)
+    mine, my_idx, n = ring_reduce_scatter(x, inner_axis)
+    mine = ring_allreduce(mine, outer_axis)
+    gathered = ring_all_gather_chunks(mine, my_idx, p_in, inner_axis)
+    return gathered.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,28 @@
+"""2D-Mesh / 2D-Torus Allreduce (survey §4.1.2, Fig. 11; Ying et al. 2018;
+Mikami et al. 2018).
+
+Gradients are reduced along the two torus dimensions in sequence —
+reduce-scatter along X, allreduce of the shards along Y, all-gather along X
+— which is the native scheme for TPU ICI (a physical 2D/3D torus).  Ying et
+al.'s throughput-doubling trick of summing the two halves of the payload on
+perpendicular rings is exposed as ``split=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives.hierarchical import hierarchical_allreduce
+
+
+def mesh2d_allreduce(x, x_axis: str, y_axis: str, split: bool = False):
+    if not split:
+        return hierarchical_allreduce(x, inner_axis=x_axis, outer_axis=y_axis)
+    # Ying et al: halve the payload; each half reduces on perpendicular ring
+    # orders, doubling effective link throughput.
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    h = n // 2
+    a = hierarchical_allreduce(flat[:h], inner_axis=x_axis, outer_axis=y_axis)
+    b = hierarchical_allreduce(flat[h:], inner_axis=y_axis, outer_axis=x_axis)
+    return jnp.concatenate([a, b]).reshape(x.shape)

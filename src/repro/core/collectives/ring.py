@@ -1,0 +1,68 @@
+"""Ring Allreduce (survey §4.1.2, Fig. 10; Baidu 2017; Patarasuk & Yuan 2009).
+
+Implemented as explicit ``lax.ppermute`` steps inside a manual ``shard_map``
+axis: a reduce-scatter phase (p-1 steps) followed by an all-gather phase
+(p-1 steps), each moving 1/p of the payload per step — the bandwidth-optimal
+2(p-1)/p · n total traffic.  The lowered HLO shows 2(p-1) collective-permute
+ops, which is what the roofline collective-bytes parser measures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ring_perm(p):
+    return [(i, (i + 1) % p) for i in range(p)]
+
+
+def _pad_chunks(x, p):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    m = -(-n // p)
+    flat = jnp.pad(flat, (0, m * p - n))
+    return flat.reshape(p, m), n
+
+
+def ring_reduce_scatter(x, axis: str):
+    """Returns (my_chunk (m,), chunk_index) — rank r ends with chunk (r+1)%p."""
+    p = jax.lax.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    chunks, n = _pad_chunks(x, p)
+    perm = _ring_perm(p)
+    acc = chunks
+    for s in range(p - 1):
+        send_i = (r - s) % p
+        val = jnp.take(acc, send_i, axis=0)
+        recv = jax.lax.ppermute(val, axis, perm)
+        recv_i = (r - s - 1) % p
+        acc = jax.lax.dynamic_update_index_in_dim(
+            acc, jax.lax.dynamic_index_in_dim(acc, recv_i, 0, False) + recv,
+            recv_i, 0)
+    mine = jax.lax.dynamic_index_in_dim(acc, (r + 1) % p, 0, keepdims=False)
+    return mine, (r + 1) % p, n
+
+
+def ring_all_gather_chunks(mine, my_index, p, axis: str):
+    """Inverse phase: circulate each rank's chunk until all ranks hold all."""
+    perm = _ring_perm(p)
+    out = jnp.zeros((p,) + mine.shape, mine.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, mine, my_index, 0)
+    cur = mine
+    idx = my_index
+    for _ in range(p - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        idx = (idx - 1) % p
+        out = jax.lax.dynamic_update_index_in_dim(out, cur, idx, 0)
+    return out
+
+
+def ring_allreduce(x, axis: str):
+    """Bandwidth-optimal allreduce of one tensor over a manual mesh axis."""
+    p = jax.lax.axis_size(axis)
+    if p == 1:
+        return x
+    mine, my_idx, n = ring_reduce_scatter(x, axis)
+    gathered = ring_all_gather_chunks(mine, my_idx, p, axis)
+    return gathered.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,59 @@
+"""Tree reduction / broadcast — the parameter-server communication pattern
+(survey §4.1.1, Fig. 9) expressed as an SPMD collective.
+
+The flat PS is reduce-to-root followed by broadcast-from-root; the tree PS
+[Mai et al. 2015; Gupta et al. 2016] does both along a binary tree.  On an
+SPMD TPU mesh there is no separate server process, but the *traffic pattern*
+is reproducible with recursive-distance-doubling ``ppermute`` steps: log2(p)
+rounds of full-payload transfers (vs. the ring's 2(p-1) rounds of 1/p each)
+— exactly the latency/bandwidth trade the survey discusses.  Requires p to
+be a power of two (16, 2 on the production mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _shift_perm(p, d):
+    """rank r -> r - d (send towards the root at rank 0)."""
+    return [(i, i - d) for i in range(p) if i - d >= 0]
+
+
+def tree_reduce_to_root(x, axis: str):
+    """After log2(p) rounds rank 0 holds the sum; other ranks hold garbage."""
+    p = jax.lax.axis_size(axis)
+    assert p & (p - 1) == 0, "tree collective requires power-of-two axis"
+    r = jax.lax.axis_index(axis)
+    acc = x
+    d = 1
+    while d < p:
+        recv = jax.lax.ppermute(acc, axis, _shift_perm(p, d))
+        # ranks that are multiples of 2d absorb partner at distance d
+        take = (r % (2 * d) == 0)
+        acc = jnp.where(take, acc + recv, acc)
+        d *= 2
+    return acc
+
+
+def tree_broadcast_from_root(x, axis: str):
+    p = jax.lax.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    d = p // 2
+    acc = x
+    while d >= 1:
+        fwd = [(i, i + d) for i in range(p) if i + d < p]
+        recv = jax.lax.ppermute(acc, axis, fwd)
+        take = (r % (2 * d) == d)
+        acc = jnp.where(take, recv, acc)
+        d //= 2
+    return acc
+
+
+def tree_allreduce(x, axis: str):
+    """Parameter-server pattern: reduce to rank 0, broadcast back."""
+    p = jax.lax.axis_size(axis)
+    if p == 1:
+        return x
+    return tree_broadcast_from_root(tree_reduce_to_root(x, axis), axis)

@@ -1,0 +1,67 @@
+"""Compressor interface (survey §3.2).
+
+A compressor maps a gradient leaf ``g`` to a compact payload and back:
+
+    payload, meta = compress(g, rng)
+    g_hat         = decompress(payload, meta)
+
+``payload_bits(shape)`` reports the wire size — the quantity the survey's
+compression tables compare — and ``aggregatable`` says whether payloads can
+be summed directly by a reduce collective (PowerSGD factors, dense fp16) or
+must be gathered and decompressed per worker first (sign bits, top-k values).
+
+Stateful schemes (error feedback, residual accumulation, PowerSGD's warm
+start) thread their state through ``init_state`` / carried by GradSync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    name: str
+    compress: Callable[..., Tuple[Any, Any]]       # (g, rng) -> (payload, meta)
+    decompress: Callable[[Any, Any], jnp.ndarray]  # (payload, meta) -> g_hat
+    payload_bits: Callable[[Tuple[int, ...]], int]
+    aggregatable: bool = False                     # payloads sum correctly
+    unbiased: bool = False                         # E[decompress] == g
+
+    def roundtrip(self, g, rng=None):
+        payload, meta = self.compress(g, rng)
+        return self.decompress(payload, meta)
+
+
+def identity_compressor() -> Compressor:
+    return Compressor(
+        name="none",
+        compress=lambda g, rng=None: (g, None),
+        decompress=lambda p, m: p,
+        payload_bits=lambda shape: int(np.prod(shape)) * 32,
+        aggregatable=True,
+        unbiased=True,
+    )
+
+
+REGISTRY: Dict[str, Callable[..., Compressor]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+register("none")(identity_compressor)
+
+
+def get_compressor(name: str, **kwargs) -> Compressor:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

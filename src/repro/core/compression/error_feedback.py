@@ -1,0 +1,34 @@
+"""Error feedback / residual accumulation (survey §3.2.1 Eq. 2a-2b).
+
+    e_{t+1}   = g_t - g_hat_t            (what compression lost)
+    g_hat_{t+1} = Q(g_{t+1} + e_{t+1})   (correct the next step)
+
+For quantizers this is EF-SGD [Seide 2014; Karimireddy 2019]; for
+sparsifiers it is local gradient accumulation [Strom 2015; Stich 2018;
+DGC].  ``decay`` is the forgetting factor of Wu et al. 2018 (ECQ-SGD).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressor
+
+
+def init_error_state(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def apply_with_feedback(comp: Compressor, g, e, rng, decay: float = 1.0):
+    """One EF step on a single leaf.
+
+    Returns (g_hat, e_new): the decompressed (locally reconstructed) gradient
+    that enters the collective, and the updated residual.
+    """
+    corrected = g.astype(jnp.float32) + decay * e
+    payload, meta = comp.compress(corrected, rng)
+    g_hat = comp.decompress(payload, meta)
+    e_new = corrected - g_hat
+    return g_hat, e_new

@@ -1,0 +1,92 @@
+"""Low-rank decomposition compressors (survey §3.2.3).
+
+  * ``powersgd`` — rank-r power-iteration factorization [Vogels et al. 2019].
+                   P = M Q;  P <- orthonormalize(P);  Q = M^T P.
+                   Factors are linear in M, hence AGGREGATABLE: an allreduce
+                   over (P, Q) averages the factorization across workers —
+                   the property that makes PowerSGD ring-friendly, unlike
+                   gather-based sparsifiers.  Warm-start Q and the error
+                   buffer are threaded by GradSync.
+  * ``svd``      — ATOMO-style exact rank-r SVD reference [Wang et al. 2018]
+                   (expensive; used as the oracle in tests/benchmarks).
+
+Non-matrix leaves (biases, norms) are transmitted dense, as PowerSGD does.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression.base import Compressor, register
+
+
+def _as_matrix(g) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    shape = g.shape
+    if g.ndim < 2:
+        return g.reshape(1, -1), shape
+    return g.reshape(shape[0], -1), shape
+
+
+def _orthonormalize(p):
+    """Gram-Schmidt (matches the PowerSGD paper; QR would also do)."""
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+@register("powersgd")
+def powersgd_compressor(rank: int = 4) -> Compressor:
+    """One power iteration per step.  meta carries the warm-start Q."""
+
+    def compress(g, rng=None, q_prev: Optional[jnp.ndarray] = None):
+        m, shape = _as_matrix(g.astype(jnp.float32))
+        n, d = m.shape
+        r = min(rank, n, d)
+        if q_prev is None:
+            key = rng if rng is not None else jax.random.PRNGKey(0)
+            q_prev = jax.random.normal(key, (d, r), jnp.float32)
+        p = _orthonormalize(m @ q_prev)        # (n, r)
+        q = m.T @ p                            # (d, r)
+        return (p, q), (shape, q)
+
+    def decompress(payload, meta):
+        p, q = payload
+        shape, _ = meta
+        return (p @ q.T).reshape(shape)
+
+    def bits(shape):
+        if len(shape) < 2:
+            return int(np.prod(shape)) * 32
+        n, d = shape[0], int(np.prod(shape[1:]))
+        r = min(rank, n, d)
+        return (n + d) * r * 32
+
+    return Compressor("powersgd", compress, decompress, bits,
+                      aggregatable=True, unbiased=False)
+
+
+@register("svd")
+def svd_compressor(rank: int = 4) -> Compressor:
+    """Exact truncated SVD (ATOMO reference oracle)."""
+
+    def compress(g, rng=None):
+        m, shape = _as_matrix(g.astype(jnp.float32))
+        u, s, vt = jnp.linalg.svd(m, full_matrices=False)
+        r = min(rank, s.shape[0])
+        return (u[:, :r] * s[:r], vt[:r]), shape
+
+    def decompress(payload, shape):
+        us, vt = payload
+        return (us @ vt).reshape(shape)
+
+    def bits(shape):
+        if len(shape) < 2:
+            return int(np.prod(shape)) * 32
+        n, d = shape[0], int(np.prod(shape[1:]))
+        r = min(rank, n, d)
+        return (n + d) * r * 32
+
+    return Compressor("svd", compress, decompress, bits,
+                      aggregatable=False, unbiased=False)

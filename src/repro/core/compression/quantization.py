@@ -1,0 +1,107 @@
+"""Quantization compressors (survey §3.2.1).
+
+  * ``sign``      — 1-bit signSGD [Bernstein et al. 2018; Seide et al. 2014].
+                    Biased; pair with error feedback (EF-signSGD,
+                    Karimireddy et al. 2019).
+  * ``terngrad``  — stochastic ternary {-1, 0, +1} · max|g| [Wen et al. 2017].
+                    Unbiased by construction.
+  * ``qsgd``      — stochastic s-level quantization with per-tensor L2 scale
+                    [Alistarh et al. 2017].  Unbiased, variance bound
+                    (1 + beta_{d,s})·||v||^2.
+  * ``int8``      — deterministic linear int8 (the "low precision exchange"
+                    baseline in the survey's Fig. 7).
+
+Payloads are carried in the smallest JAX dtype that holds them (int8);
+``payload_bits`` reports the true wire width (1 bit for sign, ~1.6 for
+ternary, log2(2s+1) for QSGD) — the quantity the survey compares.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression.base import Compressor, register
+
+
+def _l2(g):
+    return jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
+
+
+@register("sign")
+def sign_compressor(scale_mode: str = "mean_abs") -> Compressor:
+    """1-bit sign quantization with a per-tensor magnitude (1-bit SGD keeps
+    the column scale; we keep mean |g| which is the EF-signSGD convention)."""
+
+    def compress(g, rng=None):
+        scale = jnp.mean(jnp.abs(g.astype(jnp.float32)))
+        return jnp.sign(g).astype(jnp.int8), scale
+
+    def decompress(payload, scale):
+        return payload.astype(jnp.float32) * scale
+
+    return Compressor("sign", compress, decompress,
+                      payload_bits=lambda shape: int(np.prod(shape)) * 1 + 32,
+                      aggregatable=False, unbiased=False)
+
+
+@register("terngrad")
+def terngrad_compressor() -> Compressor:
+    """g_hat = s * sign(g) ∘ b,  b ~ Bernoulli(|g| / s),  s = max|g|."""
+
+    def compress(g, rng):
+        gf = g.astype(jnp.float32)
+        s = jnp.max(jnp.abs(gf))
+        p = jnp.where(s > 0, jnp.abs(gf) / s, 0.0)
+        b = jax.random.bernoulli(rng, p).astype(jnp.int8)
+        return (jnp.sign(gf).astype(jnp.int8) * b), s
+
+    def decompress(payload, s):
+        return payload.astype(jnp.float32) * s
+
+    return Compressor("terngrad", compress, decompress,
+                      payload_bits=lambda shape: int(np.ceil(np.prod(shape) * np.log2(3))) + 32,
+                      aggregatable=True, unbiased=True)
+
+
+@register("qsgd")
+def qsgd_compressor(levels: int = 127) -> Compressor:
+    """Stochastic uniform quantization to ``levels`` positive levels (plus
+    sign and zero) against the per-tensor L2 norm.  levels=127 fits int8."""
+    assert 1 <= levels <= 127
+
+    def compress(g, rng):
+        gf = g.astype(jnp.float32)
+        norm = _l2(gf)
+        x = jnp.where(norm > 0, jnp.abs(gf) / norm * levels, 0.0)
+        lo = jnp.floor(x)
+        up = jax.random.bernoulli(rng, x - lo).astype(jnp.float32)
+        q = (lo + up) * jnp.sign(gf)
+        return q.astype(jnp.int8), norm
+
+    def decompress(payload, norm):
+        return payload.astype(jnp.float32) * (norm / levels)
+
+    bits = int(np.ceil(np.log2(2 * levels + 1)))
+    return Compressor("qsgd", compress, decompress,
+                      payload_bits=lambda shape: int(np.prod(shape)) * bits + 32,
+                      aggregatable=True, unbiased=True)
+
+
+@register("int8")
+def int8_compressor() -> Compressor:
+    """Deterministic linear int8 against max|g| (biased, tiny bias)."""
+
+    def compress(g, rng=None):
+        gf = g.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30)
+        return jnp.clip(jnp.round(gf / s * 127.0), -127, 127).astype(jnp.int8), s
+
+    def decompress(payload, s):
+        return payload.astype(jnp.float32) * (s / 127.0)
+
+    return Compressor("int8", compress, decompress,
+                      payload_bits=lambda shape: int(np.prod(shape)) * 8 + 32,
+                      aggregatable=True, unbiased=False)

@@ -1,0 +1,98 @@
+"""Sparsification compressors (survey §3.2.2).
+
+  * ``topk``      — transmit the k largest-|g| entries [Aji & Heafield 2017;
+                    Lin et al. DGC 2017].  Pair with residual accumulation
+                    (Stich et al. 2018) via GradSync's error-feedback state.
+  * ``randomk``   — drop indices uniformly at random, amplify survivors by
+                    d/k so the estimate stays unbiased [Wangni et al. 2018].
+  * ``threshold`` — static-threshold clipping [Strom 2015]; the survey notes
+                    threshold selection is brittle, which our property tests
+                    demonstrate (kept for the Fig. 7 comparison).
+
+Payloads are (values, indices) pairs; ``payload_bits`` counts 32 bits each,
+the survey's convention.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression.base import Compressor, register
+
+
+def _flatten(g):
+    return g.reshape(-1), g.shape
+
+
+@register("topk")
+def topk_compressor(ratio: float = 0.01, k: int = 0) -> Compressor:
+    """Keep the k = max(1, ratio·d) largest-magnitude entries."""
+
+    def _k(d):
+        return k if k else max(1, int(d * ratio))
+
+    def compress(g, rng=None):
+        flat, shape = _flatten(g.astype(jnp.float32))
+        kk = _k(flat.shape[0])
+        vals, idx = jax.lax.top_k(jnp.abs(flat), kk)
+        return (jnp.take(flat, idx), idx.astype(jnp.int32)), shape
+
+    def decompress(payload, shape):
+        vals, idx = payload
+        d = int(np.prod(shape))
+        return jnp.zeros((d,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+    def bits(shape):
+        d = int(np.prod(shape))
+        return _k(d) * 64  # 32-bit value + 32-bit index
+
+    return Compressor("topk", compress, decompress, bits,
+                      aggregatable=False, unbiased=False)
+
+
+@register("randomk")
+def randomk_compressor(ratio: float = 0.01) -> Compressor:
+    """Random-k with d/k amplification (unbiased)."""
+
+    def compress(g, rng):
+        flat, shape = _flatten(g.astype(jnp.float32))
+        d = flat.shape[0]
+        kk = max(1, int(d * ratio))
+        idx = jax.random.choice(rng, d, (kk,), replace=False)
+        vals = jnp.take(flat, idx) * (d / kk)
+        return (vals, idx.astype(jnp.int32)), shape
+
+    def decompress(payload, shape):
+        vals, idx = payload
+        d = int(np.prod(shape))
+        return jnp.zeros((d,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+    def bits(shape):
+        d = int(np.prod(shape))
+        return max(1, int(d * ratio)) * 64
+
+    return Compressor("randomk", compress, decompress, bits,
+                      aggregatable=False, unbiased=True)
+
+
+@register("threshold")
+def threshold_compressor(tau: float = 1e-3) -> Compressor:
+    """Static threshold [Strom 2015]: send entries with |g| >= tau.  To keep
+    shapes static under jit, entries below tau are zeroed in place (the wire
+    format would be sparse; payload_bits reports the *expected* occupancy,
+    measured at trace time it is the worst case d)."""
+
+    def compress(g, rng=None):
+        gf = g.astype(jnp.float32)
+        mask = jnp.abs(gf) >= tau
+        return jnp.where(mask, gf, 0.0), None
+
+    def decompress(payload, meta):
+        return payload
+
+    return Compressor("threshold", compress, decompress,
+                      payload_bits=lambda shape: int(np.prod(shape)) * 64,
+                      aggregatable=True, unbiased=False)

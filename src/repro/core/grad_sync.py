@@ -1,0 +1,292 @@
+"""GradientSynchronizer — the survey's taxonomy as one composable step.
+
+Every data-parallel training step runs
+
+    grads -> [bucket] -> [error-feedback + compress] -> collective
+          -> [decompress/aggregate] -> synced grads
+
+with each stage selected by ``SyncConfig``:
+
+  * ``compressor``: none | sign | terngrad | qsgd | int8 | topk | randomk |
+    threshold | powersgd | svd                      (§3.2)
+  * ``algo``: psum | ring | tree | hierarchical | mesh2d | mesh2d_split (§4.1)
+  * ``error_feedback``: EF / residual accumulation  (§3.2.1 Eq. 2)
+  * ``bucket_bytes``: MG-WFBP tensor fusion         (§3.3 / §4.2)
+
+Wire semantics (DESIGN.md §5): gather-based compressors (sign, top-k, ...)
+all-gather their compact payloads over the data axes and every rank
+decompresses + averages — the pattern of 1-bit SGD/DGC, with collective
+bytes proportional to the COMPRESSED size.  Aggregatable factorizations
+(PowerSGD) allreduce their small factors directly on the selected
+collective algorithm.  Must run inside a ``shard_map`` whose manual axes
+are exactly ``axes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import allreduce
+from repro.core.compression import get_compressor
+
+DENSE_SMALL = 4096  # leaves smaller than this stay dense inside PowerSGD
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    compressor: str = "none"
+    compressor_args: Tuple[Tuple[str, Any], ...] = ()
+    algo: str = "psum"
+    error_feedback: bool = True
+    ef_decay: float = 1.0
+    bucket_bytes: int = 32 * 1024 * 1024   # MG-WFBP fusion granularity
+    mean: bool = True                      # divide by world size after reduce
+
+    def make_compressor(self):
+        return get_compressor(self.compressor, **dict(self.compressor_args))
+
+
+# ---------------------------------------------------------------------------
+# Bucketing (tensor fusion, MG-WFBP / Horovod-style)
+# ---------------------------------------------------------------------------
+
+def bucketize(grads, bucket_bytes: int):
+    """Split the flattened gradient pytree into ~bucket_bytes buckets.
+
+    ``bucket_bytes == 0`` means per-leaf buckets WITHOUT concatenation-
+    induced reshape: each leaf stays its own flat bucket, so a leaf's
+    tensor-parallel sharding survives (flattening a TP-sharded matrix into
+    a cross-leaf concat replicates it — the EF-residual memory finding in
+    EXPERIMENTS.md §Perf pair 3).
+
+    Returns (bucket_defs, pack, unpack) where bucket_defs is a list of lists
+    of (leaf_index, size); buckets follow backward-pass order (last layer
+    first) like WFBP — leaves are reversed so the first bucket to "arrive"
+    holds the deepest layers.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    order = list(range(len(leaves)))[::-1]
+    buckets, cur, cur_bytes = [], [], 0
+    for i in order:
+        sz = int(np.prod(leaves[i].shape))
+        if cur and (bucket_bytes <= 0 or cur_bytes + sz * 4 > bucket_bytes):
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append((i, sz))
+        cur_bytes += sz * 4
+    if cur:
+        buckets.append(cur)
+
+    def pack(gs):
+        ls = jax.tree.leaves(gs)
+        return [jnp.concatenate([ls[i].reshape(-1).astype(jnp.float32)
+                                 for i, _ in b]) for b in buckets]
+
+    def unpack(bufs):
+        ls = jax.tree.leaves(grads)
+        out = [None] * len(ls)
+        for buf, b in zip(bufs, buckets):
+            off = 0
+            for i, sz in b:
+                out[i] = buf[off:off + sz].reshape(ls[i].shape).astype(ls[i].dtype)
+                off += sz
+        return jax.tree.unflatten(treedef, out)
+
+    return buckets, pack, unpack
+
+
+# ---------------------------------------------------------------------------
+# The synchronizer
+# ---------------------------------------------------------------------------
+
+class GradientSynchronizer:
+    def __init__(self, cfg: SyncConfig, axes: Sequence[str]):
+        self.cfg = cfg
+        self.axes = tuple(axes)
+        self.comp = cfg.make_compressor()
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, grads) -> Dict[str, Any]:
+        state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        if self._uses_ef():
+            if self.cfg.compressor == "powersgd":
+                state["error"] = jax.tree.map(
+                    lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+                state["q"] = jax.tree.map(self._init_q, grads)
+            elif self.cfg.bucket_bytes <= 0:
+                # per-leaf EF in the leaf's natural shape: the residual
+                # inherits the leaf's tensor-parallel sharding instead of
+                # being replicated by a flat concat (§Perf pair-3 finding)
+                state["error"] = jax.tree.map(
+                    lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+            else:
+                _, pack, _ = bucketize(grads, self.cfg.bucket_bytes)
+                state["error"] = [jnp.zeros_like(b) for b in pack(grads)]
+        return state
+
+    def _uses_ef(self):
+        return (self.cfg.error_feedback and self.cfg.compressor != "none")
+
+    def _init_q(self, g):
+        if g.ndim < 2 or g.size < DENSE_SMALL:
+            return jnp.zeros((0,), jnp.float32)
+        rank = dict(self.cfg.compressor_args).get("rank", 4)
+        n, d = g.shape[0], int(np.prod(g.shape[1:]))
+        r = min(rank, n, d)
+        return jax.random.normal(jax.random.PRNGKey(g.ndim * 7919 + d),
+                                 (d, r), jnp.float32)
+
+    # -- wire statistics (static) ---------------------------------------------
+
+    def payload_bits(self, grads) -> int:
+        """Bits leaving one rank per step (the survey's comparison metric)."""
+        if self.cfg.compressor == "powersgd":
+            total = 0
+            for g in jax.tree.leaves(grads):
+                total += self.comp.payload_bits(g.shape)
+            return total
+        bucket_defs, pack, _ = bucketize(grads, self.cfg.bucket_bytes)
+        return sum(self.comp.payload_bits((sum(sz for _, sz in b),))
+                   for b in bucket_defs)
+
+    # -- sync ------------------------------------------------------------------
+
+    def __call__(self, grads, state, rng):
+        """Returns (synced_grads, new_state). Must run with ``self.axes``
+        manual (inside shard_map) — or on a single device where the axes
+        have size 1 (degenerate, for unit tests)."""
+        cfg = self.cfg
+        world = 1
+        for ax in self.axes:
+            world *= jax.lax.axis_size(ax)
+        denom = float(world) if cfg.mean else 1.0
+
+        if cfg.compressor == "none":
+            synced = jax.tree.map(
+                lambda g: allreduce(g.astype(jnp.float32), cfg.algo, self.axes) / denom,
+                grads)
+            return synced, {**state, "step": state["step"] + 1}
+
+        if cfg.compressor == "powersgd":
+            return self._sync_powersgd(grads, state, denom)
+
+        if cfg.bucket_bytes <= 0:
+            return self._sync_per_leaf(grads, state, rng, denom)
+        return self._sync_bucketed(grads, state, rng, denom)
+
+    # Per-leaf (no packing): leaves keep their shape and TP sharding.
+    def _sync_per_leaf(self, grads, state, rng, denom):
+        cfg = self.cfg
+        leaves, treedef = jax.tree.flatten(grads)
+        errors = (jax.tree.leaves(state["error"]) if self._uses_ef()
+                  else [None] * len(leaves))
+        rngs = jax.random.split(rng, len(leaves))
+        outs, new_errors = [], []
+        for g, e, r in zip(leaves, errors, rngs):
+            gf = g.astype(jnp.float32)
+            corrected = gf + cfg.ef_decay * e if self._uses_ef() else gf
+            payload, meta = self.comp.compress(corrected, r)
+            g_hat = self.comp.decompress(payload, meta)
+            new_errors.append(corrected - g_hat if self._uses_ef() else None)
+            if self.comp.aggregatable:
+                synced = allreduce(g_hat, cfg.algo, self.axes) / denom
+            else:
+                synced = self._gather_mean(payload, meta, g_hat, denom)
+            outs.append(synced)
+        new_state = {"step": state["step"] + 1}
+        if self._uses_ef():
+            new_state["error"] = jax.tree.unflatten(treedef, new_errors)
+        return jax.tree.unflatten(treedef, outs), new_state
+
+    # PowerSGD: allreduce the (P, Q) factors directly (aggregatable).
+    def _sync_powersgd(self, grads, state, denom):
+        cfg = self.cfg
+        leaves, treedef = jax.tree.flatten(grads)
+        errs, _ = jax.tree.flatten(state["error"])
+        qs = jax.tree.leaves(state["q"])
+        out, new_e, new_q = [], [], []
+        for g, e, q in zip(leaves, errs, qs):
+            gf = g.astype(jnp.float32)
+            if q.size == 0:  # small leaf: dense allreduce
+                synced = allreduce(gf, cfg.algo, self.axes) / denom
+                out.append(synced.astype(g.dtype))
+                new_e.append(e)
+                new_q.append(q)
+                continue
+            corrected = gf + cfg.ef_decay * e
+            (p_f, q_f), (shape, _) = self.comp.compress(corrected, q_prev=q)
+            p_f = allreduce(p_f, cfg.algo, self.axes) / denom
+            q_f = allreduce(q_f, cfg.algo, self.axes) / denom
+            approx = self.comp.decompress((p_f, q_f), (shape, None))
+            new_e.append(corrected - approx)
+            new_q.append(q_f)
+            out.append(approx.astype(g.dtype))
+        return (jax.tree.unflatten(treedef, out),
+                {"step": state["step"] + 1,
+                 "error": jax.tree.unflatten(treedef, new_e),
+                 "q": jax.tree.unflatten(treedef, new_q)})
+
+    # Quantizers / sparsifiers: bucket, EF, compress, all-gather, average.
+    def _sync_bucketed(self, grads, state, rng, denom):
+        cfg = self.cfg
+        _, pack, unpack = bucketize(grads, cfg.bucket_bytes)
+        bufs = pack(grads)
+        errors = state.get("error", [jnp.zeros_like(b) for b in bufs])
+        rngs = jax.random.split(rng, len(bufs))
+        synced_bufs, new_errors = [], []
+        for buf, e, r in zip(bufs, errors, rngs):
+            corrected = buf + cfg.ef_decay * e if self._uses_ef() else buf
+            payload, meta = self.comp.compress(corrected, r)
+            g_hat = self.comp.decompress(payload, meta)
+            new_errors.append(corrected - g_hat if self._uses_ef() else e)
+            if self.comp.aggregatable:
+                synced = allreduce(g_hat, cfg.algo, self.axes) / denom
+            else:
+                synced = self._gather_mean(payload, meta, g_hat, denom)
+            synced_bufs.append(synced)
+        new_state = {"step": state["step"] + 1}
+        if self._uses_ef():
+            new_state["error"] = new_errors
+        return unpack(synced_bufs), new_state
+
+    def _gather_mean(self, payload, meta, g_hat, denom):
+        """All-gather the compact payloads over the data axes; every rank
+        decompresses and averages (1-bit SGD / DGC wire pattern).  Payload
+        pytrees are gathered leaf-wise so the wire carries int8/indices,
+        not dense f32.  Static metadata (e.g. shapes) passes through."""
+        def is_arr(x):
+            return isinstance(x, (jax.Array, jax.core.Tracer))
+
+        def gather(x):
+            if not is_arr(x):
+                return x
+            orig = x.shape
+            for ax in self.axes:
+                x = jax.lax.all_gather(x, ax)
+            return x.reshape((-1,) + orig)
+
+        def index(x, i):
+            return x[i] if is_arr(x) else x
+
+        gathered_payload = jax.tree.map(gather, payload)
+        gathered_meta = jax.tree.map(gather, meta) if meta is not None else None
+        world = 1
+        for ax in self.axes:
+            world *= jax.lax.axis_size(ax)
+
+        def one(i):
+            pl = jax.tree.map(lambda x: index(x, i), gathered_payload)
+            mt = (jax.tree.map(lambda x: index(x, i), gathered_meta)
+                  if gathered_meta is not None else None)
+            return self.comp.decompress(pl, mt)
+
+        total = jax.lax.fori_loop(
+            0, world, lambda i, acc: acc + one(i),
+            jnp.zeros(g_hat.shape, jnp.float32))
+        return total / denom

@@ -1,0 +1,70 @@
+"""Periodic communication (survey §3.1.2): local SGD / model averaging.
+
+Workers run ``tau`` purely-local optimizer steps, then average model
+parameters over the data axes (K-AVG / PR-SGD / Local SGD; tau=1 is vanilla
+parallel SGD, tau=T is one-shot averaging).  ``post_local`` delays the first
+local phase (Stich's post-local SGD: synchronize every step during warmup).
+
+The trainer holds two compiled programs — ``local_step`` (no collective) and
+``average_params`` — and alternates them; the communication-rounds count is
+exactly T/tau, the quantity in the survey's Table 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import allreduce
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSGDConfig:
+    period: int = 1          # tau; 1 = vanilla parallel SGD
+    post_local_after: int = 0  # sync every step for the first N steps
+    algo: str = "psum"
+
+
+@dataclasses.dataclass(frozen=True)
+class AsymmetricPushPullConfig:
+    """Dean et al. 2012 (survey §3.1.2): workers PUSH gradients every
+    ``n_push`` steps and FETCH parameters every ``n_fetch`` steps, decoupling
+    the two directions of worker-server traffic."""
+    n_push: int = 1
+    n_fetch: int = 1
+
+    def should_push(self, step: int) -> bool:
+        return (step + 1) % self.n_push == 0
+
+    def should_fetch(self, step: int) -> bool:
+        return (step + 1) % self.n_fetch == 0
+
+    def rounds(self, total_steps: int) -> dict:
+        return {"push": sum(self.should_push(t) for t in range(total_steps)),
+                "fetch": sum(self.should_fetch(t) for t in range(total_steps))}
+
+
+def average_params(params, axes: Sequence[str], algo: str = "psum"):
+    """Model averaging collective (runs inside shard_map over ``axes``)."""
+    world = 1
+    for ax in axes:
+        world *= jax.lax.axis_size(ax)
+
+    def avg(p):
+        return (allreduce(p.astype(jnp.float32), algo, tuple(axes))
+                / world).astype(p.dtype)
+
+    return jax.tree.map(avg, params)
+
+
+def should_sync(step: int, cfg: LocalSGDConfig) -> bool:
+    """Python-side schedule decision (the trainer alternates compiled fns)."""
+    if step < cfg.post_local_after:
+        return True
+    return (step + 1) % cfg.period == 0
+
+
+def communication_rounds(total_steps: int, cfg: LocalSGDConfig) -> int:
+    return sum(1 for t in range(total_steps) if should_sync(t, cfg))

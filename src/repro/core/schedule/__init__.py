@@ -1,0 +1,4 @@
+from repro.core.schedule.perf_model import (  # noqa: F401
+    LayerProfile, comm_time, iteration_time_fifo, iteration_time_wfbp,
+    iteration_time_mg_wfbp, iteration_time_p3, iteration_time_tic,
+    iteration_time_tac, wfbp_case)

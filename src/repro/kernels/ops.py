@@ -1,0 +1,45 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container,
+unit tests) they execute in interpret mode, which runs the same kernel body
+and BlockSpec pipeline in Python — the correctness contract the test suite
+enforces against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize_ef import dequantize, quantize_ef_pallas
+from repro.kernels.topk_mask import topk_mask_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "q_blk", "kv_blk"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, q_blk: int = 128, kv_blk: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, q_blk=q_blk, kv_blk=kv_blk,
+                                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "tile"))
+def quantize_ef(g, e, *, decay: float = 1.0, tile: int = 8 * 128):
+    return quantize_ef_pallas(g, e, decay=decay, tile=tile,
+                              interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("ratio", "tile", "iters"))
+def topk_mask(x, *, ratio: float = 0.01, tile: int = 8 * 128, iters: int = 16):
+    return topk_mask_pallas(x, ratio=ratio, tile=tile, iters=iters,
+                            interpret=not _on_tpu())
+
+
+__all__ = ["flash_attention", "quantize_ef", "topk_mask", "dequantize"]

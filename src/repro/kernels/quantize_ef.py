@@ -1,0 +1,66 @@
+"""Fused error-feedback + int8 quantization Pallas kernel (survey §3.2.1).
+
+One HBM->VMEM pass per (8·128-aligned) tile computes
+
+    corrected = g + e                      (error feedback, Eq. 2)
+    scale     = max|corrected| per tile
+    q         = round(corrected / scale · 127)  -> int8 payload
+    e_new     = corrected - q · scale / 127     (residual)
+
+The GPU formulation is three kernels (EF add, max-reduce, quantize) with
+three HBM round-trips; on TPU we tile so each block's scale is computed in
+VMEM and everything is written once (DESIGN.md §5).  Per-TILE scales (vs
+per-tensor) are the TPU-friendly choice and also tighten the quantization
+error; the wire format is (int8[tile], f32 scale per tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE = 8 * 128  # VPU-aligned flat tile
+
+
+def _kernel(g_ref, e_ref, q_ref, e_new_ref, scale_ref, *, decay: float):
+    g = g_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    corrected = g + decay * e
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-30)
+    q = jnp.clip(jnp.round(corrected / scale * 127.0), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    e_new_ref[...] = corrected - q * (scale / 127.0)
+    scale_ref[0] = scale
+
+
+def quantize_ef_pallas(g, e, *, decay: float = 1.0, tile: int = TILE,
+                       interpret: bool = True):
+    """g, e: flat (n,) arrays (pad to a tile multiple before calling).
+    Returns (q int8 (n,), e_new f32 (n,), scales f32 (n/tile,))."""
+    n = g.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    kernel = functools.partial(_kernel, decay=decay)
+    q, e_new, scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n // tile,), jnp.float32)],
+        interpret=interpret,
+    )(g, e)
+    return q, e_new, scales
+
+
+def dequantize(q, scales, tile: int = TILE):
+    n = q.shape[0]
+    s = jnp.repeat(scales, tile)[:n]
+    return q.astype(jnp.float32) * (s / 127.0)

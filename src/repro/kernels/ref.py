@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """Naive O(T^2) attention; q: (B,T,H,hd), k/v: (B,S,KV,hd)."""
+    from repro.models.attention import attention_reference
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+
+
+def quantize_ef_ref(g, e, *, decay: float = 1.0, tile: int = 8 * 128):
+    """Per-tile EF + int8 quantization oracle. g, e: flat (n,)."""
+    n = g.shape[0]
+    corrected = (g.astype(jnp.float32) + decay * e.astype(jnp.float32))
+    blocks = corrected.reshape(n // tile, tile)
+    scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-30)
+    q = jnp.clip(jnp.round(blocks / scales[:, None] * 127.0), -127, 127)
+    e_new = blocks - q * (scales[:, None] / 127.0)
+    return (q.reshape(n).astype(jnp.int8), e_new.reshape(n), scales)
+
+
+def topk_mask_ref(x, *, ratio: float = 0.01, tile: int = 8 * 128):
+    """EXACT per-tile top-k oracle (the kernel's bisection approximates
+    this; tests bound the difference)."""
+    n = x.shape[0]
+    k = max(1, int(tile * ratio))
+    blocks = x.reshape(n // tile, tile)
+
+    def one(b):
+        thresh = jnp.sort(jnp.abs(b))[-k]
+        return jnp.where(jnp.abs(b) >= thresh, b, 0)
+
+    return jax.vmap(one)(blocks).reshape(n)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import/init: the dry-run builds the production
+# 16x16 (and 2x16x16 multi-pod) mesh out of placeholder host devices.
+
+DOC = """Multi-pod dry-run (deliverable e): for every (architecture x input shape
+x mesh), jit the step function with production shardings, ``.lower()``,
+``.compile()``, and record memory analysis, cost analysis, and the parsed
+HLO roofline inputs as JSON artifacts under artifacts/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse  # noqa: E402
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, SHAPES, applicable_shapes, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models import Model
+from repro.optim import make_optimizer
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mem_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+        return {k: int(getattr(m, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes") if hasattr(m, k)}
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+MICROBATCHES = 4  # gradient accumulation for train shapes (memory budget)
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool = False,
+               save_hlo: bool = False, variant: str = "baseline",
+               microbatches: int = MICROBATCHES):
+    """Lower + compile one (arch, shape, mesh) and return the record."""
+    cfg = get_config(arch)
+    if variant == "chunkwise":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, mlstm_parallel=True)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh.devices.size
+    from repro.models.sharding_ctx import set_mesh_ctx
+    set_mesh_ctx(mesh, ("pod", "data") if multi_pod else ("data",))
+
+    t0 = time.time()
+    params = model.abstract_params()
+    phase_rules = "train" if shape.phase == "train" else "serve"
+    if variant == "zero1" and shape.phase == "train":
+        phase_rules = "serve"   # ZeRO-1: params replicated over data (TP only)
+    pspec = model.partition_specs(phase_rules, multi_pod=multi_pod)
+    in_specs = model.input_specs(shape)
+    in_pspec = model.input_partition_specs(shape, multi_pod=multi_pod)
+
+    if shape.phase == "train" and variant.startswith("comm_"):
+        # the survey's §3.2+§4.1 technique at production scale: shard_map
+        # manual over the data axes, compressed payload + explicit ring
+        from repro.core import SyncConfig
+        from repro.launch.steps import make_comm_optimized_train_step
+        compressor = variant.split("_", 1)[1]        # comm_int8, comm_sign...
+        opt = make_optimizer("adam", lr=1e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        pspec = model.partition_specs("serve", multi_pod=multi_pod)
+        ospec = {k: pspec for k in opt_state}
+        axes = ("pod", "data") if multi_pod else ("data",)
+        step_fn, sync, init_sync_state = make_comm_optimized_train_step(
+            model, opt,
+            SyncConfig(compressor=compressor, algo="ring", bucket_bytes=0),
+            mesh, axes)
+        sync_state = jax.eval_shape(init_sync_state, params)
+        sspec = jax.tree.map(lambda s: NamedSharding(mesh, P(axes)), sync_state)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, pspec), _named(mesh, ospec), sspec,
+                          _named(mesh, in_pspec), NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(0, 1, 2))
+        args = (params, opt_state, sync_state, in_specs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    elif shape.phase == "train":
+        opt = make_optimizer("adam", lr=1e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        # optimizer state mirrors params, except ZeRO-1 which shards it over
+        # the data axes too (the ZeRO-1 memory trade)
+        ostate_rules = model.partition_specs("train", multi_pod=multi_pod) \
+            if variant == "zero1" else pspec
+        ospec = {k: ostate_rules for k in opt_state}
+        step_fn = make_train_step(model, opt, microbatches=microbatches)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                          _named(mesh, in_pspec), NamedSharding(mesh, P())),
+            out_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+        args = (params, opt_state, in_specs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.phase == "prefill":
+        step_fn = make_prefill_step(model)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, pspec), _named(mesh, in_pspec)))
+        args = (params, in_specs)
+    else:  # decode
+        step_fn = make_decode_step(
+            model,
+            mla_absorb=variant in ("mla_absorb", "optimized"),
+            moe_dispatch=variant in ("moe_dispatch", "optimized"))
+        cache_spec = in_pspec["cache"]
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, pspec),
+                          _named(mesh, in_pspec["tokens"]),
+                          _named(mesh, cache_spec),
+                          NamedSharding(mesh, P())),
+            out_shardings=(None, _named(mesh, cache_spec)),
+            donate_argnums=(2,))
+        args = (params, in_specs["tokens"], in_specs["cache"], in_specs["pos"])
+
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    txt = compiled.as_text()
+    stats = hlo_analysis.analyze(txt, total_devices=ndev)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": ndev,
+        "phase": shape.phase,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": _mem_dict(compiled),
+        "cost_analysis": _cost_dict(compiled),
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "memory_bytes_per_device": stats.memory_bytes,
+            "collective_operand_bytes": stats.collective_operand_bytes,
+            "collective_wire_bytes_per_device": stats.collective_wire_bytes,
+            "collective_counts": stats.collective_counts,
+            "num_while_loops": len(stats.while_trip_counts),
+            "while_trip_counts_top": sorted(stats.while_trip_counts)[-8:],
+        },
+        "hlo_chars": len(txt),
+    }
+    if save_hlo:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        with open(os.path.join(
+                ARTIFACTS, f"{arch}_{shape_name}_{rec['mesh']}_{variant}.hlo"), "w") as f:
+            f.write(txt)
+    return rec
+
+
+def save_record(rec):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}_{rec['variant']}.json"
+    with open(os.path.join(ARTIFACTS, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=MICROBATCHES)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ALL_ARCHS:
+            for s in applicable_shapes(get_config(a)):
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in pairs:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        fname = f"{arch}_{shape}_{mesh_name}_{args.variant}.json"
+        if args.skip_existing and os.path.exists(os.path.join(ARTIFACTS, fname)):
+            print(f"[skip] {fname}")
+            continue
+        try:
+            rec = lower_pair(arch, shape, multi_pod=args.multi_pod,
+                             save_hlo=args.save_hlo, variant=args.variant,
+                             microbatches=args.microbatches)
+            save_record(rec)
+            mem = rec["memory_analysis"]
+            print(f"[ok] {arch} {shape} {mesh_name}: compile={rec['compile_s']}s "
+                  f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"dotF={rec['hlo']['dot_flops_per_device']:.3e} "
+                  f"wireB={rec['hlo']['collective_wire_bytes_per_device']:.3e}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {arch} {shape} {mesh_name}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

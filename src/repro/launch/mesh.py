@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Kept as FUNCTIONS so importing this module never touches JAX device state —
+``dryrun.py`` must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+CHIPS_PER_POD = 256
+
+# hardware constants (roofline):
+PEAK_FLOPS_BF16 = 197e12          # per chip, bf16
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

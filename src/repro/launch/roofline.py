@@ -1,0 +1,164 @@
+"""Roofline analysis (deliverable g): read the dry-run JSON artifacts and
+derive the three per-step roofline terms per (arch, shape, mesh):
+
+    compute    = dot_FLOPs_per_chip   / 197e12        (bf16 peak)
+    memory     = HLO_bytes_per_chip   / 819e9         (HBM bandwidth)
+    collective = wire_bytes_per_chip  / 50e9          (ICI per-link)
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(prefill/decode), the useful-compute ratio, the dominant term, and a note on
+what would move it.  Emits the EXPERIMENTS.md §Roofline markdown table.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import ARTIFACTS
+from repro.launch.mesh import CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def count_active_params(cfg) -> int:
+    """Parameters touched per token: routed experts scaled by top_k/E."""
+    import jax
+    from repro.models.layers import ParamDesc
+    from repro.models.model import Model
+    total = 0
+    for leaf in jax.tree.leaves(Model(cfg).param_desc(),
+                                is_leaf=lambda x: isinstance(x, ParamDesc)):
+        n = int(np.prod(leaf.shape))
+        if "experts" in (leaf.axes or ()):
+            n = int(n * cfg.top_k / max(cfg.num_experts, 1))
+        total += n
+    return total
+
+
+def model_flops_per_device(cfg, shape, devices: int) -> float:
+    n_active = count_active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.phase in
+                                   ("train", "prefill") else 1)
+    mult = 6.0 if shape.phase == "train" else 2.0
+    return mult * n_active * tokens / devices
+
+
+def analytic_memory_bytes(cfg, shape, devices: int) -> float:
+    """TPU-semantics HBM traffic model (fusion-aware napkin numbers; the
+    HLO-parsed byte counts in the artifacts are upper bounds at CPU fusion
+    granularity and overcount what a TPU keeps in VMEM — flash-attention
+    intermediates above all).
+
+      train:   params fwd+bwd reads (bf16) + grads f32 r/w + adam m,v f32
+               r/w + param update w  ≈ 30 B/param(local)
+               + remat-doubled activation traffic: 2 · L · tok_local · d
+                 · 2 B · C  (C ≈ 12 block-sized tensor r/w per layer)
+               + 4 gradient-accumulation microbatch re-reads of params
+      prefill: params read + activation writes (single pass)
+      decode:  params read + the whole KV cache / recurrent state read once
+    """
+    import jax
+    from repro.models.model import Model
+    n_params = cfg.num_params()
+    tp = 16
+    tokens_local = shape.global_batch * shape.seq_len / devices
+    L, d = cfg.num_layers, cfg.d_model
+    if shape.phase == "train":
+        p_local = n_params / devices           # FSDP over all axes
+        act = 2 * L * tokens_local * d * 2 * 12
+        return 30 * p_local + 4 * 2 * p_local + act
+    p_local = n_params * 2 / tp               # bf16, TP-only at serve time
+    if shape.phase == "prefill":
+        act = L * tokens_local * d * 2 * 12
+        return p_local + act
+    # decode: read the cache once per step
+    model = Model(cfg)
+    cache = model.init_cache(shape.global_batch, shape.seq_len,
+                             src_len=shape.seq_len if cfg.is_encoder_decoder else 0)
+    cache_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(cache))
+    shard = devices if shape.global_batch > 1 else tp
+    return p_local + cache_bytes / shard
+
+
+def terms(rec, cfg=None, shape=None) -> dict:
+    h = rec["hlo"]
+    compute = h["dot_flops_per_device"] / PEAK_FLOPS_BF16
+    if cfg is not None and shape is not None:
+        memory = analytic_memory_bytes(cfg, shape, rec["devices"]) / HBM_BW
+    else:
+        memory = h.get("memory_bytes_per_device", 0.0) / HBM_BW
+    coll = h["collective_wire_bytes_per_device"] / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda t: t[1])[0]
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom,
+            "hlo_memory_s_upper": h.get("memory_bytes_per_device", 0.0) / HBM_BW}
+
+
+NOTES = {
+    "compute": "compute-bound: reduce rectangle-waste in flash attention "
+               "(triangular schedule) or shrink redundant remat recompute",
+    "memory": "memory-bound: raise arithmetic intensity (fuse scans / larger "
+              "chunk blocks, bf16 stacks, absorbed projections)",
+    "collective": "collective-bound: compress the payload (§3.2), change the "
+                  "algorithm (ring/hierarchical §4.1), or reshard to cut "
+                  "all-gather volume",
+}
+
+
+def load_records(mesh: str, variant: str = "baseline"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*_{mesh}_{variant}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_TF/chip | useful ratio | HBM GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        t = terms(rec, cfg, shape)
+        mf = model_flops_per_device(cfg, shape, rec["devices"])
+        hf = rec["hlo"]["dot_flops_per_device"]
+        ratio = mf / hf if hf else float("nan")
+        mem = rec["memory_analysis"]
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 2**30
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['dominant']} | "
+            f"{mf/1e12:.2f} | {ratio:.2f} | {hbm:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    recs = load_records(args.mesh, args.variant)
+    if not recs:
+        raise SystemExit(f"no dry-run artifacts for mesh {args.mesh} in {ARTIFACTS}")
+    print(render_table(recs))
+    print()
+    for rec in recs:
+        t = terms(rec, get_config(rec["arch"]), SHAPES[rec["shape"]])
+        print(f"- {rec['arch']} x {rec['shape']}: dominant={t['dominant']} -> "
+              f"{NOTES[t['dominant']]}")
+
+
+if __name__ == "__main__":
+    main()

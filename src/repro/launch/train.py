@@ -1,0 +1,149 @@
+"""Training launcher.
+
+Modes (the survey's taxonomy, selectable from the CLI):
+  * --sync vanilla                 BSP data-parallel, dense psum (baseline)
+  * --sync comm                    GradientSynchronizer: --compressor/--algo/
+                                   --bucket-mb/--no-error-feedback
+  * --local-sgd TAU                periodic model averaging (+ --post-local N)
+  * --lag THRESH                   lazily aggregated gradients (host dispatch)
+
+Runs on whatever devices exist (CPU: 1-device mesh; the same code drives the
+production mesh).  Example (the e2e driver, deliverable b):
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+        --steps 200 --batch 8 --seq 128 --sync comm --compressor topk --algo ring
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save as save_ckpt
+from repro.configs import ALL_ARCHS, get_config, reduced
+from repro.core import (GradientSynchronizer, LAGConfig, LocalSGDConfig,
+                        SyncConfig, average_params, init_lag_state,
+                        lag_trigger, should_sync)
+from repro.data import DataConfig, SyntheticPipeline
+from repro.launch.mesh import data_axes, make_host_mesh
+from repro.launch.steps import make_comm_optimized_train_step, make_train_step
+from repro.models import Model
+from repro.models.sharding_ctx import set_mesh_ctx
+from repro.optim import make_optimizer, warmup_cosine
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = Model(cfg)
+    n_dev = len(jax.devices())
+    dp = args.data_parallel or n_dev
+    mesh = make_host_mesh(data=dp, model=n_dev // dp)
+    set_mesh_ctx(mesh, ("data",))
+    lr = warmup_cosine(args.lr, args.warmup, args.steps)
+    opt = make_optimizer(args.optimizer, lr=lr)
+    return cfg, model, mesh, opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, default="xlstm-125m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--optimizer", default="adam",
+                    choices=["sgd", "adam", "lars", "lamb"])
+    ap.add_argument("--data-parallel", type=int, default=0)
+    ap.add_argument("--sync", default="vanilla", choices=["vanilla", "comm"])
+    ap.add_argument("--compressor", default="none")
+    ap.add_argument("--algo", default="psum")
+    ap.add_argument("--bucket-mb", type=float, default=32.0)
+    ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--local-sgd", type=int, default=0, metavar="TAU")
+    ap.add_argument("--post-local", type=int, default=0)
+    ap.add_argument("--lag", type=float, default=0.0, metavar="THRESH")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, model, mesh, opt = build(args)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    opt_state = opt.init(params)
+    step_i = jnp.zeros((), jnp.int32)
+
+    data = SyntheticPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        embedding_dim=cfg.d_model if cfg.embedding_inputs else 0))
+
+    axes = data_axes(mesh)
+    sync_cfg = SyncConfig(
+        compressor=args.compressor, algo=args.algo,
+        error_feedback=not args.no_error_feedback,
+        bucket_bytes=int(args.bucket_mb * 2**20))
+
+    if args.sync == "comm":
+        step_fn, synchronizer, init_sync_state = make_comm_optimized_train_step(
+            model, opt, sync_cfg, mesh, axes)
+        sync_state = init_sync_state(params)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    else:
+        base = make_train_step(model, opt)
+        jit_step = jax.jit(base, donate_argnums=(0, 1))
+        sync_state = None
+
+    # local-SGD variant: an extra compiled program for the averaging round
+    avg_fn = None
+    if args.local_sgd > 1:
+        local_cfg = LocalSGDConfig(period=args.local_sgd,
+                                   post_local_after=args.post_local)
+
+        def avg(params):
+            f = jax.shard_map(lambda p: average_params(p, axes),
+                              mesh=mesh, in_specs=P(), out_specs=P(),
+                              axis_names=set(axes), check_vma=False)
+            return f(params)
+        avg_fn = jax.jit(avg)
+
+    lag_state = init_lag_state(params) if args.lag > 0 else None
+    losses, t0, rounds = [], time.time(), 0
+    for step in range(args.steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(step))
+        step_i = jnp.asarray(step, jnp.int32)
+        if args.sync == "comm":
+            params, opt_state, sync_state, loss = jit_step(
+                params, opt_state, sync_state, batch, step_i,
+                jax.random.fold_in(rng, step))
+            rounds += 1
+        else:
+            params, opt_state, loss = jit_step(params, opt_state, batch, step_i)
+            rounds += 1
+        if avg_fn is not None and should_sync(step, local_cfg):
+            params = avg_fn(params)
+        losses.append(float(loss))
+        if step % args.log_every == 0:
+            dt = (time.time() - t0) / max(step, 1)
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"({dt*1e3:.0f} ms/step, comm rounds {rounds})", flush=True)
+
+    if args.checkpoint:
+        save_ckpt(args.checkpoint, {"params": params, "opt": opt_state},
+                  step=args.steps)
+        print("checkpoint written:", args.checkpoint)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
+          f"steps/s {args.steps/(time.time()-t0):.2f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Shared model substrate: parameter descriptors, norms, RoPE, MLPs, embeddings.
+
+Parameters are described abstractly (shape + logical axes + init kind) by the
+module ``*_desc`` functions, then materialized once by ``materialize`` (values)
+and ``partition_specs`` (sharding).  This keeps the sharding layout in one
+place and lets ``input_specs``-style dry-runs build ShapeDtypeStructs without
+allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Parameter descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    """Abstract parameter: shape, logical axis names, and init kind."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | small
+    scale: Optional[float] = None     # overrides the default fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_desc(tree, n: int):
+    """Prepend a stacked 'layers' dim of size n to every descriptor (for scan)."""
+    def f(d: ParamDesc) -> ParamDesc:
+        return ParamDesc((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamDesc))
+
+
+def _init_leaf(key, d: ParamDesc, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    scale = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+    if d.init == "small":
+        scale = 0.02
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def materialize(tree, key, dtype=jnp.float32):
+    """Create concrete parameter values for a descriptor tree."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamDesc))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree, dtype=jnp.float32):
+    """ShapeDtypeStructs for a descriptor tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree,
+        is_leaf=lambda x: isinstance(x, ParamDesc))
+
+
+def partition_specs(tree, rules: Dict[str, Any]):
+    """Map logical axes -> mesh axes via ``rules`` (a dict name -> mesh axis
+    or None).  Unknown names map to None (replicated).  When two dims of one
+    leaf resolve to the same mesh axis (e.g. an (experts, embed, ffn) MoE
+    weight with experts->model and ffn->model), only the first keeps it —
+    a mesh axis can shard at most one dim."""
+    def f(d: ParamDesc) -> P:
+        used = set()
+        out = []
+        for a in d.axes:
+            r = rules.get(a) if a is not None else None
+            flat = tuple(r) if isinstance(r, tuple) else (r,)
+            if r is not None and not (set(flat) & used):
+                used.update(flat)
+                out.append(r)
+            else:
+                out.append(None)
+        return P(*out)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamDesc))
+
+
+# Logical-axis -> mesh-axis rule sets.  'fsdp' rules additionally shard the
+# d_model ("embed") dim of every weight over the data axis (ZeRO-3 style) so
+# multi-10B-parameter configs + Adam state fit 16 GB/chip at train time.
+def sharding_rules(phase: str, multi_pod: bool = False) -> Dict[str, Any]:
+    data = ("pod", "data") if multi_pod else "data"
+    tp = "model"
+    if phase == "train":
+        return {"vocab": tp, "embed": data, "heads": tp, "kv": tp, "ffn": tp,
+                "experts": tp, "layers": None, "lora": None, "state": None,
+                "inner": tp}
+    # serving: params replicated over data, TP over model only
+    return {"vocab": tp, "embed": None, "heads": tp, "kv": tp, "ffn": tp,
+            "experts": tp, "layers": None, "lora": None, "state": None,
+            "inner": tp}
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_desc(d: int) -> Dict[str, ParamDesc]:
+    return {"scale": ParamDesc((d,), (None,), "zeros")}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    """RMSNorm with the scale stored as a zero-initialized delta, applied as
+    (1 + w) — the gemma convention, equivalent to ones-init standard RMSNorm.
+    Statistics in f32."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + params["scale"].astype(jnp.float32))
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    angles = angles[..., None, :]                              # (..., T, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_desc(d: int, d_ff: int) -> Dict[str, ParamDesc]:
+    return {
+        "wi_gate": ParamDesc((d, d_ff), ("embed", "ffn")),
+        "wi_up": ParamDesc((d, d_ff), ("embed", "ffn")),
+        "wo": ParamDesc((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x, activation: str = "swiglu"):
+    act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+    gate = act(x @ params["wi_gate"])
+    up = x @ params["wi_up"]
+    return (gate * up) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_desc(vocab: int, d: int) -> Dict[str, ParamDesc]:
+    return {"table": ParamDesc((vocab, d), ("vocab", "embed"), "small")}
+
+
+def embed(params, tokens, *, scale: bool, d: int):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d), x.dtype)
+    return x
+
+
+def unembed(params, x, *, softcap: Optional[float] = None):
+    logits = x @ params["table"].T
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def unembed_head_desc(vocab: int, d: int) -> Dict[str, ParamDesc]:
+    return {"table": ParamDesc((vocab, d), ("vocab", "embed"), "small")}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy in f32.  labels: int ids; mask optional."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

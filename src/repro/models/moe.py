@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with top-k routing, shared experts, capacity-based
+dispatch, and a switch-style load-balance auxiliary loss.
+
+Dispatch is the sort-free capacity scheme: each token's k choices are given a
+slot inside the chosen expert's capacity buffer via a cumulative-sum over the
+one-hot routing matrix; tokens overflowing capacity are dropped (standard
+practice, capacity_factor controls the drop rate).  With experts sharded over
+the ``model`` mesh axis the scatter/gather lower to all-to-all style
+collectives — the expert-parallel pattern the survey's §4 discusses.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDesc, mlp, mlp_desc
+from repro.models.sharding_ctx import constrain
+
+
+def moe_desc(cfg: ModelConfig) -> Dict[str, ParamDesc]:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    desc = {
+        "router": ParamDesc((d, E), ("embed", None), "small"),
+        "wi_gate": ParamDesc((E, d, ff), ("experts", "embed", "ffn")),
+        "wi_up": ParamDesc((E, d, ff), ("experts", "embed", "ffn")),
+        "wo": ParamDesc((E, ff, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.num_shared_experts:
+        desc["shared"] = mlp_desc(d, ff * cfg.num_shared_experts)
+    return desc
+
+
+def _route(cfg: ModelConfig, logits: jnp.ndarray):
+    """logits: (N, E) -> (weights (N,k), experts (N,k), aux_loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # switch-style load balance: E * sum_e f_e * p_e
+    E = logits.shape[-1]
+    one_hot = jax.nn.one_hot(experts[..., 0], E, dtype=jnp.float32)
+    f = one_hot.mean(0)
+    p = probs.mean(0)
+    aux = E * jnp.sum(f * p)
+    return weights, experts, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d) -> (out, aux_loss).
+
+    Tokens are grouped per data shard (per-group capacity — real
+    expert-parallel per-rank semantics).  The scatter/gather run under
+    ``vmap`` over the group dim, which makes G a scatter BATCH dimension the
+    SPMD partitioner can shard over the data axes; the expert einsums keep
+    explicit (G, E, cap, ·) shapes with G over 'b' and E over 'model' — the
+    expert-parallel all-to-all pattern of survey §4."""
+    from repro.models.sharding_ctx import num_batch_shards
+    B, T, d = x.shape
+    N = B * T
+    E, k = cfg.num_experts, cfg.top_k
+    cdt = x.dtype
+    G = num_batch_shards()
+    if N % G:
+        G = 1
+    ng = N // G
+    cap = int(max(1, ng * k / E * cfg.capacity_factor))
+
+    xf = constrain(x.reshape(N, d), ("b", None))
+    weights, experts, aux = _route(cfg, xf @ params["router"])
+
+    eg = constrain(experts.reshape(G, ng * k), ("b", None))
+    wg = weights.reshape(G, ng * k)
+    onehot = constrain(jax.nn.one_hot(eg, E, dtype=jnp.int32), ("b", None, None))
+    slot = (jnp.cumsum(onehot, axis=1) - 1) * onehot              # per-group
+    flat_slot = slot.sum(-1)
+    keep = flat_slot < cap
+    dest = jnp.where(keep, eg * cap + flat_slot, E * cap)         # (G, ng*k)
+
+    tok_idx = jnp.repeat(jnp.arange(ng), k)
+    xg = constrain(xf.reshape(G, ng, d), ("b", None, None))
+    src = constrain(jnp.take(xg, tok_idx, axis=1), ("b", None, None))
+
+    def scatter_one(s, idx):
+        return jnp.zeros((E * cap + 1, d), cdt).at[idx].set(s)[: E * cap]
+
+    buf = jax.vmap(scatter_one)(src, dest)                        # (G, E*cap, d)
+    buf = constrain(buf.reshape(G, E, cap, d), ("b", "m", None, None))
+
+    h_gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["wi_gate"]))
+    h_up = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"])
+    h_mid = constrain((h_gate * h_up).astype(cdt), ("b", "m", None, None))
+    out_buf = constrain(jnp.einsum("gecf,efd->gecd", h_mid, params["wo"]),
+                        ("b", "m", None, None))
+    out_flat = constrain(out_buf.reshape(G, E * cap, d), ("b", None, None))
+
+    def gather_one(flat, idx, kp):
+        g = jnp.take(flat, jnp.minimum(idx, E * cap - 1), axis=0)
+        return jnp.where(kp[:, None], g, 0.0)
+
+    gathered = jax.vmap(gather_one)(out_flat, dest, keep)         # (G, ng*k, d)
+    contrib = gathered * wg[..., None].astype(gathered.dtype)
+
+    def combine_one(c):
+        return jnp.zeros((ng, d), cdt).at[tok_idx].add(c)
+
+    out = constrain(jax.vmap(combine_one)(contrib), ("b", None, None))
+    out = out.reshape(N, d)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(params["shared"], xf, cfg.activation)
+    return out.reshape(B, T, d), aux
+
+
+def moe_decode_ffn(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    """Single-token path (B, 1, d): gather the k selected experts' weights per
+    token instead of capacity dispatch — decode batches are tiny so the
+    gather is cheap and drop-free."""
+    B, _, d = x.shape
+    xf = x.reshape(B, d)
+    weights, experts, _ = _route(cfg, xf @ params["router"])       # (B,k)
+    wg = params["wi_gate"][experts]                                # (B,k,d,ff)
+    wu = params["wi_up"][experts]
+    wo = params["wo"][experts]                                     # (B,k,ff,d)
+    h = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xf, wg)) * jnp.einsum(
+        "bd,bkdf->bkf", xf, wu)
+    out = jnp.einsum("bkf,bkfd->bkd", h, wo)
+    out = jnp.einsum("bkd,bk->bd", out, weights.astype(out.dtype))
+    if cfg.num_shared_experts:
+        out = out + mlp(params["shared"], xf, cfg.activation)
+    return out.reshape(B, 1, d)

@@ -1,0 +1,41 @@
+"""Chunked, remat-friendly time scans.
+
+A plain ``lax.scan`` over T steps saves every carry for the backward pass —
+for recurrences with large state (mLSTM's (B, H, dh, dh) matrix memory,
+Mamba's (B, d_inner, d_state)) that is O(T · state) and blows past HBM at
+T = 4k-32k.  ``chunked_scan`` reshapes time into (T/c) chunks, scans over
+chunks, and rematerializes within each chunk (``jax.checkpoint``), so the
+backward pass stores only T/c boundary states + one chunk of recompute —
+the TPU-native equivalent of the fused CUDA recurrence kernels
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step, init, xs, chunk: int, checkpoint_step: bool = True):
+    """Equivalent to ``jax.lax.scan(step, init, xs)`` with bounded backward
+    memory.  ``checkpoint_step`` additionally remats each step body so the
+    backward pass stores one CARRY per step (not every step residual) —
+    essential when the step computes large intermediates against a large
+    recurrent state.  All leading dims of xs leaves must equal T and be
+    divisible by ``chunk`` (callers pad if needed)."""
+    body = jax.checkpoint(step) if checkpoint_step else step
+    leaves = jax.tree.leaves(xs)
+    T = leaves[0].shape[0]
+    if chunk >= T or T % chunk != 0:
+        # non-divisible lengths (arbitrary serving prompts): plain scan —
+        # fine at the small sizes where this happens
+        return jax.lax.scan(body, init, xs)
+    nc = T // chunk
+    xs_c = jax.tree.map(lambda x: x.reshape((nc, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def inner(carry, xc):
+        return jax.lax.scan(body, carry, xc)
+
+    carry, ys_c = jax.lax.scan(inner, init, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape((T,) + y.shape[2:]), ys_c)
+    return carry, ys

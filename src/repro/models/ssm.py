@@ -1,0 +1,121 @@
+"""Mamba (selective SSM) block for the Jamba hybrid architecture.
+
+Training/prefill runs the selective scan as a sequential ``lax.scan`` over
+time (small HLO, exact).  Decode is the O(1) single-step state update.  The
+recurrent state (B, d_inner, d_state) is the layer's "cache".
+
+TPU note (DESIGN.md §5): the CUDA selective-scan kernel fuses the recurrence
+into shared memory; on TPU the same insight maps to keeping the (d_inner,
+d_state) state resident in VMEM across the time loop, which XLA does for a
+``lax.scan`` carry.  A chunked associative-scan variant is the documented
+perf alternative (trades memory for parallelism).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.scan_utils import chunked_scan
+from repro.models.layers import ParamDesc
+from repro.models.sharding_ctx import constrain, constrain_hard
+
+
+def mamba_desc(cfg: ModelConfig) -> Dict[str, ParamDesc]:
+    d, di, ds, dt = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank
+    return {
+        "in_proj": ParamDesc((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDesc((cfg.ssm_conv, di), (None, "inner"), "small"),
+        "conv_b": ParamDesc((di,), ("inner",), "zeros"),
+        "x_proj": ParamDesc((di, dt + 2 * ds), ("inner", None)),
+        "dt_proj_w": ParamDesc((dt, di), (None, "inner"), "small"),
+        "dt_proj_b": ParamDesc((di,), ("inner",), "ones"),
+        "A_log": ParamDesc((di, ds), ("inner", "state"), "small"),
+        "D": ParamDesc((di,), ("inner",), "ones"),
+        "out_proj": ParamDesc((di, d), ("inner", "embed")),
+    }
+
+
+def _conv1d_causal(params, x):
+    """Depthwise causal conv over time. x: (B, T, di)."""
+    K = params["conv_w"].shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(K))
+    return out + params["conv_b"]
+
+
+def _sel_params(params, cfg, x):
+    """x: (..., di) -> (dt (...,di), B (...,ds), C (...,ds))."""
+    ds, dtr = cfg.ssm_d_state, cfg.dt_rank
+    proj = x @ params["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj_w"] + params["dt_proj_b"])
+    return dt, Bc, Cc
+
+
+def mamba_forward(params, cfg: ModelConfig, x, return_state: bool = False):
+    """x: (B, T, d) -> (B, T, d) [, final recurrent state]."""
+    B, T, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_d_state
+    xz = x @ params["in_proj"]
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(_conv1d_causal(params, xin_raw))
+    dt, Bc, Cc = _sel_params(params, cfg, xin)          # (B,T,di),(B,T,ds),(B,T,ds)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (di, ds)
+
+    out_dtype = x.dtype
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                        # (B,di),(B,di),(B,ds),(B,ds)
+        x_t, dt_t, B_t, C_t = (t.astype(jnp.float32) for t in (x_t, dt_t, B_t, C_t))
+        dA = jnp.exp(dt_t[..., None] * A)                # (B,di,ds)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = h * dA + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y.astype(out_dtype)                    # keep the stacked ys small
+
+    h0 = constrain_hard(jnp.zeros((B, di, ds), jnp.float32), ("b", "m", None))
+    c3 = lambda a: constrain(a, (None, "b", "m"))
+    # stacks stay in compute dtype (bf16) in HBM; the step upcasts.
+    xs = (c3(xin.transpose(1, 0, 2)),
+          c3(dt.transpose(1, 0, 2)),
+          constrain(Bc.transpose(1, 0, 2), (None, "b", None)),
+          constrain(Cc.transpose(1, 0, 2), (None, "b", None)))
+    h_final, ys = chunked_scan(step, h0, xs, chunk=128)
+    y = constrain(ys, (None, "b", "m")).transpose(1, 0, 2).astype(x.dtype)
+    y = y + xin * params["D"]
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        tail = jnp.pad(xin_raw, ((0, 0), (max(0, K - 1 - T), 0), (0, 0)))[:, -(K - 1):, :]
+        return out, {"h": h_final, "conv": tail}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    di, ds, K = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_conv
+    return {"h": jax.ShapeDtypeStruct((batch, di, ds), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, K - 1, di), dtype)}
+
+
+def mamba_decode(params, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (B, 1, d); state: {'h','conv'}."""
+    B = x.shape[0]
+    xz = x[:, 0] @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xin[:, None, :]], axis=1)  # (B,K,di)
+    conv = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xin_c = jax.nn.silu(conv)
+    dt, Bc, Cc = _sel_params(params, cfg, xin_c)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)
+    dBx = (dt[..., None] * Bc[:, None, :] * xin_c[..., None]).astype(jnp.float32)
+    h = state["h"] * dA + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + xin_c * params["D"]
+    y = y * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:, :]}

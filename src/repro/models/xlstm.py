@@ -1,0 +1,304 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, exponential gating)
+and sLSTM (scalar memory with recurrent gate connections).
+
+Both recurrences use the paper's max-stabilizer (m_t) for the exponential
+gates and run as exact sequential ``lax.scan`` over time; decode is the O(1)
+single-step update on the carried state.  A chunkwise-parallel mLSTM (MXU
+matmuls over chunks) is the documented perf alternative — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.scan_utils import chunked_scan
+from repro.models.layers import ParamDesc, norm_desc, rmsnorm
+from repro.models.sharding_ctx import constrain, constrain_hard
+
+MLSTM_PF = 2          # mLSTM up-projection factor
+SLSTM_FF_PF = 4 / 3   # sLSTM post-block gated FFN factor
+
+
+def _heads(cfg: ModelConfig, d: int) -> Tuple[int, int]:
+    H = cfg.num_heads
+    return H, d // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_desc(cfg: ModelConfig) -> Dict[str, ParamDesc]:
+    d = cfg.d_model
+    di = MLSTM_PF * d
+    return {
+        "norm": norm_desc(d),
+        "up": ParamDesc((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDesc((cfg.ssm_conv, di), (None, "inner"), "small"),
+        "conv_b": ParamDesc((di,), ("inner",), "zeros"),
+        "wq": ParamDesc((di, di), ("inner", "inner")),
+        "wk": ParamDesc((di, di), ("inner", "inner")),
+        "wv": ParamDesc((di, di), ("inner", "inner")),
+        "w_if": ParamDesc((di, 2 * cfg.num_heads), ("inner", None), "small"),
+        "b_if": ParamDesc((2 * cfg.num_heads,), (None,), "zeros"),
+        "out_norm": norm_desc(di),
+        "down": ParamDesc((di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_pre(params, cfg, x):
+    di = MLSTM_PF * cfg.d_model
+    H, dh = _heads(cfg, di)
+    u = rmsnorm(params["norm"], x, eps=cfg.norm_eps) @ params["up"]
+    xm, z = jnp.split(u, 2, axis=-1)
+    return xm, z, H, dh
+
+
+def mlstm_forward(params, cfg: ModelConfig, x, return_state: bool = False):
+    """x: (B, T, d)."""
+    B, T, d = x.shape
+    xm, z, H, dh = _mlstm_pre(params, cfg, x)
+    K = params["conv_w"].shape[0]
+    padded = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(padded[:, i:i + T, :] * params["conv_w"][i] for i in range(K))
+    conv = jax.nn.silu(conv + params["conv_b"])
+
+    q = (conv @ params["wq"]).reshape(B, T, H, dh)
+    k = (conv @ params["wk"]).reshape(B, T, H, dh) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    v = (xm @ params["wv"]).reshape(B, T, H, dh)
+    gates = conv @ params["w_if"] + params["b_if"]          # (B, T, 2H)
+    log_i, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)                         # log sigmoid(f)
+
+    out_dtype = x.dtype
+
+    def step(carry, inp):
+        C, n, m = carry                                      # (B,H,dh,dh),(B,H,dh),(B,H)
+        q_t, k_t, v_t, li_t, lf_t = inp
+        q_t, k_t, v_t = (t.astype(jnp.float32) for t in (q_t, k_t, v_t))
+        m_new = jnp.maximum(lf_t + m, li_t)
+        i_p = jnp.exp(li_t - m_new)
+        f_p = jnp.exp(lf_t + m - m_new)
+        C = C * f_p[..., None, None] + i_p[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])
+        n = n * f_p[..., None] + i_p[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h.astype(out_dtype)
+
+    init = (constrain_hard(jnp.zeros((B, H, dh, dh), jnp.float32), ("b", None, None, None)),
+            constrain_hard(jnp.zeros((B, H, dh), jnp.float32), ("b", None, None)),
+            constrain_hard(jnp.full((B, H), -1e30, jnp.float32), ("b", None)))
+    if cfg.mlstm_parallel and T % cfg.mlstm_chunk == 0:
+        hs_btHd, final = mlstm_chunkwise(q, k, v, log_i, log_f, init,
+                                         chunk=cfg.mlstm_chunk)
+        h = hs_btHd.astype(out_dtype).reshape(B, T, H * dh)
+    else:
+        c4 = lambda a: constrain(a, (None, "b", None, None))
+        # qkv stacks stay bf16 in HBM (halves the scan-input footprint); the
+        # step body upcasts before touching the f32 matrix state.
+        xs = (c4(q.transpose(1, 0, 2, 3)),
+              c4(k.transpose(1, 0, 2, 3)),
+              c4(v.transpose(1, 0, 2, 3)),
+              constrain(log_i.transpose(1, 0, 2), (None, "b", None)),
+              constrain(log_f.transpose(1, 0, 2), (None, "b", None)))
+        final, hs = chunked_scan(step, init, xs, chunk=cfg.mlstm_chunk)
+        h = constrain(hs, (None, "b", None, None)).transpose(1, 0, 2, 3).reshape(B, T, H * dh)
+    h = rmsnorm(params["out_norm"], h, eps=cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down"]
+    if return_state:
+        C, n, m = final
+        K = params["conv_w"].shape[0]
+        tail = jnp.pad(xm, ((0, 0), (max(0, K - 1 - T), 0), (0, 0)))[:, -(K - 1):, :]
+        return out, {"C": C, "n": n, "m": m, "conv": tail}
+    return out
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, init, chunk: int):
+    """Chunkwise-PARALLEL mLSTM recurrence (the xLSTM appendix / GLA form).
+
+    Replaces the per-step scan with, per chunk of length c: one (c, c)
+    masked score matmul + one (c, dh) value matmul intra-chunk, plus an
+    inter-chunk contribution from the carried matrix state — MXU work
+    instead of 4096 sequential outer products, with exact exponential-gating
+    stabilization carried in ``m``.  Verified equivalent to the sequential
+    step in tests/test_xlstm_chunkwise.py.
+
+    q, k, v: (B, T, H, dh) (k pre-scaled by 1/sqrt(dh));
+    log_i, log_f: (B, T, H) f32.  Returns (hs (B, T, H, dh) f32, final
+    (C, n, m) state).
+    """
+    B, T, H, dh = q.shape
+    assert T % chunk == 0, (T, chunk)
+    nc, c = T // chunk, chunk
+    resh = lambda x: x.reshape(B, nc, c, *x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = (resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)),
+                  resh(v.astype(jnp.float32)))
+    lic, lfc = resh(log_i), resh(log_f)              # (nc, B, c, H)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))           # s <= t
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry               # (B,H,dh,dh),(B,H,dh),(B,H)
+        qt, kt, vt, li, lf = inp                     # (B,c,H,dh)/(B,c,H)
+        a = jnp.cumsum(lf, axis=1)                   # (B,c,H) cumulative log-forget
+        a_tot = a[:, -1]                             # (B,H)
+        # log-weight of source s seen from target t: a_t - a_s + li_s
+        lw = a[:, :, None, :] - a[:, None, :, :] + li[:, None, :, :]
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)          # (B,t,s,H)
+        m_intra = jnp.max(lw, axis=2)                                # (B,c,H)
+        m_t = jnp.maximum(a + m_prev[:, None, :], m_intra)           # (B,c,H)
+        w = jnp.exp(lw - m_t[:, :, None, :])                         # (B,t,s,H)
+        e_inter = jnp.exp(a + m_prev[:, None, :] - m_t)              # (B,c,H)
+
+        s_qk = jnp.einsum("bthd,bshd->btsh", qt, kt)                 # (B,t,s,H)
+        num = (e_inter[..., None] * jnp.einsum("bhvk,bthk->bthv", C_prev, qt)
+               + jnp.einsum("btsh,bshv->bthv", w * s_qk, vt))
+        den = (e_inter * jnp.einsum("bhk,bthk->bth", n_prev, qt)
+               + jnp.einsum("btsh,btsh->bth", w, s_qk))
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]          # (B,c,H,dh)
+
+        # chunk-end state
+        lw_end = a_tot[:, None, :] - a + li                          # (B,s,H)
+        m_new = jnp.maximum(a_tot + m_prev, jnp.max(lw_end, axis=1))
+        decay = jnp.exp(a_tot + m_prev - m_new)                      # (B,H)
+        src = jnp.exp(lw_end - m_new[:, None, :])                    # (B,s,H)
+        C_new = (decay[:, :, None, None] * C_prev
+                 + jnp.einsum("bsh,bshv,bshk->bhvk", src, vt, kt))
+        n_new = decay[..., None] * n_prev + jnp.einsum("bsh,bshk->bhk", src, kt)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, init, (qc, kc, vc, lic, lfc))
+    hs = hs.swapaxes(0, 1).reshape(B, T, H, dh)
+    return hs, (C, n, m)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype):
+    di = MLSTM_PF * cfg.d_model
+    H, dh = _heads(cfg, di)
+    K = cfg.ssm_conv
+    return {"C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, K - 1, di), dtype)}
+
+
+def mlstm_decode(params, cfg: ModelConfig, x, state):
+    """x: (B, 1, d)."""
+    B = x.shape[0]
+    xm, z, H, dh = _mlstm_pre(params, cfg, x)
+    xm, z = xm[:, 0], z[:, 0]
+    window = jnp.concatenate([state["conv"], xm[:, None, :]], axis=1)
+    conv = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"])
+    q = (conv @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = ((conv @ params["wk"]).reshape(B, H, dh) /
+         jnp.sqrt(jnp.asarray(dh, x.dtype))).astype(jnp.float32)
+    v = (xm @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = (conv @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state["m"] - m_new)
+    C = state["C"] * f_p[..., None, None] + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = state["n"] * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (num / den[..., None]).reshape(B, H * dh).astype(x.dtype)
+    h = rmsnorm(params["out_norm"], h, eps=cfg.norm_eps) * jax.nn.silu(z)
+    out = (h @ params["down"])[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_desc(cfg: ModelConfig) -> Dict[str, ParamDesc]:
+    d = cfg.d_model
+    H, dh = _heads(cfg, d)
+    ff = int(round(SLSTM_FF_PF * d / 64) * 64)
+    return {
+        "norm": norm_desc(d),
+        "w_in": ParamDesc((d, 4 * d), ("embed", "inner")),       # i,f,z,o pre-acts
+        "r": ParamDesc((H, dh, 4 * dh), (None, None, None), "small"),  # block-diag recurrent
+        "b": ParamDesc((4 * d,), (None,), "zeros"),
+        "out_norm": norm_desc(d),
+        "up": ParamDesc((d, 2 * ff), ("embed", "ffn")),
+        "down": ParamDesc((ff, d), ("ffn", "embed")),
+    }
+
+
+def _slstm_cell(params, cfg, x_proj_t, carry):
+    """One sLSTM time step.  x_proj_t: (B, 4d) pre-activations from W x_t."""
+    c, n, m, h = carry                                   # each (B, H, dh)
+    B = x_proj_t.shape[0]
+    d = cfg.d_model
+    H, dh = _heads(cfg, d)
+    rec = jnp.einsum("bhd,hdk->bhk", h, params["r"].astype(jnp.float32))  # (B,H,4dh)
+    pre = x_proj_t.reshape(B, H, 4 * dh).astype(jnp.float32) + rec + \
+        params["b"].reshape(H, 4 * dh).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    log_i = i_raw
+    log_f = -jax.nn.softplus(-f_raw)                     # sigmoid-form forget gate
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(params, cfg: ModelConfig, x, return_state: bool = False):
+    B, T, d = x.shape
+    H, dh = _heads(cfg, d)
+    u = rmsnorm(params["norm"], x, eps=cfg.norm_eps)
+    x_proj = u @ params["w_in"]                          # (B, T, 4d)
+    out_dtype = x.dtype
+
+    def step(carry, xp_t):
+        new = _slstm_cell(params, cfg, xp_t, carry)
+        return new, new[3].astype(out_dtype)
+
+    zeros = constrain_hard(jnp.zeros((B, H, dh), jnp.float32), ("b", None, None))
+    init = (zeros, zeros, constrain_hard(jnp.full((B, H, dh), -1e30, jnp.float32), ("b", None, None)), zeros)
+    xp = constrain(x_proj.transpose(1, 0, 2), (None, "b", "m"))
+    final, hs = chunked_scan(step, init, xp, chunk=cfg.mlstm_chunk)
+    h = constrain(hs, (None, "b", None, None)).transpose(1, 0, 2, 3).reshape(B, T, d)
+    h = rmsnorm(params["out_norm"], h, eps=cfg.norm_eps)
+    gate, up = jnp.split(h @ params["up"], 2, axis=-1)
+    out = (jax.nn.gelu(gate) * up) @ params["down"]
+    if return_state:
+        c, n, m, hf = final
+        return out, {"c": c, "n": n, "m": m, "h": hf}
+    return out
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    H, dh = _heads(cfg, d)
+    s = jax.ShapeDtypeStruct((batch, H, dh), jnp.float32)
+    return {"c": s, "n": s, "m": s, "h": s}
+
+
+def slstm_decode(params, cfg: ModelConfig, x, state):
+    B = x.shape[0]
+    u = rmsnorm(params["norm"], x[:, 0], eps=cfg.norm_eps)
+    xp = u @ params["w_in"]
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    c, n, m, h = _slstm_cell(params, cfg, xp, carry)
+    d = cfg.d_model
+    hv = h.reshape(B, d).astype(x.dtype)
+    hv = rmsnorm(params["out_norm"], hv, eps=cfg.norm_eps)
+    gate, up = jnp.split(hv @ params["up"], 2, axis=-1)
+    out = ((jax.nn.gelu(gate) * up) @ params["down"])[:, None, :]
+    return out, {"c": c, "n": n, "m": m, "h": h}

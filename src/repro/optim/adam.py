@@ -1,0 +1,38 @@
+"""Adam / AdamW."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, Schedule, register, resolve_lr
+
+
+@register("adam")
+def adam(lr: Schedule = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        eta = resolve_lr(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            d = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return -eta * d, m, v
+
+        trip = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        is_t = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda x: x[0], trip, is_leaf=is_t),
+                {"m": jax.tree.map(lambda x: x[1], trip, is_leaf=is_t),
+                 "v": jax.tree.map(lambda x: x[2], trip, is_leaf=is_t)})
+
+    return Optimizer("adam", init, update)

@@ -1,0 +1,59 @@
+"""Optimizer interface (optax-style, self-contained):
+
+    opt = make_optimizer(name, lr=fn_or_float, **kwargs)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+
+
+def resolve_lr(lr: Schedule, step) -> jnp.ndarray:
+    return jnp.asarray(lr(step) if callable(lr) else lr, jnp.float32)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+REGISTRY: Dict[str, Callable[..., Optimizer]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

@@ -1,0 +1,40 @@
+"""LARS — layerwise adaptive rate scaling (survey §3.1.1; You et al. 2017).
+
+Per-layer trust ratio ||w|| / (||g|| + wd·||w||) rescales the learning rate
+so large-batch SGD keeps layer updates proportional to layer norms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, Schedule, register, resolve_lr
+
+
+@register("lars")
+def lars(lr: Schedule = 1.0, momentum: float = 0.9, weight_decay: float = 1e-4,
+         trust_coef: float = 0.001, eps: float = 1e-9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        eta = resolve_lr(lr, step)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            g = g + weight_decay * pf
+            w_norm = jnp.linalg.norm(pf)
+            g_norm = jnp.linalg.norm(g)
+            trust = jnp.where(
+                (w_norm > 0) & (g_norm > 0),
+                trust_coef * w_norm / (g_norm + eps), 1.0)
+            mu_new = momentum * mu + eta * trust * g
+            return -mu_new, mu_new
+
+        pairs = jax.tree.map(upd, grads, state["mu"], params)
+        is_t = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda x: x[0], pairs, is_leaf=is_t),
+                {"mu": jax.tree.map(lambda x: x[1], pairs, is_leaf=is_t)})
+
+    return Optimizer("lars", init, update)

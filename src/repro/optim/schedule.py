@@ -1,0 +1,45 @@
+"""Learning-rate schedules for large-batch training (survey §3.1.1):
+
+  * linear / sqrt batch-size scaling rules [Goyal 2017; Krizhevsky 2014]
+  * gradual warmup [Goyal 2017]
+  * LEGW — linear-epoch gradual warmup [You et al. 2019]: warmup epochs
+    scale with the batch-size multiplier k
+  * cosine decay (the usual companion)
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def scale_lr_for_batch(base_lr: float, base_batch: int, batch: int,
+                       rule: str = "linear") -> float:
+    k = batch / base_batch
+    if rule == "linear":
+        return base_lr * k
+    if rule == "sqrt":
+        return base_lr * math.sqrt(k)
+    raise ValueError(rule)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  end_lr: float = 0.0) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = end_lr + 0.5 * (peak_lr - end_lr) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def legw_warmup_steps(base_warmup_steps: int, base_batch: int, batch: int) -> int:
+    """LEGW: multiply warmup length by the batch multiplier k."""
+    return int(base_warmup_steps * batch / base_batch)
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)

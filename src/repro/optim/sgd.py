@@ -1,0 +1,41 @@
+"""SGD with momentum (the survey's workhorse, §2.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, Schedule, register, resolve_lr
+
+
+@register("sgd")
+def sgd(lr: Schedule = 0.1, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        eta = resolve_lr(lr, step)
+
+        def upd(g, p, mu=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if mu is None:
+                return -eta * g, None
+            mu_new = momentum * mu + g
+            d = g + momentum * mu_new if nesterov else mu_new
+            return -eta * d, mu_new
+
+        if momentum == 0.0:
+            updates = jax.tree.map(lambda g, p: upd(g, p)[0], grads, params)
+            return updates, state
+        pairs = jax.tree.map(upd, grads, params, state["mu"])
+        updates = jax.tree.map(lambda x: x[0], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda x: x[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer("sgd", init, update)

@@ -1,0 +1,147 @@
+"""Compression properties (survey §3.2), including hypothesis-driven
+invariants: quantizer reconstruction bounds, unbiasedness of stochastic
+schemes, error-feedback contraction over steps, top-k selection, PowerSGD
+exactness on low-rank inputs."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.compression import (apply_with_feedback, get_compressor)
+
+RNG = jax.random.PRNGKey(0)
+
+# exclude subnormals/tiny values: mean|g| underflow makes sign*scale
+# round to zero in f32, which is numerics, not semantics
+arrays = st.integers(2, 6).flatmap(
+    lambda n: st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32,
+                  allow_subnormal=False).filter(
+            lambda v: v == 0 or abs(v) > 1e-6),
+        min_size=n * 4, max_size=n * 4))
+
+
+@given(arrays)
+@settings(max_examples=30, deadline=None)
+def test_sign_reconstruction_direction(vals):
+    """sign compressor preserves elementwise sign (where nonzero)."""
+    g = jnp.asarray(vals, jnp.float32)
+    comp = get_compressor("sign")
+    g_hat = comp.roundtrip(g)
+    nz = np.asarray(g) != 0
+    assert np.all(np.sign(np.asarray(g_hat))[nz] == np.sign(np.asarray(g))[nz])
+
+
+@given(arrays, st.integers(1, 100))
+@settings(max_examples=30, deadline=None)
+def test_qsgd_bound(vals, levels):
+    """|Q(g) - g| <= ||g||_2 / levels elementwise (uniform level spacing)."""
+    g = jnp.asarray(vals, jnp.float32)
+    comp = get_compressor("qsgd", levels=min(levels, 127))
+    g_hat = comp.roundtrip(g, RNG)
+    norm = float(jnp.linalg.norm(g))
+    bound = norm / min(levels, 127) + 1e-5
+    assert float(jnp.max(jnp.abs(g_hat - g))) <= bound
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("qsgd", {"levels": 63}), ("terngrad", {}), ("randomk", {"ratio": 0.5}),
+])
+def test_stochastic_unbiasedness(name, kwargs):
+    """E[decompress(compress(g))] == g (statistical, 4000 trials)."""
+    comp = get_compressor(name, **kwargs)
+    g = jax.random.normal(RNG, (16,))
+
+    def one(key):
+        return comp.roundtrip(g, key)
+
+    keys = jax.random.split(jax.random.PRNGKey(42), 4000)
+    mean = jnp.mean(jax.vmap(one)(keys), axis=0)
+    err = float(jnp.max(jnp.abs(mean - g)))
+    scale = float(jnp.max(jnp.abs(g)))
+    assert err < 0.12 * scale, (name, err, scale)
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("sign", {}), ("int8", {}), ("topk", {"ratio": 0.1}),
+    ("powersgd", {"rank": 2}),
+])
+def test_error_feedback_contracts(name, kwargs):
+    """Compressing a CONSTANT gradient with EF: the cumulative transmitted
+    mass converges to the true gradient (Karimireddy et al. 2019)."""
+    comp = get_compressor(name, **kwargs)
+    g = jax.random.normal(RNG, (32, 16)) * 2.0
+    e = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    q_prev = None
+    for i in range(40):
+        corrected = g + e
+        if name == "powersgd":
+            payload, meta = comp.compress(corrected, q_prev=q_prev)
+            q_prev = meta[1]
+            g_hat = comp.decompress(payload, meta)
+        else:
+            payload, meta = comp.compress(corrected, jax.random.fold_in(RNG, i))
+            g_hat = comp.decompress(payload, meta)
+        e = corrected - g_hat
+        sent = sent + g_hat
+    avg_sent = sent / 40.0
+    rel = float(jnp.linalg.norm(avg_sent - g) / jnp.linalg.norm(g))
+    assert rel < 0.15, (name, rel)
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=1000), jnp.float32)
+    comp = get_compressor("topk", ratio=0.05)
+    g_hat = np.asarray(comp.roundtrip(g))
+    kept = np.flatnonzero(g_hat)
+    assert len(kept) == 50
+    thresh = np.sort(np.abs(np.asarray(g)))[-50]
+    assert np.all(np.abs(np.asarray(g))[kept] >= thresh - 1e-6)
+
+
+def test_powersgd_exact_on_low_rank():
+    """A rank-r matrix is reconstructed (near-)exactly by rank-r PowerSGD
+    after a couple of warm-started iterations."""
+    a = jax.random.normal(RNG, (32, 4))
+    b = jax.random.normal(jax.random.fold_in(RNG, 1), (4, 24))
+    m = a @ b
+    comp = get_compressor("powersgd", rank=4)
+    q_prev = None
+    for _ in range(3):
+        payload, meta = comp.compress(m, rng=RNG, q_prev=q_prev)
+        q_prev = meta[1]
+    approx = comp.decompress(payload, meta)
+    rel = float(jnp.linalg.norm(approx - m) / jnp.linalg.norm(m))
+    assert rel < 1e-4
+
+
+def test_svd_oracle_beats_powersgd_on_full_rank():
+    m = jax.random.normal(RNG, (32, 32))
+    svd = get_compressor("svd", rank=4)
+    psgd = get_compressor("powersgd", rank=4)
+    e_svd = float(jnp.linalg.norm(svd.roundtrip(m) - m))
+    e_psgd = float(jnp.linalg.norm(psgd.roundtrip(m, RNG) - m))
+    assert e_svd <= e_psgd + 1e-4  # SVD is the optimal rank-4 approximation
+
+
+@given(st.integers(8, 2048))
+@settings(max_examples=20, deadline=None)
+def test_payload_bits_ordering(n):
+    """Wire sizes: sign < terngrad < qsgd(127) < int8(=qsgd bits) < dense."""
+    shape = (n,)
+    bits = {name: get_compressor(name).payload_bits(shape)
+            for name in ("sign", "terngrad", "int8", "none")}
+    bits["qsgd"] = get_compressor("qsgd", levels=127).payload_bits(shape)
+    assert bits["sign"] < bits["terngrad"] < bits["qsgd"] <= bits["int8"] \
+        < bits["none"]
+
+
+def test_threshold_zeroes_small():
+    comp = get_compressor("threshold", tau=0.5)
+    g = jnp.asarray([-1.0, -0.4, 0.0, 0.3, 0.9])
+    out = np.asarray(comp.roundtrip(g))
+    np.testing.assert_allclose(out, [-1.0, 0.0, 0.0, 0.0, 0.9], atol=1e-6)

@@ -1,0 +1,91 @@
+"""Pallas kernels vs ref.py oracles: shape x dtype sweeps in interpret mode
+(deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,T,H,KV,hd", [
+    (1, 128, 2, 2, 32), (2, 256, 4, 2, 64), (1, 128, 8, 1, 32),
+    (2, 128, 4, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_shapes(B, T, H, KV, hd, dtype):
+    q = jax.random.normal(RNG, (B, T, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (B, T, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (B, T, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, q_blk=64, kv_blk=64)
+    r = ref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(r),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(window=64), dict(softcap=30.0), dict(window=64, softcap=20.0),
+    dict(causal=False),
+])
+def test_flash_kernel_variants(kwargs):
+    q = jax.random.normal(RNG, (1, 256, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (1, 256, 2, 32))
+    out = ops.flash_attention(q, k, v, q_blk=64, kv_blk=64, **kwargs)
+    r = ref.flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_tiles", [1, 3, 8])
+@pytest.mark.parametrize("decay", [1.0, 0.9])
+def test_quantize_ef_kernel(n_tiles, decay):
+    n = n_tiles * 1024
+    g = jax.random.normal(RNG, (n,)) * 2.5
+    e = jax.random.normal(jax.random.fold_in(RNG, 1), (n,)) * 0.3
+    q, e_new, sc = ops.quantize_ef(g, e, decay=decay, tile=1024)
+    qr, er, scr = ref.quantize_ef_ref(g, e, decay=decay, tile=1024)
+    assert q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(e_new), np.asarray(er), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), atol=0)
+
+
+def test_quantize_ef_reconstruction_bound():
+    """|corrected - dequant(q)| <= scale/254 per element (round-to-nearest)."""
+    from repro.kernels.ops import dequantize
+    n = 4096
+    g = jax.random.normal(RNG, (n,)) * 5
+    e = jnp.zeros((n,))
+    q, e_new, sc = ops.quantize_ef(g, e, tile=1024)
+    recon = dequantize(q, sc, tile=1024)
+    bound = jnp.repeat(sc, 1024) / 127.0 * 0.5 + 1e-6
+    assert bool(jnp.all(jnp.abs(g - recon) <= bound))
+    np.testing.assert_allclose(np.asarray(g - recon), np.asarray(e_new),
+                               rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("ratio", [0.01, 0.05, 0.25])
+def test_topk_mask_kernel(ratio):
+    n = 8 * 1024
+    x = jax.random.normal(RNG, (n,))
+    got = ops.topk_mask(x, ratio=ratio, tile=1024)
+    want = ref.topk_mask_ref(x, ratio=ratio, tile=1024)
+    k = max(1, int(1024 * ratio))
+    nnz = int((got != 0).sum())
+    # per-tile counts within bisection tolerance of the exact oracle
+    assert abs(nnz - int((want != 0).sum())) <= 8 * 2
+    # kept values are a subset relationship: every kept kernel value matches x
+    kept = np.asarray(got != 0)
+    np.testing.assert_array_equal(np.asarray(got)[kept], np.asarray(x)[kept])
+    # magnitudes: min kept >= max dropped within each tile (up to bisection eps)
+    xb = np.asarray(x).reshape(-1, 1024)
+    gb = np.asarray(got).reshape(-1, 1024)
+    for xt, gt in zip(xb, gb):
+        kept_t = gt != 0
+        if kept_t.any() and (~kept_t).any():
+            assert np.abs(xt[kept_t]).min() >= np.abs(xt[~kept_t]).max() - 1e-4

@@ -1,0 +1,95 @@
+"""Optimizers (survey §3.1.1) and LR schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (apply_updates, clip_by_global_norm, make_optimizer,
+                         legw_warmup_steps, scale_lr_for_batch, warmup_cosine)
+
+RNG = jax.random.PRNGKey(3)
+
+
+def quad_problem(opt, steps=200):
+    """Minimize ||w - w*||^2; returns final distance."""
+    w_star = jax.random.normal(RNG, (8, 4))
+    params = {"w": jnp.zeros((8, 4))}
+    state = opt.init(params)
+    for t in range(steps):
+        grads = {"w": 2 * (params["w"] - w_star)}
+        updates, state = opt.update(grads, state, params, jnp.asarray(t))
+        params = apply_updates(params, updates)
+    return float(jnp.linalg.norm(params["w"] - w_star))
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("sgd", dict(lr=0.1)),
+    ("sgd", dict(lr=0.05, momentum=0.9)),
+    ("adam", dict(lr=0.05)),
+    ("lamb", dict(lr=0.05, weight_decay=0.0)),
+    ("lars", dict(lr=0.5, trust_coef=0.02, weight_decay=0.0)),
+])
+def test_optimizers_converge_quadratic(name, kwargs):
+    # LAMB's trust ratio ties the step size to ||w||, which slows the last
+    # stretch on a quadratic from zero-init — hence the looser bound.
+    assert quad_problem(make_optimizer(name, **kwargs)) < 0.3, name
+
+
+def test_lars_trust_ratio_formula():
+    opt = make_optimizer("lars", lr=1.0, momentum=0.0, weight_decay=0.0,
+                         trust_coef=0.01)
+    params = {"w": jnp.full((4,), 2.0)}          # ||w|| = 4
+    grads = {"w": jnp.full((4,), 1.0)}           # ||g|| = 2
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params, jnp.asarray(0))
+    # trust = 0.01 * 4 / 2 = 0.02; update = -lr * trust * g = -0.02
+    np.testing.assert_allclose(np.asarray(updates["w"]), -0.02, rtol=1e-5)
+
+
+def test_lamb_trust_scales_update_to_weight_norm():
+    opt = make_optimizer("lamb", lr=1.0, weight_decay=0.0)
+    params = {"w": jax.random.normal(RNG, (16,)) * 3}
+    grads = {"w": jax.random.normal(jax.random.fold_in(RNG, 1), (16,)) * 100}
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params, jnp.asarray(0))
+    # ||update|| == lr * ||w|| regardless of gradient scale
+    np.testing.assert_allclose(float(jnp.linalg.norm(updates["w"])),
+                               float(jnp.linalg.norm(params["w"])), rtol=1e-4)
+
+
+def test_adam_matches_reference_step():
+    opt = make_optimizer("adam", lr=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.25])}
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params, jnp.asarray(0))
+    # bias-corrected first step: update = -lr * g/|g| elementwise (m/c1 = g,
+    # sqrt(v/c2) = |g|)
+    np.testing.assert_allclose(np.asarray(updates["w"]),
+                               [-0.1, -0.1], rtol=1e-4)
+
+
+def test_scaling_rules():
+    assert scale_lr_for_batch(0.1, 256, 1024, "linear") == pytest.approx(0.4)
+    assert scale_lr_for_batch(0.1, 256, 1024, "sqrt") == pytest.approx(0.2)
+    assert legw_warmup_steps(100, 256, 2048) == 800  # LEGW: warmup x k
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(s(0)) == 0.0
+    assert float(s(5)) == pytest.approx(0.5)
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(100)) == pytest.approx(0.0, abs=1e-6)
+    # monotone decay after warmup
+    vals = [float(s(t)) for t in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((9,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.optim import global_norm
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    clipped2, _ = clip_by_global_norm(g, 1e9)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), 3.0)

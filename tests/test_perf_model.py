@@ -1,0 +1,79 @@
+"""WFBP/MG-WFBP/P3 analytic overlap model (survey §3.3, Fig. 8) — property
+tests with hypothesis."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.schedule import (LayerProfile, iteration_time_fifo,
+                                 iteration_time_mg_wfbp, iteration_time_p3,
+                                 iteration_time_wfbp, wfbp_case)
+
+profiles = st.lists(
+    st.tuples(st.floats(1e-5, 1e-2), st.floats(1e3, 1e8)).map(
+        lambda t: LayerProfile(t_backward_s=t[0], grad_bytes=t[1])),
+    min_size=1, max_size=24)
+
+link = st.tuples(st.floats(1e-7, 1e-4), st.floats(1e-11, 1e-9))
+
+
+@given(profiles, link)
+@settings(max_examples=80, deadline=None)
+def test_wfbp_never_worse_than_fifo(layers, ab):
+    a, b = ab
+    assert iteration_time_wfbp(layers, a, b) <= \
+        iteration_time_fifo(layers, a, b) + 1e-12
+
+
+@given(profiles, link)
+@settings(max_examples=80, deadline=None)
+def test_wfbp_lower_bounds(layers, ab):
+    """Iteration can never beat max(total backward, total comm)."""
+    a, b = ab
+    tb = sum(l.t_backward_s for l in layers)
+    tc = sum(a + l.grad_bytes * b for l in layers)
+    t = iteration_time_wfbp(layers, a, b)
+    assert t >= tb - 1e-12
+    assert t >= tc - 1e-12
+
+
+@given(profiles, link)
+@settings(max_examples=80, deadline=None)
+def test_mg_wfbp_saves_alpha(layers, ab):
+    """With a huge bucket (one merged message), MG-WFBP pays one alpha
+    instead of L — so it is at least as good as WFBP when alpha dominates."""
+    a, b = ab
+    big_bucket = sum(l.grad_bytes for l in layers) + 1
+    merged = iteration_time_mg_wfbp(layers, a, b, big_bucket)
+    tb = sum(l.t_backward_s for l in layers)
+    tc_merged = a + sum(l.grad_bytes for l in layers) * b
+    assert merged <= tb + tc_merged + 1e-9
+
+
+@given(profiles, link)
+@settings(max_examples=50, deadline=None)
+def test_p3_not_slower_than_serial(layers, ab):
+    a, b = ab
+    t = iteration_time_p3(layers, a, b, slice_bytes=4e6)
+    assert t <= iteration_time_fifo(layers, a, b) * (1 + 1e-9) + \
+        a * len(layers)  # slicing can add at most per-layer latency terms
+
+
+def test_fig8_cases():
+    """Reconstruct the survey's three overlap regimes."""
+    a, b = 5e-6, 1 / 10e9
+    fast_net = [LayerProfile(1e-3, 1e5)] * 10       # comm tiny: case 1
+    balanced = [LayerProfile(1e-3, 5e6)] * 10       # comparable: case 2/3
+    slow_net = [LayerProfile(1e-4, 2e7)] * 10       # comm dominates: case 3
+    assert wfbp_case(fast_net, a, b) == 1
+    assert wfbp_case(slow_net, a, b) == 3
+    assert wfbp_case(balanced, a, b) >= 2
+
+
+def test_mg_wfbp_beats_wfbp_in_latency_bound_regime():
+    """Shi et al.'s observation: many small messages -> merging wins."""
+    a, b = 1e-3, 1 / 50e9                            # very high latency
+    layers = [LayerProfile(1e-4, 1e4)] * 50
+    wfbp = iteration_time_wfbp(layers, a, b)
+    merged = iteration_time_mg_wfbp(layers, a, b, bucket_bytes=1e9)
+    assert merged < wfbp * 0.25
