@@ -10,14 +10,15 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
-from repro.core.collectives import LinkParams, allreduce_cost_s
+from benchmarks.common import LINK_PRESETS, emit
+from repro.core.collectives import allreduce_cost_s
 
 MEASURE_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax, jax.numpy as jnp
+import repro.compat  # AxisType/shard_map shims on old JAX
 from jax.sharding import PartitionSpec as P, AxisType
 from repro.core.collectives import allreduce
 mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
@@ -36,7 +37,7 @@ for algo in ("psum", "ring", "tree", "hierarchical"):
 
 
 def run():
-    link = LinkParams(alpha_s=1e-6, beta_s_per_byte=1 / 50e9)
+    link = LINK_PRESETS["fast_ici"]
     for p in (16, 256, 512):
         for nbytes, tag in ((1e4, "10KB"), (1e8, "100MB")):
             for algo in ("ring", "tree", "hierarchical", "mesh2d",

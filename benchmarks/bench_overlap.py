@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import LINK_PRESETS, emit
 from repro.core.grad_sync import bucketize
 from repro.core.schedule import (LayerProfile, iteration_time_fifo,
                                  iteration_time_mg_wfbp, iteration_time_p3,
@@ -24,11 +24,9 @@ def transformer_profile(layers=24, d=2048, ff=8192, t_flop=197e12, tokens=2048):
 
 def run():
     layers = transformer_profile()
-    regimes = {
-        "fast_ici": (1e-6, 1 / 50e9),
-        "datacenter": (5e-6, 1 / 10e9),
-        "commodity": (50e-6, 1 / 1.25e9),  # the survey's 10 GbE setting
-    }
+    # canonical α-β regimes (commodity ≈ the survey's 10 GbE setting)
+    regimes = {name: (l.alpha_s, l.beta_s_per_byte)
+               for name, l in LINK_PRESETS.items()}
     for name, (a, b) in regimes.items():
         fifo = iteration_time_fifo(layers, a, b)
         wfbp = iteration_time_wfbp(layers, a, b)

@@ -1,0 +1,119 @@
+"""Communication planner vs fixed configs (tentpole acceptance table).
+
+Two views, both emitted as ``name,us_per_call,derived`` rows:
+
+  * ``planner/modeled/...`` — for ≥3 FULL-SIZE archs × ≥2 link regimes, the
+    planner's modeled iteration time next to the fixed single-strategy
+    baselines {psum/dense, ring/topk, ring/int8} on the same α-β simulator.
+    ``derived`` carries the speedup of auto over the best fixed config
+    (≥1.00x by construction — the planner's search space contains them).
+
+  * ``planner/measured/...`` — for ≥3 reduced archs on the host mesh,
+    MEASURED wall time per train step for the auto plan vs the fixed
+    configs.  On a 1-device host the collective degenerates, so this
+    measures executor overhead (compression compute, bucketing): the
+    planner correctly goes dense when communication is free, so auto must
+    not be slower than the compressed fixed configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import LINK_PRESETS, emit, time_fn
+from repro.configs import get_config, reduced
+from repro.core.schedule import fixed_config_plan, plan, profiles_from_grads
+from repro.core.schedule.planner import FIXED_BASELINES
+
+ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
+REGIMES = ("fast_ici", "commodity")
+# emit-name-safe spellings of the shared baseline table
+FIXED = {name.replace("/", "_"): spec
+         for name, spec in FIXED_BASELINES.items()}
+PEAK_FLOPS = 197e12     # per-chip bf16 (launch.mesh roofline constant)
+TOKENS = 4096           # per-chip tokens per step for the modeled backward
+
+
+def _modeled():
+    from repro.models import Model
+    world = 256
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = Model(cfg)
+        params = model.abstract_params()
+        n_params = sum(int(jnp.prod(jnp.asarray(p.shape)))
+                       for p in jax.tree.leaves(params))
+        # backward ≈ 2× forward ≈ 4·N·tokens flops
+        t_backward = 4.0 * n_params * TOKENS / PEAK_FLOPS
+        profiles = profiles_from_grads(params, t_backward)
+        for regime in REGIMES:
+            link = LINK_PRESETS[regime]
+            auto = plan(profiles, link, world)
+            fixed_times = {}
+            for name, (comp, algo, cargs) in FIXED.items():
+                fp = fixed_config_plan(profiles, link, world, comp, algo,
+                                       compressor_args=cargs)
+                fixed_times[name] = fp.modeled_step_s
+                emit(f"planner/modeled/{arch}/{regime}/{name}",
+                     fp.modeled_step_s * 1e6, "")
+            best = min(fixed_times, key=fixed_times.get)
+            emit(f"planner/modeled/{arch}/{regime}/auto",
+                 auto.modeled_step_s * 1e6,
+                 f"n_buckets={auto.n_buckets} "
+                 f"speedup_vs_best_fixed={fixed_times[best] / auto.modeled_step_s:.2f}x"
+                 f" best_fixed={best}")
+
+
+def _measured():
+    from repro.core import SyncConfig
+    from repro.data import DataConfig, SyntheticPipeline
+    from repro.launch.mesh import data_axes, make_host_mesh
+    from repro.launch.steps import (make_comm_optimized_train_step,
+                                    make_planned_train_step)
+    from repro.models import Model
+    from repro.optim import make_optimizer
+
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    axes = data_axes(mesh)
+    world = 1
+    for a in axes:
+        world *= mesh.shape[a]
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = make_optimizer("adam", lr=1e-3)
+        data = SyntheticPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=2 * world,
+            embedding_dim=cfg.d_model if cfg.embedding_inputs else 0))
+        batch = jax.tree.map(jnp.asarray, data.batch(0))
+        rng = jax.random.PRNGKey(1)
+
+        def run_one(tag, step_builder):
+            step_fn, _, init_state = step_builder()
+            opt_state = opt.init(params)
+            sync_state = init_state(params)
+            jit_step = jax.jit(step_fn)
+            step_i = jnp.zeros((), jnp.int32)
+
+            def call():
+                return jit_step(params, opt_state, sync_state, batch,
+                                step_i, rng)
+
+            us = time_fn(call, iters=5, warmup=1)
+            emit(f"planner/measured/{arch}/{tag}", us, f"world={world}")
+
+        profiles = profiles_from_grads(params, t_backward_s=1e-3)
+        auto_plan = plan(profiles, LINK_PRESETS["fast_ici"], world)
+        run_one("auto", lambda: make_planned_train_step(
+            model, auto_plan, opt, mesh, axes))
+        for name, (comp, algo, cargs) in FIXED.items():
+            sync_cfg = SyncConfig(compressor=comp, algo=algo,
+                                  compressor_args=cargs)
+            run_one(name, lambda: make_comm_optimized_train_step(
+                model, opt, sync_cfg, mesh, axes))
+
+
+def run():
+    _modeled()
+    _measured()

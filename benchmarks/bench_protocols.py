@@ -8,15 +8,17 @@ and reporting the predicted scaling efficiency of a ring allreduce-per-step
 training loop."""
 from __future__ import annotations
 
-from benchmarks.common import emit
-from repro.core.collectives import LinkParams, allreduce_cost_s
+from benchmarks.common import LINK_PRESETS, LinkParams, emit
+from repro.core.collectives import allreduce_cost_s
 
 PROTOCOLS = {
-    # alpha (latency), beta (1/bandwidth) — representative published values
+    # alpha (latency), beta (1/bandwidth) — representative published values.
+    # tpu_ici deliberately coincides with cost.LINK_PRESETS["fast_ici"].
     "tcp_socket": (50e-6, 1 / 1.2e9),
     "ipoib": (20e-6, 1 / 4e9),
     "rdma_verbs": (2e-6, 1 / 11e9),
-    "tpu_ici": (1e-6, 1 / 50e9),
+    "tpu_ici": (LINK_PRESETS["fast_ici"].alpha_s,
+                LINK_PRESETS["fast_ici"].beta_s_per_byte),
 }
 
 STEP_COMPUTE_S = 0.25     # Inception-v3-ish step

@@ -1,13 +1,19 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + link regimes.
 
 Every bench prints ``name,us_per_call,derived`` rows (benchmarks/run.py
 contract); ``derived`` carries the table-specific metric.
+
+``LINK_PRESETS`` re-exports the canonical α-β regimes from
+``repro.core.schedule.cost`` so every bench sweeps the SAME (α, β) points —
+the per-bench literal copies used to drift.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+
+from repro.core.schedule.cost import LINK_PRESETS, LinkParams  # noqa: F401
 
 
 def time_fn(fn, *args, iters: int = 10, warmup: int = 2) -> float:

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Smoke suite: tier-1 tests + quickstart example + a 5-step `--sync auto`
+# train on the reduced xlstm-125m config (the communication-planner
+# acceptance path).  Run from the repo root:
+#
+#     bash scripts/ci.sh [--fast]
+#
+# --fast skips the (slow on CPU) xlstm auto-train.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo "=== smoke: examples/quickstart.py ==="
+python examples/quickstart.py
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "=== smoke: 5-step --sync auto train (reduced xlstm-125m) ==="
+  python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 5 --batch 2 --seq 32 --sync auto \
+      --plan-world 256 --link commodity --log-every 1
+fi
+
+echo "=== smoke: planner benchmark (modeled only is fast; full table) ==="
+python -m benchmarks.run --only planner
+
+echo "ALL SMOKE CHECKS PASSED"

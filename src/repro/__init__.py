@@ -1,0 +1,3 @@
+"""Survey reproduction package.  Importing any ``repro.*`` module installs
+the JAX version-compat shims first (see ``repro.compat``)."""
+from repro import compat  # noqa: F401

@@ -1,0 +1,105 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the modern JAX API surface (``jax.shard_map``
+with ``axis_names``/``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.lax.axis_size``).  The pinned container
+toolchain ships an older JAX where those spell differently:
+
+  * ``jax.shard_map``          -> ``jax.experimental.shard_map.shard_map``
+                                  (``axis_names`` becomes the complement
+                                  ``auto=`` frozenset; ``check_vma`` was
+                                  ``check_rep``)
+  * ``jax.make_mesh``          -> same, minus ``axis_types``
+  * ``jax.sharding.AxisType``  -> absent (all axes behave as Auto)
+  * ``jax.lax.axis_size(ax)``  -> ``jax.lax.psum(1, ax)`` (statically folded)
+
+Importing this module (``repro/__init__.py`` does it) installs forwarding
+wrappers ONLY for the spellings the installed JAX lacks; on a modern JAX it
+is a no-op.  Call sites keep the modern spelling everywhere.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    orig = jax.make_mesh
+    if "axis_types" in inspect.signature(orig).parameters:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # old JAX has no axis-type concept; every axis is effectively Auto,
+        # which is what this repo requests everywhere
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        if axis_names is None:
+            auto = frozenset()
+        else:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        # check_vma=False maps to the old check_rep=False (skip the
+        # replication-invariance check)
+        return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), auto=auto)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of a Python literal is folded statically to the axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_optimization_barrier_grad() -> None:
+    try:
+        jax.make_jaxpr(jax.grad(lambda x: jax.lax.optimization_barrier(x)))(1.0)
+        return   # differentiation rule exists
+    except NotImplementedError:
+        pass
+    orig = jax.lax.optimization_barrier
+
+    @jax.custom_vjp
+    def barrier(xs):
+        return orig(xs)
+
+    barrier.defvjp(lambda xs: (barrier(xs), None), lambda _, g: (g,))
+    jax.lax.optimization_barrier = barrier
+
+
+_install_axis_type()
+_install_make_mesh()
+_install_shard_map()
+_install_axis_size()
+_install_optimization_barrier_grad()

@@ -1,6 +1,9 @@
 # The paper's primary contribution — the communication-optimization taxonomy
 # (survey §3 + §4) as a composable library.  See DESIGN.md §1 for the map.
-from repro.core.grad_sync import GradientSynchronizer, SyncConfig, bucketize  # noqa: F401
+from repro.core.grad_sync import (  # noqa: F401
+    GradientSynchronizer, PlanExecutor, SyncConfig, bucketize,
+    plan_from_config)
+from repro.core.schedule.planner import BucketPlan, CommPlan  # noqa: F401
 from repro.core.local_sgd import (  # noqa: F401
     LocalSGDConfig, average_params, communication_rounds, should_sync)
 from repro.core.lag import LAGConfig, init_lag_state, lag_trigger, lag_update_state  # noqa: F401

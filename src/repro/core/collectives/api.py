@@ -1,21 +1,23 @@
-"""Dispatch for the collective algorithms (survey §4.1) plus the α-β cost
-model used by benchmarks and the scheduling perf model (§4.2/§4.3: message
-libraries and protocols appear here only through their α (latency) and
-β (inverse bandwidth) parameters — on TPU the "protocol" layer is ICI and
-lives below XLA, see DESIGN.md §5).
+"""Dispatch for the collective algorithms (survey §4.1).
+
+The α-β cost model that used to live here moved to
+``repro.core.schedule.cost`` so the communication planner, the overlap
+simulator, and the benchmarks all consume one copy; ``LinkParams`` and
+``allreduce_cost_s`` are re-exported below for existing importers
+(deprecated — import from ``repro.core.schedule.cost`` instead).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
-import numpy as np
 
 from repro.core.collectives.hierarchical import hierarchical_allreduce
 from repro.core.collectives.mesh2d import mesh2d_allreduce
 from repro.core.collectives.ring import ring_allreduce
 from repro.core.collectives.tree import tree_allreduce
+from repro.core.schedule.cost import (  # noqa: F401  (compat re-export)
+    LINK_PRESETS, LinkParams, allreduce_cost_s)
 
 ALGOS = ("psum", "ring", "tree", "hierarchical", "mesh2d", "mesh2d_split")
 
@@ -44,45 +46,3 @@ def allreduce(x, algo: str, axes: Sequence[str]):
             return ring_allreduce(x, axes[0])
         return mesh2d_allreduce(x, axes[0], axes[1], split=algo == "mesh2d_split")
     raise ValueError(f"unknown collective algo {algo!r}; known: {ALGOS}")
-
-
-# ---------------------------------------------------------------------------
-# α-β (latency-bandwidth) cost model — survey Fig. 10/12 comparisons and the
-# §4.3 protocol study are parameter sweeps over this model.
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class LinkParams:
-    alpha_s: float = 1e-6       # per-message latency (s)
-    beta_s_per_byte: float = 1.0 / 50e9   # inverse link bandwidth (s/B)
-
-
-def allreduce_cost_s(algo: str, n_bytes: float, p: int, link: LinkParams,
-                     k: Optional[int] = None) -> float:
-    """Predicted wall time of one allreduce of n_bytes over p ranks.
-
-    ring:          2(p-1) steps of n/p bytes
-    tree (PS):     2 log2(p) steps of n bytes
-    hierarchical:  intra ring over k + inter ring over p/k on n/k shards
-                   (Jia et al.: 4(k-1) + 2(p/k - 1) steps)
-    mesh2d:        two perpendicular ring phases on sqrt(p) ranks
-    """
-    a, b = link.alpha_s, link.beta_s_per_byte
-    if p <= 1:
-        return 0.0
-    if algo == "ring" or algo == "psum":
-        return 2 * (p - 1) * (a + (n_bytes / p) * b)
-    if algo == "tree":
-        return 2 * np.log2(p) * (a + n_bytes * b)
-    if algo == "hierarchical":
-        k = k or int(np.sqrt(p))
-        inner = 2 * (k - 1) * (a + (n_bytes / k) * b)
-        outer = 2 * (p // k - 1) * (a + (n_bytes / k / (p // k)) * b)
-        return inner + outer + 2 * (k - 1) * a  # broadcast-phase latency
-    if algo in ("mesh2d", "mesh2d_split"):
-        px = int(np.sqrt(p))
-        py = p // px
-        t = (2 * (px - 1) * (a + (n_bytes / px) * b)
-             + 2 * (py - 1) * (a + (n_bytes / px / py) * b))
-        return t / (2 if algo == "mesh2d_split" else 1)
-    raise ValueError(algo)

@@ -1,11 +1,20 @@
-"""GradientSynchronizer — the survey's taxonomy as one composable step.
+"""Gradient synchronization — the survey's taxonomy as one composable step.
 
 Every data-parallel training step runs
 
     grads -> [bucket] -> [error-feedback + compress] -> collective
           -> [decompress/aggregate] -> synced grads
 
-with each stage selected by ``SyncConfig``:
+The execution engine is ``PlanExecutor``: it takes a ``CommPlan`` — an
+ordered list of per-bucket ``BucketPlan(leaves, compressor, algo, ...)``
+entries (``repro.core.schedule.planner``) — and runs a possibly
+HETEROGENEOUS strategy per bucket: one bucket may go dense over psum while
+another is top-k compressed over an explicit ring.  Plans come either from
+the communication planner (``--sync auto``) or from a single global
+``SyncConfig`` via ``plan_from_config`` (the degenerate one-entry-strategy
+plan — ``GradientSynchronizer`` below keeps that legacy API).
+
+``SyncConfig`` knobs (all become per-bucket fields of ``BucketPlan``):
 
   * ``compressor``: none | sign | terngrad | qsgd | int8 | topk | randomk |
     threshold | powersgd | svd                      (§3.2)
@@ -24,8 +33,7 @@ are exactly ``axes``.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +41,8 @@ import numpy as np
 
 from repro.core.collectives import allreduce
 from repro.core.compression import get_compressor
+from repro.core.schedule.planner import (BucketPlan, CommPlan,
+                                         form_bucket_indices)
 
 DENSE_SMALL = 4096  # leaves smaller than this stay dense inside PowerSGD
 
@@ -70,17 +80,10 @@ def bucketize(grads, bucket_bytes: int):
     holds the deepest layers.
     """
     leaves, treedef = jax.tree.flatten(grads)
-    order = list(range(len(leaves)))[::-1]
-    buckets, cur, cur_bytes = [], [], 0
-    for i in order:
-        sz = int(np.prod(leaves[i].shape))
-        if cur and (bucket_bytes <= 0 or cur_bytes + sz * 4 > bucket_bytes):
-            buckets.append(cur)
-            cur, cur_bytes = [], 0
-        cur.append((i, sz))
-        cur_bytes += sz * 4
-    if cur:
-        buckets.append(cur)
+    sizes = [int(np.prod(g.shape)) for g in leaves]
+    buckets = [[(i, sizes[i]) for i in idxs]
+               for idxs in form_bucket_indices([s * 4 for s in sizes],
+                                               bucket_bytes)]
 
     def pack(gs):
         ls = jax.tree.leaves(gs)
@@ -101,161 +104,259 @@ def bucketize(grads, bucket_bytes: int):
 
 
 # ---------------------------------------------------------------------------
-# The synchronizer
+# SyncConfig -> degenerate CommPlan (the legacy single-strategy path)
 # ---------------------------------------------------------------------------
 
-class GradientSynchronizer:
-    def __init__(self, cfg: SyncConfig, axes: Sequence[str]):
-        self.cfg = cfg
+def plan_from_config(cfg: SyncConfig, grads) -> CommPlan:
+    """The one-strategy ``CommPlan`` a global ``SyncConfig`` induces.
+
+    Mirrors the historical GradientSynchronizer modes exactly (so executing
+    the plan is bit-for-bit the old behaviour):
+
+      * ``compressor='none'``     — one dense bucket, leaves synced in their
+                                    natural shapes (sharding survives)
+      * ``powersgd``              — per-leaf unpacked buckets in tree order
+                                    (factorization is shape-aware)
+      * ``bucket_bytes <= 0``     — per-leaf unpacked buckets in tree order
+      * otherwise                 — ``bucketize`` fusion in backward order
+    """
+    leaves = jax.tree.leaves(grads)
+    sizes = [int(np.prod(g.shape)) for g in leaves]
+    if cfg.compressor == "none":
+        # per-leaf unfused dense sync, leaves in their natural shapes —
+        # the historical behaviour (sharding survives, output stays f32)
+        buckets: Tuple[BucketPlan, ...] = (BucketPlan(
+            leaves=tuple(range(len(leaves))), compressor="none",
+            algo=cfg.algo, bucket_bytes=4 * sum(sizes), pack=False,
+            error_feedback=False),)
+    elif cfg.compressor == "powersgd":
+        buckets = tuple(BucketPlan(
+            leaves=(i,), compressor="powersgd",
+            compressor_args=cfg.compressor_args, algo=cfg.algo,
+            bucket_bytes=4 * sizes[i], pack=False, error_feedback=True,
+            ef_decay=cfg.ef_decay) for i in range(len(leaves)))
+    elif cfg.bucket_bytes <= 0:
+        buckets = tuple(BucketPlan(
+            leaves=(i,), compressor=cfg.compressor,
+            compressor_args=cfg.compressor_args, algo=cfg.algo,
+            bucket_bytes=4 * sizes[i], pack=False,
+            error_feedback=cfg.error_feedback, ef_decay=cfg.ef_decay)
+            for i in range(len(leaves)))
+    else:
+        defs, _, _ = bucketize(grads, cfg.bucket_bytes)
+        buckets = tuple(BucketPlan(
+            leaves=tuple(i for i, _ in b), compressor=cfg.compressor,
+            compressor_args=cfg.compressor_args, algo=cfg.algo,
+            bucket_bytes=4 * sum(sz for _, sz in b), pack=True,
+            error_feedback=cfg.error_feedback, ef_decay=cfg.ef_decay)
+            for b in defs)
+    return CommPlan(buckets=buckets, mean=cfg.mean)
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+class PlanExecutor:
+    """Executes a ``CommPlan``: per-bucket (possibly heterogeneous)
+    error-feedback + compression + collective exchange.
+
+    State is carried per bucket: ``error`` holds the EF residual (flat
+    buffer for packed buckets, leaf-shaped otherwise), ``q`` the PowerSGD
+    warm-start factor; entries are None for buckets that need neither, and
+    the keys are omitted entirely when no bucket uses them (preserving the
+    legacy state schema of the single-config path)."""
+
+    def __init__(self, plan: CommPlan, axes: Sequence[str]):
+        self.plan = plan
         self.axes = tuple(axes)
-        self.comp = cfg.make_compressor()
+        self.comps = [get_compressor(b.compressor, **dict(b.compressor_args))
+                      for b in plan.buckets]
+        for j, b in enumerate(plan.buckets):
+            if (b.compressor == "powersgd" or
+                    (not b.pack and b.compressor != "none")) \
+                    and len(b.leaves) != 1:
+                raise ValueError(
+                    f"bucket {j}: pack=False / powersgd buckets operate on "
+                    f"one leaf in its natural shape, got leaves={b.leaves}")
+
+    @staticmethod
+    def _bucket_uses_ef(b: BucketPlan) -> bool:
+        return b.error_feedback and b.compressor not in ("none",)
+
+    def _check_cover(self, n_leaves: int) -> None:
+        """Every leaf must be claimed by exactly one bucket — a partial or
+        overlapping plan would otherwise surface as a far-away unflatten /
+        optimizer error on a None gradient."""
+        claimed = sorted(i for b in self.plan.buckets for i in b.leaves)
+        if claimed != list(range(n_leaves)):
+            raise ValueError(
+                f"CommPlan does not cover the gradient pytree exactly: "
+                f"{n_leaves} leaves, bucket indices {claimed}")
+
+    @staticmethod
+    def _pack_bucket(leaves, idxs):
+        return jnp.concatenate([leaves[i].reshape(-1).astype(jnp.float32)
+                                for i in idxs])
+
+    @staticmethod
+    def _unpack_bucket(buf, leaves, idxs, out):
+        off = 0
+        for i in idxs:
+            sz = int(np.prod(leaves[i].shape))
+            out[i] = buf[off:off + sz].reshape(
+                leaves[i].shape).astype(leaves[i].dtype)
+            off += sz
 
     # -- state ---------------------------------------------------------------
 
-    def init_state(self, grads) -> Dict[str, Any]:
-        state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
-        if self._uses_ef():
-            if self.cfg.compressor == "powersgd":
-                state["error"] = jax.tree.map(
-                    lambda g: jnp.zeros(g.shape, jnp.float32), grads)
-                state["q"] = jax.tree.map(self._init_q, grads)
-            elif self.cfg.bucket_bytes <= 0:
-                # per-leaf EF in the leaf's natural shape: the residual
-                # inherits the leaf's tensor-parallel sharding instead of
-                # being replicated by a flat concat (§Perf pair-3 finding)
-                state["error"] = jax.tree.map(
-                    lambda g: jnp.zeros(g.shape, jnp.float32), grads)
-            else:
-                _, pack, _ = bucketize(grads, self.cfg.bucket_bytes)
-                state["error"] = [jnp.zeros_like(b) for b in pack(grads)]
-        return state
-
-    def _uses_ef(self):
-        return (self.cfg.error_feedback and self.cfg.compressor != "none")
-
-    def _init_q(self, g):
+    def _init_q(self, g, compressor_args) -> jnp.ndarray:
         if g.ndim < 2 or g.size < DENSE_SMALL:
             return jnp.zeros((0,), jnp.float32)
-        rank = dict(self.cfg.compressor_args).get("rank", 4)
+        rank = dict(compressor_args).get("rank", 4)
         n, d = g.shape[0], int(np.prod(g.shape[1:]))
         r = min(rank, n, d)
         return jax.random.normal(jax.random.PRNGKey(g.ndim * 7919 + d),
                                  (d, r), jnp.float32)
 
+    def init_state(self, grads) -> Dict[str, Any]:
+        leaves = jax.tree.leaves(grads)
+        self._check_cover(len(leaves))
+        state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        errors: List[Optional[jnp.ndarray]] = []
+        qs: List[Optional[jnp.ndarray]] = []
+        for b in self.plan.buckets:
+            if b.compressor == "powersgd":
+                g = leaves[b.leaves[0]]
+                errors.append(jnp.zeros(g.shape, jnp.float32))
+                qs.append(self._init_q(g, b.compressor_args))
+                continue
+            qs.append(None)
+            if not self._bucket_uses_ef(b):
+                errors.append(None)
+            elif b.pack:
+                sz = sum(int(np.prod(leaves[i].shape)) for i in b.leaves)
+                errors.append(jnp.zeros((sz,), jnp.float32))
+            else:
+                g = leaves[b.leaves[0]]
+                errors.append(jnp.zeros(g.shape, jnp.float32))
+        if any(e is not None for e in errors):
+            state["error"] = errors
+        if any(q is not None for q in qs):
+            state["q"] = qs
+        return state
+
     # -- wire statistics (static) ---------------------------------------------
 
     def payload_bits(self, grads) -> int:
         """Bits leaving one rank per step (the survey's comparison metric)."""
-        if self.cfg.compressor == "powersgd":
-            total = 0
-            for g in jax.tree.leaves(grads):
-                total += self.comp.payload_bits(g.shape)
-            return total
-        bucket_defs, pack, _ = bucketize(grads, self.cfg.bucket_bytes)
-        return sum(self.comp.payload_bits((sum(sz for _, sz in b),))
-                   for b in bucket_defs)
+        leaves = jax.tree.leaves(grads)
+        total = 0
+        for b, comp in zip(self.plan.buckets, self.comps):
+            if b.pack and len(b.leaves) > 1:
+                sz = sum(int(np.prod(leaves[i].shape)) for i in b.leaves)
+                total += comp.payload_bits((sz,))
+            else:
+                total += sum(comp.payload_bits(leaves[i].shape)
+                             for i in b.leaves)
+        return total
 
     # -- sync ------------------------------------------------------------------
+
+    def _world(self) -> float:
+        world = 1
+        for ax in self.axes:
+            world *= jax.lax.axis_size(ax)
+        return world
 
     def __call__(self, grads, state, rng):
         """Returns (synced_grads, new_state). Must run with ``self.axes``
         manual (inside shard_map) — or on a single device where the axes
         have size 1 (degenerate, for unit tests)."""
-        cfg = self.cfg
-        world = 1
-        for ax in self.axes:
-            world *= jax.lax.axis_size(ax)
-        denom = float(world) if cfg.mean else 1.0
-
-        if cfg.compressor == "none":
-            synced = jax.tree.map(
-                lambda g: allreduce(g.astype(jnp.float32), cfg.algo, self.axes) / denom,
-                grads)
-            return synced, {**state, "step": state["step"] + 1}
-
-        if cfg.compressor == "powersgd":
-            return self._sync_powersgd(grads, state, denom)
-
-        if cfg.bucket_bytes <= 0:
-            return self._sync_per_leaf(grads, state, rng, denom)
-        return self._sync_bucketed(grads, state, rng, denom)
-
-    # Per-leaf (no packing): leaves keep their shape and TP sharding.
-    def _sync_per_leaf(self, grads, state, rng, denom):
-        cfg = self.cfg
+        plan = self.plan
         leaves, treedef = jax.tree.flatten(grads)
-        errors = (jax.tree.leaves(state["error"]) if self._uses_ef()
-                  else [None] * len(leaves))
-        rngs = jax.random.split(rng, len(leaves))
-        outs, new_errors = [], []
-        for g, e, r in zip(leaves, errors, rngs):
-            gf = g.astype(jnp.float32)
-            corrected = gf + cfg.ef_decay * e if self._uses_ef() else gf
-            payload, meta = self.comp.compress(corrected, r)
-            g_hat = self.comp.decompress(payload, meta)
-            new_errors.append(corrected - g_hat if self._uses_ef() else None)
-            if self.comp.aggregatable:
-                synced = allreduce(g_hat, cfg.algo, self.axes) / denom
+        self._check_cover(len(leaves))
+        denom = float(self._world()) if plan.mean else 1.0
+        nb = len(plan.buckets)
+        rngs = jax.random.split(rng, nb) if nb else []
+        errors = state.get("error", [None] * nb)
+        qs = state.get("q", [None] * nb)
+
+        out: List[Optional[jnp.ndarray]] = [None] * len(leaves)
+        new_errors: List[Optional[jnp.ndarray]] = []
+        new_qs: List[Optional[jnp.ndarray]] = []
+        for j, (b, comp) in enumerate(zip(plan.buckets, self.comps)):
+            if b.compressor == "none":
+                if b.pack and len(b.leaves) > 1:
+                    # fused dense exchange: ONE collective for the bucket —
+                    # what the planner's cost model prices (one α per
+                    # bucket, MG-WFBP)
+                    buf = self._pack_bucket(leaves, b.leaves)
+                    synced = allreduce(buf, b.algo, self.axes) / denom
+                    self._unpack_bucket(synced, leaves, b.leaves, out)
+                else:
+                    # unfused: leaves keep their natural shape (and their
+                    # tensor-parallel sharding)
+                    for i in b.leaves:
+                        out[i] = allreduce(leaves[i].astype(jnp.float32),
+                                           b.algo, self.axes) / denom
+                new_errors.append(errors[j])
+                new_qs.append(qs[j])
+            elif b.compressor == "powersgd":
+                e, q, synced = self._sync_powersgd_leaf(
+                    leaves[b.leaves[0]], errors[j], qs[j], b, comp, denom)
+                out[b.leaves[0]] = synced
+                new_errors.append(e)
+                new_qs.append(q)
+            elif not b.pack:
+                e, synced = self._sync_buffer(
+                    leaves[b.leaves[0]].astype(jnp.float32), errors[j],
+                    rngs[j], b, comp, denom)
+                out[b.leaves[0]] = synced      # f32, leaf-shaped
+                new_errors.append(e)
+                new_qs.append(None)
             else:
-                synced = self._gather_mean(payload, meta, g_hat, denom)
-            outs.append(synced)
-        new_state = {"step": state["step"] + 1}
-        if self._uses_ef():
-            new_state["error"] = jax.tree.unflatten(treedef, new_errors)
-        return jax.tree.unflatten(treedef, outs), new_state
+                buf = self._pack_bucket(leaves, b.leaves)
+                e, synced = self._sync_buffer(buf, errors[j], rngs[j], b,
+                                              comp, denom)
+                self._unpack_bucket(synced, leaves, b.leaves, out)
+                new_errors.append(e)
+                new_qs.append(None)
+
+        new_state: Dict[str, Any] = {"step": state["step"] + 1}
+        if "error" in state:
+            new_state["error"] = new_errors
+        if "q" in state:
+            new_state["q"] = new_qs
+        return jax.tree.unflatten(treedef, out), new_state
+
+    # EF + compress + exchange of one flat/leaf-shaped f32 buffer.
+    def _sync_buffer(self, buf, e, rng, b: BucketPlan, comp, denom):
+        use_ef = self._bucket_uses_ef(b)
+        corrected = buf + b.ef_decay * e if use_ef else buf
+        payload, meta = comp.compress(corrected, rng)
+        g_hat = comp.decompress(payload, meta)
+        new_e = corrected - g_hat if use_ef else e
+        if comp.aggregatable:
+            synced = allreduce(g_hat, b.algo, self.axes) / denom
+        else:
+            synced = self._gather_mean(comp, payload, meta, g_hat, denom)
+        return new_e, synced
 
     # PowerSGD: allreduce the (P, Q) factors directly (aggregatable).
-    def _sync_powersgd(self, grads, state, denom):
-        cfg = self.cfg
-        leaves, treedef = jax.tree.flatten(grads)
-        errs, _ = jax.tree.flatten(state["error"])
-        qs = jax.tree.leaves(state["q"])
-        out, new_e, new_q = [], [], []
-        for g, e, q in zip(leaves, errs, qs):
-            gf = g.astype(jnp.float32)
-            if q.size == 0:  # small leaf: dense allreduce
-                synced = allreduce(gf, cfg.algo, self.axes) / denom
-                out.append(synced.astype(g.dtype))
-                new_e.append(e)
-                new_q.append(q)
-                continue
-            corrected = gf + cfg.ef_decay * e
-            (p_f, q_f), (shape, _) = self.comp.compress(corrected, q_prev=q)
-            p_f = allreduce(p_f, cfg.algo, self.axes) / denom
-            q_f = allreduce(q_f, cfg.algo, self.axes) / denom
-            approx = self.comp.decompress((p_f, q_f), (shape, None))
-            new_e.append(corrected - approx)
-            new_q.append(q_f)
-            out.append(approx.astype(g.dtype))
-        return (jax.tree.unflatten(treedef, out),
-                {"step": state["step"] + 1,
-                 "error": jax.tree.unflatten(treedef, new_e),
-                 "q": jax.tree.unflatten(treedef, new_q)})
+    def _sync_powersgd_leaf(self, g, e, q, b: BucketPlan, comp, denom):
+        gf = g.astype(jnp.float32)
+        if q.size == 0:  # small leaf: dense allreduce
+            synced = allreduce(gf, b.algo, self.axes) / denom
+            return e, q, synced.astype(g.dtype)
+        corrected = gf + b.ef_decay * e
+        (p_f, q_f), (shape, _) = comp.compress(corrected, q_prev=q)
+        p_f = allreduce(p_f, b.algo, self.axes) / denom
+        q_f = allreduce(q_f, b.algo, self.axes) / denom
+        approx = comp.decompress((p_f, q_f), (shape, None))
+        return corrected - approx, q_f, approx.astype(g.dtype)
 
-    # Quantizers / sparsifiers: bucket, EF, compress, all-gather, average.
-    def _sync_bucketed(self, grads, state, rng, denom):
-        cfg = self.cfg
-        _, pack, unpack = bucketize(grads, cfg.bucket_bytes)
-        bufs = pack(grads)
-        errors = state.get("error", [jnp.zeros_like(b) for b in bufs])
-        rngs = jax.random.split(rng, len(bufs))
-        synced_bufs, new_errors = [], []
-        for buf, e, r in zip(bufs, errors, rngs):
-            corrected = buf + cfg.ef_decay * e if self._uses_ef() else buf
-            payload, meta = self.comp.compress(corrected, r)
-            g_hat = self.comp.decompress(payload, meta)
-            new_errors.append(corrected - g_hat if self._uses_ef() else e)
-            if self.comp.aggregatable:
-                synced = allreduce(g_hat, cfg.algo, self.axes) / denom
-            else:
-                synced = self._gather_mean(payload, meta, g_hat, denom)
-            synced_bufs.append(synced)
-        new_state = {"step": state["step"] + 1}
-        if self._uses_ef():
-            new_state["error"] = new_errors
-        return unpack(synced_bufs), new_state
-
-    def _gather_mean(self, payload, meta, g_hat, denom):
+    def _gather_mean(self, comp, payload, meta, g_hat, denom):
         """All-gather the compact payloads over the data axes; every rank
         decompresses and averages (1-bit SGD / DGC wire pattern).  Payload
         pytrees are gathered leaf-wise so the wire carries int8/indices,
@@ -276,17 +377,56 @@ class GradientSynchronizer:
 
         gathered_payload = jax.tree.map(gather, payload)
         gathered_meta = jax.tree.map(gather, meta) if meta is not None else None
-        world = 1
-        for ax in self.axes:
-            world *= jax.lax.axis_size(ax)
+        world = self._world()
 
         def one(i):
             pl = jax.tree.map(lambda x: index(x, i), gathered_payload)
             mt = (jax.tree.map(lambda x: index(x, i), gathered_meta)
                   if gathered_meta is not None else None)
-            return self.comp.decompress(pl, mt)
+            return comp.decompress(pl, mt)
 
         total = jax.lax.fori_loop(
             0, world, lambda i, acc: acc + one(i),
             jnp.zeros(g_hat.shape, jnp.float32))
         return total / denom
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-config front-end (degenerate one-strategy plan)
+# ---------------------------------------------------------------------------
+
+class GradientSynchronizer:
+    """Single global ``SyncConfig`` applied to every bucket — now a thin
+    wrapper that lowers the config to a degenerate ``CommPlan`` (one strategy
+    everywhere) and lets ``PlanExecutor`` run it.  Kept because a fixed
+    config is the right tool when you already know the answer (benchmarks,
+    ablations) and as the API every existing caller/test uses."""
+
+    def __init__(self, cfg: SyncConfig, axes: Sequence[str]):
+        self.cfg = cfg
+        self.axes = tuple(axes)
+        # eager validation (unknown compressor/args fail at construction,
+        # not at the first traced call) + the legacy public attribute
+        self.comp = cfg.make_compressor()
+        self._executor: Optional[PlanExecutor] = None
+        self._plan_key = None
+
+    def _exec_for(self, grads) -> PlanExecutor:
+        # plans depend on tree structure AND leaf shapes (bucketize)
+        key = (jax.tree.structure(grads),
+               tuple(g.shape for g in jax.tree.leaves(grads)))
+        if self._executor is None or key != self._plan_key:
+            self._executor = PlanExecutor(plan_from_config(self.cfg, grads),
+                                          self.axes)
+            self._plan_key = key
+        return self._executor
+
+    def init_state(self, grads) -> Dict[str, Any]:
+        return self._exec_for(grads).init_state(grads)
+
+    def payload_bits(self, grads) -> int:
+        """Bits leaving one rank per step (the survey's comparison metric)."""
+        return self._exec_for(grads).payload_bits(grads)
+
+    def __call__(self, grads, state, rng):
+        return self._exec_for(grads)(grads, state, rng)

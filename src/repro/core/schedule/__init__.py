@@ -1,4 +1,11 @@
+from repro.core.schedule.cost import (  # noqa: F401
+    LINK_PRESETS, LinkParams, allgather_cost_s, allreduce_cost_s,
+    bucket_sync_cost_s, compressed_wire_bytes)
 from repro.core.schedule.perf_model import (  # noqa: F401
     LayerProfile, comm_time, iteration_time_fifo, iteration_time_wfbp,
     iteration_time_mg_wfbp, iteration_time_p3, iteration_time_tic,
     iteration_time_tac, wfbp_case)
+from repro.core.schedule.planner import (  # noqa: F401
+    BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
+    DENSE_SMALL_BYTES, fixed_config_plan, plan, plan_cost_s,
+    profiles_from_grads, profiles_from_sizes)

@@ -1,0 +1,125 @@
+"""α-β (latency-bandwidth) communication cost model (survey §4.1/§4.3).
+
+This module is the single home of the analytic cost model: the survey's
+Fig. 10/12 comparisons and the §4.3 protocol study are parameter sweeps over
+it, and the communication planner (``schedule/planner.py``) uses it as the
+objective when choosing a per-bucket sync strategy.  It used to live inside
+``collectives/api.py``; the dispatch module re-exports it for compatibility.
+
+Message libraries and protocols (§4.2/§4.3) appear only through their α
+(per-message latency) and β (inverse bandwidth) parameters — on TPU the
+"protocol" layer is ICI and lives below XLA (DESIGN.md §5).
+
+Costs for *compressed* exchanges are priced at the survey's wire metric —
+``Compressor.payload_bits`` — i.e. the bytes an ideal message library would
+move.  See DESIGN.md §5 for how the reference executor realises each wire
+pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkParams:
+    alpha_s: float = 1e-6       # per-message latency (s)
+    beta_s_per_byte: float = 1.0 / 50e9   # inverse link bandwidth (s/B)
+
+
+# Canonical network regimes (survey Fig. 8/10/12 sweeps).  Benchmarks and the
+# planner share these so the "fast_ici" of one table is the "fast_ici" of
+# another — previously each bench re-typed its own (α, β) literals.
+LINK_PRESETS: Dict[str, LinkParams] = {
+    "fast_ici": LinkParams(alpha_s=1e-6, beta_s_per_byte=1 / 50e9),
+    "datacenter": LinkParams(alpha_s=5e-6, beta_s_per_byte=1 / 10e9),
+    "commodity": LinkParams(alpha_s=50e-6, beta_s_per_byte=1 / 1.25e9),
+}
+
+
+def allreduce_cost_s(algo: str, n_bytes: float, p: int, link: LinkParams,
+                     k: Optional[int] = None) -> float:
+    """Predicted wall time of one allreduce of n_bytes over p ranks.
+
+    ring:          2(p-1) steps of n/p bytes
+    tree (PS):     2 log2(p) steps of n bytes
+    hierarchical:  intra ring over k + inter ring over p/k on n/k shards
+                   (Jia et al.: 4(k-1) + 2(p/k - 1) steps)
+    mesh2d:        two perpendicular ring phases on sqrt(p) ranks
+    """
+    a, b = link.alpha_s, link.beta_s_per_byte
+    if p <= 1:
+        return 0.0
+    if algo == "ring" or algo == "psum":
+        return 2 * (p - 1) * (a + (n_bytes / p) * b)
+    if algo == "tree":
+        return 2 * np.log2(p) * (a + n_bytes * b)
+    if algo == "hierarchical":
+        k = k or int(np.sqrt(p))
+        inner = 2 * (k - 1) * (a + (n_bytes / k) * b)
+        outer = 2 * (p // k - 1) * (a + (n_bytes / k / (p // k)) * b)
+        return inner + outer + 2 * (k - 1) * a  # broadcast-phase latency
+    if algo in ("mesh2d", "mesh2d_split"):
+        px = int(np.sqrt(p))
+        py = p // px
+        t = (2 * (px - 1) * (a + (n_bytes / px) * b)
+             + 2 * (py - 1) * (a + (n_bytes / px / py) * b))
+        return t / (2 if algo == "mesh2d_split" else 1)
+    raise ValueError(algo)
+
+
+def allgather_cost_s(n_bytes: float, p: int, link: LinkParams) -> float:
+    """Ring all-gather where every rank contributes ``n_bytes``: (p-1) steps
+    each moving one rank's payload (the gather-based compressor wire
+    pattern of 1-bit SGD / DGC, DESIGN.md §5)."""
+    if p <= 1:
+        return 0.0
+    return (p - 1) * (link.alpha_s + n_bytes * link.beta_s_per_byte)
+
+
+def compressed_wire_bytes(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
+                          n_elems: int) -> float:
+    """Per-rank wire bytes for one fused bucket of ``n_elems`` f32 values
+    under ``compressor`` — ``payload_bits`` / 8, the survey's metric."""
+    from repro.core.compression import get_compressor
+    comp = get_compressor(compressor, **dict(compressor_args))
+    return comp.payload_bits((int(n_elems),)) / 8.0
+
+
+# Effective processing bandwidth of the compress/decompress kernels (B/s of
+# dense input).  Compression is NOT free: quantize/top-k are memory-bound
+# passes over the bucket, and pricing them is what makes the planner prefer
+# dense exchanges on fast links (where the α-β savings cannot pay for the
+# extra passes) and compression on slow ones — the survey's Fig. 7/8 story.
+COMPRESS_PROC_BW = 30e9
+
+
+def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
+                       algo: str, n_bytes: float, p: int, link: LinkParams,
+                       proc_bw: float = COMPRESS_PROC_BW) -> float:
+    """Predicted wall time to synchronise ONE fused gradient bucket of
+    ``n_bytes`` (dense f32) across ``p`` ranks with the given strategy.
+
+      * dense ("none"):         one allreduce of n_bytes on ``algo``
+      * aggregatable payloads:  one allreduce of the compressed bytes, plus
+                                one compress + one decompress pass
+      * gather-based payloads:  ring all-gather of the compressed bytes,
+                                plus one compress pass and p per-rank
+                                decompress/accumulate passes over the
+                                compact payloads (the DGC pattern)
+    """
+    if p <= 1:
+        return 0.0
+    if compressor == "none":
+        return allreduce_cost_s(algo, n_bytes, p, link)
+    from repro.core.compression import get_compressor
+    comp = get_compressor(compressor, **dict(compressor_args))
+    n_elems = int(n_bytes // 4)
+    c_bytes = comp.payload_bits((max(n_elems, 1),)) / 8.0
+    if comp.aggregatable:
+        return (allreduce_cost_s(algo, c_bytes, p, link)
+                + 2 * n_bytes / proc_bw)
+    return (allgather_cost_s(c_bytes, p, link)
+            + (n_bytes + p * c_bytes) / proc_bw)

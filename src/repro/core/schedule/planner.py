@@ -1,0 +1,309 @@
+"""Communication planner: per-bucket auto-tuned sync strategies (§3.3 + §4.1).
+
+The survey's central observation is that the best communication strategy is a
+function of message size, topology, and link parameters — compression wins on
+slow links and big tensors, latency-optimal collectives win on small messages,
+and the right fusion granularity (MG-WFBP, Shi et al. 2019) depends on the
+α/β balance.  This module closes that loop: it turns the α-β cost model
+(``schedule/cost.py``) and the WFBP overlap simulation (``schedule/
+perf_model.py``) from analysis-only code into the runtime's decision engine.
+
+A ``CommPlan`` is an ordered list of ``BucketPlan`` entries, each naming the
+gradient leaves it fuses plus the (compressor × collective algo) pair chosen
+for that bucket.  ``plan()`` searches candidate strategies per bucket across
+a grid of fusion granularities and keeps the granularity whose simulated
+iteration time (backward-overlap aware, generalised MG-WFBP) is smallest.
+``repro.core.grad_sync.PlanExecutor`` executes the result; DESIGN.md §6
+documents the schema and the ``--sync auto`` flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.schedule.cost import LinkParams, bucket_sync_cost_s
+from repro.core.schedule.perf_model import LayerProfile
+
+# Buckets smaller than this stay dense: at these sizes the exchange is
+# latency-bound, so compression saves nothing and only adds bias (the
+# survey's "small tensors are free" observation; also PowerSGD's dense
+# fallback for non-matrix leaves).
+DENSE_SMALL_BYTES = 64 * 1024
+
+# Fusion granularities searched by ``plan`` (f32 bytes).  0 is excluded —
+# per-leaf plans come out of the 1 MiB entry naturally when leaves are big.
+BUCKET_GRID = tuple(int(m * 2**20) for m in (1, 4, 16, 32, 64, 256))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One (compressor × algo) strategy the planner may assign to a bucket."""
+    compressor: str = "none"
+    compressor_args: Tuple[Tuple[str, Any], ...] = ()
+    algo: str = "psum"
+
+    @property
+    def key(self) -> str:
+        return f"{self.algo}/{self.compressor}"
+
+
+# The fixed single-strategy baselines the auto plan is held against (the
+# acceptance criterion) — shared by launch/train.py's printed table/assert
+# and benchmarks/bench_planner.py so they always compare the same configs.
+# Every entry must stay inside DEFAULT_CANDIDATES for the planner's
+# uniform-plan sweep to guarantee auto <= fixed.
+FIXED_BASELINES: Dict[str, Tuple[str, str, Tuple[Tuple[str, Any], ...]]] = {
+    "psum/dense": ("none", "psum", ()),
+    "ring/topk": ("topk", "ring", (("ratio", 0.01),)),
+    "ring/int8": ("int8", "ring", ()),
+}
+
+DEFAULT_CANDIDATES: Tuple[Candidate, ...] = (
+    Candidate("none", (), "psum"),
+    Candidate("none", (), "ring"),
+    Candidate("none", (), "tree"),
+    Candidate("none", (), "hierarchical"),
+    Candidate("int8", (), "ring"),
+    Candidate("int8", (), "tree"),          # latency-bound slow links
+    Candidate("qsgd", (("levels", 127),), "ring"),
+    Candidate("qsgd", (("levels", 127),), "tree"),
+    Candidate("topk", (("ratio", 0.01),), "ring"),
+    Candidate("sign", (), "ring"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Sync strategy for one fused gradient bucket.
+
+    ``leaves`` are indices into the flattened gradient pytree, listed in the
+    order they are packed.  ``pack=False`` buckets hold exactly one leaf and
+    operate on it in its natural shape (no flatten/concat) so tensor-parallel
+    sharding and shape-aware compressors (PowerSGD) survive.
+    """
+    leaves: Tuple[int, ...]
+    compressor: str = "none"
+    compressor_args: Tuple[Tuple[str, Any], ...] = ()
+    algo: str = "psum"
+    bucket_bytes: int = 0          # dense f32 bytes fused in this bucket
+    pack: bool = True
+    error_feedback: bool = True
+    ef_decay: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """An ordered per-bucket communication schedule (DESIGN.md §6)."""
+    buckets: Tuple[BucketPlan, ...]
+    mean: bool = True              # divide by world size after reduce
+    modeled_step_s: float = float("nan")   # simulated iteration time
+    world: int = 1
+    link: Optional[LinkParams] = None
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def describe(self) -> str:
+        rows = []
+        for j, b in enumerate(self.buckets):
+            rows.append(f"bucket {j}: {len(b.leaves)} leaves, "
+                        f"{b.bucket_bytes / 2**20:.2f} MiB, "
+                        f"{b.algo}/{b.compressor}")
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+def profiles_from_sizes(leaf_bytes: Sequence[float],
+                        t_backward_s: float) -> List[LayerProfile]:
+    """LayerProfiles in *leaf (tree) order* from per-leaf gradient bytes and
+    a measured total backward time, apportioned proportionally to bytes (the
+    profiling granularity ``--sync auto`` actually has — XLA fuses the real
+    per-layer times away)."""
+    total = float(sum(leaf_bytes)) or 1.0
+    return [LayerProfile(t_backward_s=t_backward_s * (b / total),
+                         grad_bytes=float(b))
+            for b in leaf_bytes]
+
+
+def profiles_from_grads(grads, t_backward_s: float) -> List[LayerProfile]:
+    """Like :func:`profiles_from_sizes`, from a gradient (or param) pytree /
+    an ``eval_shape`` of one."""
+    import jax
+    import numpy as np
+    sizes = [int(np.prod(g.shape)) * 4 for g in jax.tree.leaves(grads)]
+    return profiles_from_sizes(sizes, t_backward_s)
+
+
+# ---------------------------------------------------------------------------
+# Plan simulation (generalised MG-WFBP with per-bucket strategies)
+# ---------------------------------------------------------------------------
+
+def _bucket_cost_s(b: BucketPlan, world: int, link: LinkParams) -> float:
+    return bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
+                              b.bucket_bytes, world, link)
+
+
+def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
+                link: LinkParams, world: int) -> float:
+    """Simulated iteration time of ``plan`` on one shared link.
+
+    Backward produces leaf gradients last-layer-first (WFBP); a bucket is
+    ready when its last-produced leaf exists; ready buckets go out on the
+    link in readiness order.  This is ``iteration_time_mg_wfbp`` generalised
+    to heterogeneous per-bucket communication costs."""
+    n = len(layers)
+    produce_at = [0.0] * n
+    t = 0.0
+    for i in reversed(range(n)):          # backward order: leaf n-1 first
+        t += layers[i].t_backward_s
+        produce_at[i] = t
+    t_total = t
+
+    events = sorted(
+        (max(produce_at[i] for i in b.leaves), j)
+        for j, b in enumerate(plan.buckets))
+    link_free = 0.0
+    for ready, j in events:
+        start = max(ready, link_free)
+        link_free = start + _bucket_cost_s(plan.buckets[j], world, link)
+    return max(t_total, link_free)
+
+
+# ---------------------------------------------------------------------------
+# The search
+# ---------------------------------------------------------------------------
+
+def form_bucket_indices(leaf_bytes: Sequence[float],
+                        bucket_bytes: float) -> List[Tuple[int, ...]]:
+    """THE greedy tensor-fusion rule, shared by ``grad_sync.bucketize`` and
+    the planner (the auto-vs-fixed comparison is only valid while both form
+    identical bucket boundaries): walk leaves in backward order (reversed),
+    close the current bucket when adding the next leaf would exceed
+    ``bucket_bytes``; ``bucket_bytes <= 0`` means one bucket per leaf."""
+    order = list(range(len(leaf_bytes)))[::-1]
+    buckets: List[Tuple[int, ...]] = []
+    cur: List[int] = []
+    cur_bytes = 0.0
+    for i in order:
+        sz = leaf_bytes[i]
+        if cur and (bucket_bytes <= 0 or cur_bytes + sz > bucket_bytes):
+            buckets.append(tuple(cur))
+            cur, cur_bytes = [], 0.0
+        cur.append(i)
+        cur_bytes += sz
+    if cur:
+        buckets.append(tuple(cur))
+    return buckets
+
+
+def _form_buckets(layers: Sequence[LayerProfile],
+                  bucket_bytes: int) -> List[Tuple[int, ...]]:
+    return form_bucket_indices([l.grad_bytes for l in layers], bucket_bytes)
+
+
+def _pick_candidate(n_bytes: float, world: int, link: LinkParams,
+                    candidates: Sequence[Candidate],
+                    dense_small_bytes: float) -> Tuple[Candidate, float]:
+    """Cheapest strategy for one bucket; small/latency-bound buckets fall
+    back to dense (compression cannot help a latency-bound message and its
+    bias is pure loss there)."""
+    pool = candidates
+    if n_bytes < dense_small_bytes:
+        pool = [c for c in candidates if c.compressor == "none"] \
+            or list(candidates)
+    best, best_cost = None, float("inf")
+    for c in pool:
+        cost = bucket_sync_cost_s(c.compressor, c.compressor_args, c.algo,
+                                  n_bytes, world, link)
+        if cost < best_cost:
+            best, best_cost = c, cost
+    return best, best_cost
+
+
+def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
+         candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+         bucket_grid: Sequence[int] = BUCKET_GRID,
+         dense_small_bytes: float = DENSE_SMALL_BYTES,
+         mean: bool = True) -> CommPlan:
+    """Search (compressor × algo × fusion granularity) per bucket.
+
+    ``layer_profiles`` must be in leaf (tree) order — index i is flattened
+    leaf i; backward produces them in reverse, like ``bucketize``.  Returns
+    the plan with the smallest simulated iteration time; ``modeled_step_s``
+    carries that time so callers can compare against fixed configurations.
+    """
+    if world <= 1:
+        # Degenerate world: communication is free; one dense bucket.
+        buckets = (BucketPlan(
+            leaves=tuple(range(len(layer_profiles)))[::-1],
+            compressor="none", algo="psum",
+            bucket_bytes=int(sum(l.grad_bytes for l in layer_profiles))),)
+        t = sum(l.t_backward_s for l in layer_profiles)
+        return CommPlan(buckets=buckets, mean=mean, modeled_step_s=t,
+                        world=world, link=link)
+
+    best_plan: Optional[CommPlan] = None
+
+    def consider(p: CommPlan):
+        nonlocal best_plan
+        t = plan_cost_s(p, layer_profiles, link, world)
+        if best_plan is None or t < best_plan.modeled_step_s:
+            best_plan = dataclasses.replace(p, modeled_step_s=t)
+
+    for bb in bucket_grid:
+        bucket_leaves = _form_buckets(layer_profiles, bb)
+        sizes = [sum(layer_profiles[i].grad_bytes for i in leaves)
+                 for leaves in bucket_leaves]
+        # heterogeneous plan: cheapest strategy per bucket, small buckets
+        # falling back to dense
+        bps = []
+        for leaves, n_bytes in zip(bucket_leaves, sizes):
+            cand, _ = _pick_candidate(n_bytes, world, link, candidates,
+                                      dense_small_bytes)
+            bps.append(BucketPlan(
+                leaves=leaves, compressor=cand.compressor,
+                compressor_args=cand.compressor_args, algo=cand.algo,
+                bucket_bytes=int(n_bytes)))
+        consider(CommPlan(buckets=tuple(bps), mean=mean, world=world,
+                          link=link))
+        # uniform plans: one candidate everywhere — exactly the plan a fixed
+        # SyncConfig induces.  Including them in the min GUARANTEES the
+        # returned plan is never modeled slower than any fixed config built
+        # from the candidate set at a granularity in the grid.  (In corner
+        # cases — e.g. a model whose every bucket is latency-bound — a
+        # uniform compressed plan can shave a few α off the heterogeneous
+        # dense-fallback plan and win; the fallback is a preference of the
+        # per-bucket search, not a hard constraint on the final min.)
+        for cand in candidates:
+            consider(CommPlan(buckets=tuple(
+                BucketPlan(leaves=leaves, compressor=cand.compressor,
+                           compressor_args=cand.compressor_args,
+                           algo=cand.algo, bucket_bytes=int(n_bytes))
+                for leaves, n_bytes in zip(bucket_leaves, sizes)),
+                mean=mean, world=world, link=link))
+    return best_plan
+
+
+def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
+                      link: LinkParams, world: int, compressor: str,
+                      algo: str,
+                      compressor_args: Tuple[Tuple[str, Any], ...] = (),
+                      bucket_bytes: int = 32 * 2**20,
+                      mean: bool = True) -> CommPlan:
+    """The degenerate plan a single global ``SyncConfig`` induces — every
+    bucket gets the same strategy.  Used to score fixed baselines with the
+    same simulator the planner optimises."""
+    bps = []
+    for leaves in _form_buckets(layer_profiles, bucket_bytes):
+        n_bytes = sum(layer_profiles[i].grad_bytes for i in leaves)
+        bps.append(BucketPlan(
+            leaves=leaves, compressor=compressor,
+            compressor_args=compressor_args, algo=algo,
+            bucket_bytes=int(n_bytes)))
+    p = CommPlan(buckets=tuple(bps), mean=mean, world=world, link=link)
+    return dataclasses.replace(
+        p, modeled_step_s=plan_cost_s(p, layer_profiles, link, world))

@@ -29,8 +29,7 @@ from repro.launch.steps import make_decode_step, make_prefill_step, make_train_s
 from repro.models import Model
 from repro.optim import make_optimizer
 
-ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                         "artifacts", "dryrun")
+from repro.launch.paths import ARTIFACTS  # noqa: E402
 
 
 def _named(mesh, tree):

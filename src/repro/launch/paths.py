@@ -1,0 +1,16 @@
+"""Shared artifact locations.
+
+Import-safe by construction: ``dryrun.py`` must set XLA_FLAGS (512 fake host
+devices) before jax initializes, so nothing that merely needs these paths may
+import ``dryrun`` — reporting tools importing ``dryrun.ARTIFACTS`` used to
+silently drag a 512-device CPU backend into training processes.
+"""
+from __future__ import annotations
+
+import os
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+
+ARTIFACTS = os.path.join(_ROOT, "artifacts", "dryrun")
+COMM_PLANS = os.path.join(_ROOT, "artifacts", "comm_plans")
+EXPERIMENTS = os.path.join(_ROOT, "EXPERIMENTS.md")

@@ -9,12 +9,9 @@ import os
 import re
 
 from repro.configs import SHAPES, get_config
-from repro.launch.dryrun import ARTIFACTS
+from repro.launch.paths import ARTIFACTS, EXPERIMENTS
 from repro.launch.roofline import (NOTES, load_records, model_flops_per_device,
                                    render_table, terms)
-
-EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                           "EXPERIMENTS.md")
 
 
 def dryrun_table() -> str:
@@ -72,6 +69,70 @@ def variants_table() -> str:
             f"{rec['hlo']['dot_flops_per_device']/1e12:.3f} | "
             f"{wire/1e9:.3f} | {hbm:.1f} | {delta} |")
     return "\n".join(lines)
+
+
+def render_comm_plan(plan, baselines=None, t_backward_s=None) -> str:
+    """Markdown rendering of a ``CommPlan`` (``--sync auto``, DESIGN.md §6):
+    one row per bucket plus the modeled iteration time next to the fixed
+    baselines the planner had to beat."""
+    from repro.core.schedule.cost import bucket_sync_cost_s
+
+    world, link = plan.world, plan.link
+    lines = ["### Communication plan (auto-tuned)", ""]
+    if link is not None:
+        lines.append(f"world={world}, α={link.alpha_s:.2e} s, "
+                     f"β⁻¹={1 / link.beta_s_per_byte / 1e9:.2f} GB/s"
+                     + (f", measured backward {t_backward_s * 1e3:.1f} ms"
+                        if t_backward_s else ""))
+        lines.append("")
+    lines += ["| bucket | leaves | MiB | strategy | modeled comm |",
+              "|---|---|---|---|---|"]
+    for j, b in enumerate(plan.buckets):
+        cost = ""
+        if link is not None:
+            c = bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
+                                   b.bucket_bytes, world, link)
+            cost = f"{c * 1e6:.1f} µs"
+        lines.append(f"| {j} | {len(b.leaves)} | "
+                     f"{b.bucket_bytes / 2**20:.2f} | "
+                     f"{b.algo}/{b.compressor} | {cost} |")
+    lines += ["", f"modeled iteration: {plan.modeled_step_s * 1e3:.3f} ms"]
+    if baselines:
+        lines += ["", "| fixed config | modeled iteration | auto speedup |",
+                  "|---|---|---|"]
+        for name, bp in sorted(baselines.items()):
+            ratio = bp.modeled_step_s / max(plan.modeled_step_s, 1e-12)
+            lines.append(f"| {name} | {bp.modeled_step_s * 1e3:.3f} ms | "
+                         f"{ratio:.2f}× |")
+    return "\n".join(lines)
+
+
+def save_comm_plan(plan, arch: str) -> str:
+    """Write the plan record under artifacts/comm_plans/ (called by the
+    ``--sync auto`` path); returns the file path."""
+    from repro.launch.paths import COMM_PLANS
+    os.makedirs(COMM_PLANS, exist_ok=True)
+    path = os.path.join(COMM_PLANS, f"{arch}.json")
+    with open(path, "w") as f:
+        json.dump(comm_plan_record(plan), f, indent=1)
+    return path
+
+
+def comm_plan_record(plan) -> dict:
+    """JSON-serialisable record of a plan (written by ``save_comm_plan``)."""
+    return {
+        "world": plan.world,
+        "modeled_step_s": plan.modeled_step_s,
+        "n_buckets": plan.n_buckets,
+        "buckets": [{
+            "leaves": list(b.leaves),
+            "bytes": b.bucket_bytes,
+            "compressor": b.compressor,
+            "compressor_args": dict(b.compressor_args),
+            "algo": b.algo,
+            "pack": b.pack,
+        } for b in plan.buckets],
+    }
 
 
 def inject(markdown: str, marker: str, content: str) -> str:

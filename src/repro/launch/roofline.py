@@ -21,7 +21,7 @@ import os
 import numpy as np
 
 from repro.configs import SHAPES, get_config
-from repro.launch.dryrun import ARTIFACTS
+from repro.launch.paths import ARTIFACTS
 from repro.launch.mesh import CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 

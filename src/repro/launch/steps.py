@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import GradientSynchronizer, SyncConfig
+from repro.core import GradientSynchronizer, PlanExecutor, SyncConfig
+from repro.core.schedule.planner import CommPlan
 from repro.models import Model
 from repro.optim import apply_updates, make_optimizer
 
@@ -94,6 +95,25 @@ def make_comm_optimized_train_step(model: Model, optimizer, sync: SyncConfig,
     inside the shard_map body.
     """
     synchronizer = GradientSynchronizer(sync, tuple(data_axes))
+    return _make_synced_train_step(model, optimizer, synchronizer, mesh,
+                                   data_axes)
+
+
+def make_planned_train_step(model: Model, plan: CommPlan, optimizer, mesh,
+                            data_axes: Sequence[str] = ("data",)):
+    """Like :func:`make_comm_optimized_train_step` but driven by a
+    ``CommPlan`` (heterogeneous per-bucket strategies, ``--sync auto``):
+    the PlanExecutor may compress one bucket over an explicit ring while the
+    next goes dense over psum."""
+    executor = PlanExecutor(plan, tuple(data_axes))
+    return _make_synced_train_step(model, optimizer, executor, mesh,
+                                   data_axes)
+
+
+def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
+                            data_axes: Sequence[str]):
+    """Shared shard_map step around any grad-sync engine exposing
+    ``init_state(grads)`` and ``__call__(grads, state, rng)``."""
     world = 1
     for a in data_axes:
         world *= mesh.shape[a]

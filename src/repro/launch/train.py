@@ -4,6 +4,10 @@ Modes (the survey's taxonomy, selectable from the CLI):
   * --sync vanilla                 BSP data-parallel, dense psum (baseline)
   * --sync comm                    GradientSynchronizer: --compressor/--algo/
                                    --bucket-mb/--no-error-feedback
+  * --sync auto                    communication planner: profile one step,
+                                   search per-bucket (compressor x algo x
+                                   fusion) against the --link α-β model,
+                                   then run the planned step (DESIGN.md §6)
   * --local-sgd TAU                periodic model averaging (+ --post-local N)
   * --lag THRESH                   lazily aggregated gradients (host dispatch)
 
@@ -29,9 +33,14 @@ from repro.configs import ALL_ARCHS, get_config, reduced
 from repro.core import (GradientSynchronizer, LAGConfig, LocalSGDConfig,
                         SyncConfig, average_params, init_lag_state,
                         lag_trigger, should_sync)
+from repro.core.schedule import (LINK_PRESETS, LinkParams, fixed_config_plan,
+                                 plan as plan_comm, profiles_from_grads)
+from repro.core.schedule.planner import FIXED_BASELINES
 from repro.data import DataConfig, SyntheticPipeline
 from repro.launch.mesh import data_axes, make_host_mesh
-from repro.launch.steps import make_comm_optimized_train_step, make_train_step
+from repro.launch.report import render_comm_plan, save_comm_plan
+from repro.launch.steps import (make_comm_optimized_train_step,
+                                make_planned_train_step, make_train_step)
 from repro.models import Model
 from repro.models.sharding_ctx import set_mesh_ctx
 from repro.optim import make_optimizer, warmup_cosine
@@ -51,6 +60,63 @@ def build(args):
     return cfg, model, mesh, opt
 
 
+def resolve_link(args) -> LinkParams:
+    link = LINK_PRESETS[args.link]
+    alpha = link.alpha_s if args.alpha is None else args.alpha
+    beta = link.beta_s_per_byte if args.beta_gbps is None \
+        else 1.0 / (args.beta_gbps * 1e9)
+    return LinkParams(alpha_s=alpha, beta_s_per_byte=beta)
+
+
+def plan_for_training(model, params, data, mesh, axes, args):
+    """``--sync auto``: profile one step, then search per-bucket strategies.
+
+    Profiling measures the wall time of one jitted grad step (compile
+    excluded) and apportions it across gradient leaves by size — the
+    granularity we actually have on TPU, where XLA fuses per-layer times
+    away.  The planner then optimizes the simulated WFBP iteration time
+    under the chosen α-β link model; the result is printed through
+    ``report.render_comm_plan`` next to the fixed baselines it must beat.
+    """
+    mesh_world = 1
+    for a in axes:
+        mesh_world *= mesh.shape[a]
+    world = args.plan_world or mesh_world
+    link = resolve_link(args)
+
+    # Profile the PER-DEVICE backward: the planned shard_map step computes
+    # global_batch / mesh_world per device, so time that slice — timing the
+    # full global batch would inflate t_backward by the data-parallel
+    # factor and make the planner over-hide communication.
+    grad_fn = jax.jit(lambda p, b: jax.grad(model.loss)(p, b))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    n_global = jax.tree.leaves(batch)[0].shape[0]
+    per_dev = max(1, n_global // mesh_world)
+    batch = jax.tree.map(lambda x: x[:per_dev], batch)
+    jax.block_until_ready(grad_fn(params, batch))          # compile
+    t0 = time.time()
+    jax.block_until_ready(grad_fn(params, batch))
+    t_backward = (time.time() - t0) * (2.0 / 3.0)  # bwd ≈ 2/3 of grad step
+
+    profiles = profiles_from_grads(params, t_backward)
+    comm_plan = plan_comm(profiles, link, world)
+    baselines = {
+        name: fixed_config_plan(profiles, link, world, comp, algo,
+                                compressor_args=cargs)
+        for name, (comp, algo, cargs) in FIXED_BASELINES.items()}
+    print(render_comm_plan(comm_plan, baselines=baselines,
+                           t_backward_s=t_backward), flush=True)
+    plan_path = save_comm_plan(comm_plan, args.arch)
+    print(f"plan record: {plan_path}", flush=True)
+    best_fixed = min(p.modeled_step_s for p in baselines.values())
+    if comm_plan.modeled_step_s > best_fixed + 1e-12:
+        raise RuntimeError(
+            f"planner regression: auto plan modeled "
+            f"{comm_plan.modeled_step_s:.6f}s > best fixed baseline "
+            f"{best_fixed:.6f}s")
+    return comm_plan
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, default="xlstm-125m")
@@ -64,11 +130,21 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="adam",
                     choices=["sgd", "adam", "lars", "lamb"])
     ap.add_argument("--data-parallel", type=int, default=0)
-    ap.add_argument("--sync", default="vanilla", choices=["vanilla", "comm"])
+    ap.add_argument("--sync", default="vanilla",
+                    choices=["vanilla", "comm", "auto"])
     ap.add_argument("--compressor", default="none")
     ap.add_argument("--algo", default="psum")
     ap.add_argument("--bucket-mb", type=float, default=32.0)
     ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--link", default="fast_ici", choices=sorted(LINK_PRESETS),
+                    help="α-β regime the planner optimizes for (--sync auto)")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="override link latency α in seconds (--sync auto)")
+    ap.add_argument("--beta-gbps", type=float, default=None,
+                    help="override link bandwidth in GB/s (--sync auto)")
+    ap.add_argument("--plan-world", type=int, default=0,
+                    help="plan for this world size instead of the mesh's "
+                         "(model a pod from a laptop)")
     ap.add_argument("--local-sgd", type=int, default=0, metavar="TAU")
     ap.add_argument("--post-local", type=int, default=0)
     ap.add_argument("--lag", type=float, default=0.0, metavar="THRESH")
@@ -97,6 +173,24 @@ def main(argv=None):
             model, opt, sync_cfg, mesh, axes)
         sync_state = init_sync_state(params)
         jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    elif args.sync == "auto":
+        ignored = []
+        if args.compressor != "none":
+            ignored.append("--compressor")
+        if args.algo != "psum":
+            ignored.append("--algo")
+        if args.bucket_mb != 32.0:
+            ignored.append("--bucket-mb")
+        if args.no_error_feedback:
+            ignored.append("--no-error-feedback")
+        if ignored:
+            print(f"warning: --sync auto chooses per-bucket strategies; "
+                  f"ignoring {', '.join(ignored)}", flush=True)
+        comm_plan = plan_for_training(model, params, data, mesh, axes, args)
+        step_fn, executor, init_sync_state = make_planned_train_step(
+            model, comm_plan, opt, mesh, axes)
+        sync_state = init_sync_state(params)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
     else:
         base = make_train_step(model, opt)
         jit_step = jax.jit(base, donate_argnums=(0, 1))
@@ -120,7 +214,7 @@ def main(argv=None):
     for step in range(args.steps):
         batch = jax.tree.map(jnp.asarray, data.batch(step))
         step_i = jnp.asarray(step, jnp.int32)
-        if args.sync == "comm":
+        if args.sync in ("comm", "auto"):
             params, opt_state, sync_state, loss = jit_step(
                 params, opt_state, sync_state, batch, step_i,
                 jax.random.fold_in(rng, step))

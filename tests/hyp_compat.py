@@ -1,0 +1,38 @@
+"""hypothesis-or-stub (satellite of the planner PR; see requirements-dev.txt).
+
+``from hyp_compat import given, settings, st`` gives test modules the real
+hypothesis API when it is installed.  When it is not (the seed container),
+``given`` becomes a skip-marking decorator and ``st`` a chainable stub, so
+module-level strategy expressions still evaluate and the module's
+NON-property tests keep running instead of the whole file being skipped.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategy:
+        """Absorbs any attribute access / call chain at module import."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StubStrategy()
+
+    def given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (requirements-dev.txt)")(fn)
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn

@@ -52,6 +52,7 @@ def test_grad_sync_single_device_degenerate():
 
 
 def test_bucketize_roundtrip():
+    pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
     import hypothesis.strategies as st
     from hypothesis import given, settings
 

@@ -2,13 +2,12 @@
 invariants: quantizer reconstruction bounds, unbiasedness of stochastic
 schemes, error-feedback contraction over steps, top-k selection, PowerSGD
 exactness on low-rank inputs."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from hyp_compat import given, settings, st
 
 from repro.core.compression import (apply_with_feedback, get_compressor)
 

@@ -1,9 +1,9 @@
 """WFBP/MG-WFBP/P3 analytic overlap model (survey §3.3, Fig. 8) — property
 tests with hypothesis."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from hyp_compat import given, settings, st
 
 from repro.core.schedule import (LayerProfile, iteration_time_fifo,
                                  iteration_time_mg_wfbp, iteration_time_p3,

@@ -1,0 +1,266 @@
+"""Communication planner (schedule/planner.py) + PlanExecutor (grad_sync).
+
+Covers: plan/execute equivalence (the degenerate one-strategy plan must
+reproduce the legacy GradientSynchronizer output bit-for-bit), planner
+monotonicity in the link parameters (higher β -> more compression, higher
+α -> fewer/larger buckets), the auto-plan-beats-fixed-configs guarantee,
+and a heterogeneous-plan round-trip under shard_map.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GradientSynchronizer, PlanExecutor, SyncConfig,
+                        plan_from_config)
+from repro.core.schedule import (LINK_PRESETS, LayerProfile, LinkParams,
+                                 fixed_config_plan, plan, plan_cost_s,
+                                 profiles_from_grads)
+from repro.core.schedule.planner import BucketPlan, CommPlan
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _grads():
+    return {"w1": jax.random.normal(RNG, (64, 32)),
+            "b1": jax.random.normal(jax.random.PRNGKey(1), (33,)),
+            "w2": jax.random.normal(jax.random.PRNGKey(2), (128, 16))}
+
+
+# ---------------------------------------------------------------------------
+# Plan/execute equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(compressor="none", algo="psum"),
+    dict(compressor="int8", algo="ring"),
+    dict(compressor="int8", algo="ring", bucket_bytes=0),
+    dict(compressor="topk", algo="ring", compressor_args=(("ratio", 0.1),),
+         bucket_bytes=2048),
+    dict(compressor="qsgd", algo="ring"),
+    dict(compressor="sign", algo="ring", bucket_bytes=512),
+    dict(compressor="powersgd", algo="ring", compressor_args=(("rank", 2),)),
+])
+def test_one_entry_plan_equals_legacy_synchronizer(kw):
+    """PlanExecutor on the degenerate plan == GradientSynchronizer,
+    bit-for-bit, including EF state over multiple steps."""
+    grads = _grads()
+    cfg = SyncConfig(**kw)
+    sync = GradientSynchronizer(cfg, ())
+    ex = PlanExecutor(plan_from_config(cfg, grads), ())
+
+    st_s, st_e = sync.init_state(grads), ex.init_state(grads)
+    assert sorted(st_s.keys()) == sorted(st_e.keys())
+    for step in range(3):
+        r = jax.random.fold_in(jax.random.PRNGKey(7), step)
+        out_s, st_s = sync(grads, st_s, r)
+        out_e, st_e = ex(grads, st_e, r)
+        for k in grads:
+            a, b = np.asarray(out_s[k]), np.asarray(out_e[k])
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(a, b, err_msg=f"{kw} leaf {k}")
+    assert sync.payload_bits(grads) == ex.payload_bits(grads)
+
+
+def test_one_entry_plan_equivalence_under_shard_map():
+    """Same equivalence inside a (1-device) shard_map — the production
+    calling convention."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    grads = _grads()
+    cfg = SyncConfig(compressor="int8", algo="ring", bucket_bytes=4096)
+    sync = GradientSynchronizer(cfg, ("data",))
+    ex = PlanExecutor(plan_from_config(cfg, grads), ("data",))
+
+    def run(engine):
+        def body(g, rng):
+            st = engine.init_state(g)
+            out, st2 = engine(g, st, rng)
+            return out
+        f = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                          axis_names={"data"}, check_vma=False)
+        return jax.jit(f)(grads, jax.random.PRNGKey(3))
+
+    out_s, out_e = run(sync), run(ex)
+    for k in grads:
+        np.testing.assert_array_equal(np.asarray(out_s[k]),
+                                      np.asarray(out_e[k]))
+
+
+def test_heterogeneous_plan_round_trip_shard_map():
+    """A plan mixing dense psum, packed int8/ring, and per-leaf topk executes
+    under shard_map; with world=1 the synced grads must equal the local
+    compressor round-trip (and the dense bucket must be exact)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    grads = _grads()
+    leaves = jax.tree.leaves(grads)  # order: b1, w1, w2 (dict sorts keys)
+    comm_plan = CommPlan(buckets=(
+        BucketPlan(leaves=(0,), compressor="none", algo="psum",
+                   bucket_bytes=4 * leaves[0].size),
+        BucketPlan(leaves=(1,), compressor="int8", algo="ring",
+                   bucket_bytes=4 * leaves[1].size, pack=True),
+        BucketPlan(leaves=(2,), compressor="topk",
+                   compressor_args=(("ratio", 0.25),), algo="ring",
+                   bucket_bytes=4 * leaves[2].size, pack=False),
+    ))
+    ex = PlanExecutor(comm_plan, ("data",))
+
+    def body(g, rng):
+        st = ex.init_state(g)
+        out, st2 = ex(g, st, rng)
+        return out, st2["step"]
+
+    f = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                      out_specs=(P(), P()),
+                      axis_names={"data"}, check_vma=False)
+    out, step = jax.jit(f)(grads, jax.random.PRNGKey(5))
+    assert int(step) == 1
+    out_leaves = jax.tree.leaves(out)
+    # dense bucket: exact
+    np.testing.assert_allclose(np.asarray(out_leaves[0]),
+                               np.asarray(leaves[0]), rtol=1e-6)
+    # compressed buckets: equal to the local round-trip (world=1), finite,
+    # and correlated with the input
+    for i in (1, 2):
+        o = np.asarray(out_leaves[i]).ravel()
+        g = np.asarray(leaves[i]).ravel()
+        assert np.all(np.isfinite(o))
+        corr = np.corrcoef(o, g)[0, 1]
+        assert corr > 0.5, corr
+
+
+# ---------------------------------------------------------------------------
+# Planner search properties
+# ---------------------------------------------------------------------------
+
+def _profiles(n_layers=12, grad_mb=4.0, t_layer=2e-4):
+    return [LayerProfile(t_backward_s=t_layer, grad_bytes=grad_mb * 2**20)
+            for _ in range(n_layers)]
+
+
+def test_higher_beta_picks_more_compression():
+    """As bandwidth shrinks (β grows), the planned wire bytes must not grow —
+    and on a slow link the planner must actually compress something."""
+    profs = _profiles()
+    world = 64
+
+    def wire_bytes(p):
+        from repro.core.schedule.cost import compressed_wire_bytes
+        return sum(compressed_wire_bytes(b.compressor, b.compressor_args,
+                                         b.bucket_bytes // 4)
+                   for b in p.buckets)
+
+    betas = [1 / 400e9, 1 / 50e9, 1 / 10e9, 1 / 1.25e9]
+    prev = None
+    for beta in betas:
+        link = LinkParams(alpha_s=1e-6, beta_s_per_byte=beta)
+        p = plan(profs, link, world)
+        wb = wire_bytes(p)
+        if prev is not None:
+            assert wb <= prev + 1e-6, (beta, wb, prev)
+        prev = wb
+    slow = plan(profs, LINK_PRESETS["commodity"], world)
+    assert any(b.compressor != "none" for b in slow.buckets)
+
+
+def test_higher_alpha_merges_buckets():
+    """As per-message latency grows, the planner must not choose MORE
+    (smaller) buckets — merging is how MG-WFBP pays fewer αs."""
+    profs = _profiles(n_layers=24, grad_mb=1.0)
+    world = 64
+    prev = None
+    for alpha in (1e-7, 1e-6, 1e-5, 1e-4, 1e-3):
+        link = LinkParams(alpha_s=alpha, beta_s_per_byte=1 / 50e9)
+        p = plan(profs, link, world)
+        if prev is not None:
+            assert p.n_buckets <= prev + 0, (alpha, p.n_buckets, prev)
+        prev = p.n_buckets
+    assert prev == 1 or prev < 24  # strong latency must have merged
+
+
+def test_auto_plan_never_modeled_slower_than_fixed_configs():
+    """The acceptance guarantee: the planner's modeled iteration time is <=
+    every fixed single-strategy config it knows about, at any granularity in
+    its grid, across link regimes and world sizes."""
+    profs = _profiles(n_layers=16, grad_mb=2.0)
+    fixed = [("none", "psum", ()), ("topk", "ring", (("ratio", 0.01),)),
+             ("int8", "ring", ())]
+    for preset in ("fast_ici", "datacenter", "commodity"):
+        link = LINK_PRESETS[preset]
+        for world in (8, 64, 256):
+            auto = plan(profs, link, world)
+            for comp, algo, cargs in fixed:
+                fp = fixed_config_plan(profs, link, world, comp, algo,
+                                       compressor_args=cargs)
+                assert auto.modeled_step_s <= fp.modeled_step_s + 1e-12, (
+                    preset, world, comp, algo,
+                    auto.modeled_step_s, fp.modeled_step_s)
+
+
+def test_small_buckets_fall_back_to_dense():
+    """The per-bucket selection is dense-restricted below the size threshold
+    (compression cannot beat α there and only adds bias), and on a fast link
+    a mixed model keeps everything dense while STILL differentiating the
+    collective algorithm per bucket (latency-optimal tree for the small
+    bucket, bandwidth-optimal hierarchical for the big ones)."""
+    from repro.core.schedule.planner import (DEFAULT_CANDIDATES,
+                                             _pick_candidate)
+    for world in (8, 64, 256):
+        for regime in ("fast_ici", "datacenter", "commodity"):
+            cand, _ = _pick_candidate(2048, world, LINK_PRESETS[regime],
+                                      DEFAULT_CANDIDATES,
+                                      dense_small_bytes=65536)
+            assert cand.compressor == "none", (world, regime)
+
+    profs = ([LayerProfile(2e-4, 4 * 2**20) for _ in range(12)]
+             + [LayerProfile(1e-5, 1024) for _ in range(4)])
+    p = plan(profs, LINK_PRESETS["fast_ici"], world=64)
+    assert all(b.compressor == "none" for b in p.buckets)
+    algos = {(b.bucket_bytes < 65536, b.algo) for b in p.buckets}
+    assert len({a for _, a in algos}) >= 2, algos  # per-bucket algo choice
+
+
+def test_plan_cost_matches_simulator_for_uniform_dense():
+    """A uniform dense plan's simulated time equals the generalized
+    MG-WFBP simulation with the same bucket boundaries."""
+    from repro.core.schedule.cost import allreduce_cost_s
+    profs = _profiles(n_layers=8, grad_mb=8.0)
+    link = LINK_PRESETS["datacenter"]
+    world = 32
+    fp = fixed_config_plan(profs, link, world, "none", "ring",
+                           bucket_bytes=16 * 2**20)
+    # hand-simulate
+    t, link_free = 0.0, 0.0
+    ready = []
+    produce = {}
+    for i in reversed(range(len(profs))):
+        t += profs[i].t_backward_s
+        produce[i] = t
+    for b in fp.buckets:
+        ready.append(max(produce[i] for i in b.leaves))
+    for r, b in sorted(zip(ready, fp.buckets), key=lambda x: x[0]):
+        start = max(r, link_free)
+        link_free = start + allreduce_cost_s("ring", b.bucket_bytes, world,
+                                             link)
+    expect = max(t, link_free)
+    assert abs(fp.modeled_step_s - expect) < 1e-12
+
+
+def test_profiles_from_grads_order_and_mass():
+    grads = _grads()
+    profs = profiles_from_grads(grads, t_backward_s=1.0)
+    leaves = jax.tree.leaves(grads)
+    assert len(profs) == len(leaves)
+    for p, g in zip(profs, leaves):
+        assert p.grad_bytes == 4 * g.size
+    assert abs(sum(p.t_backward_s for p in profs) - 1.0) < 1e-9
+
+
+def test_world_one_plan_is_single_dense_bucket():
+    profs = _profiles(4)
+    p = plan(profs, LINK_PRESETS["fast_ici"], world=1)
+    assert p.n_buckets == 1
+    assert p.buckets[0].compressor == "none"

@@ -1,11 +1,11 @@
 """chunked_scan equivalence (hypothesis over lengths/chunks), sharding-ctx
 constraint semantics, TIC/TAC schedules, and asymmetric push/pull."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from hyp_compat import given, settings, st
 
 from repro.models.scan_utils import chunked_scan
 
@@ -59,6 +59,7 @@ def test_constrain_divisibility_guard():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
+import repro.compat  # installs AxisType/shard_map shims on old JAX
 from jax.sharding import AxisType
 from repro.models.sharding_ctx import constrain, constrain_hard, mesh_ctx
 mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
