@@ -19,9 +19,12 @@ python examples/quickstart.py
 
 if [[ "${1:-}" != "--fast" ]]; then
   echo "=== smoke: 5-step --sync auto train (reduced xlstm-125m) ==="
+  # --plan-backward-ms models a TPU backward so the rounds axis is live on
+  # CPU (the measured CPU backward would dwarf modeled comm and pin the
+  # planner to every_step); expected pick: local_sgd τ + compressed rounds.
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 5 --batch 2 --seq 32 --sync auto \
-      --plan-world 256 --link commodity --log-every 1
+      --plan-world 256 --link commodity --plan-backward-ms 20 --log-every 1
 fi
 
 echo "=== smoke: planner benchmark (modeled only is fast; full table) ==="

@@ -1,0 +1,406 @@
+"""TrainSession — the programmatic synchronization surface (DESIGN.md §7).
+
+The survey's levers used to be hand-wired in ``launch/train.py``'s main():
+rounds (§3.1 local SGD / LAG), bits (§3.2-3.3 compression / fusion / the
+planner) and overlap each had a one-off code path, ``--lag`` was silently
+dead, and there was no entry point for benchmarks, serving or tests.  A
+session owns the pieces once:
+
+    from repro.api import SessionConfig, TrainSession
+    from repro.core import SyncConfig, make_strategy
+
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True),
+                        strategy=make_strategy("local_sgd", period=8,
+                                               sync=SyncConfig(
+                                                   compressor="int8",
+                                                   algo="ring")))
+    losses = sess.run(steps=50, log_every=10)
+    print(sess.comm_rounds, "communication rounds over", sess.step, "steps")
+
+or let the planner choose the whole composite (rounds × bits × overlap):
+
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True))
+    sp = sess.plan_auto(link="commodity", plan_world=256)
+    print(sp.describe()); sess.run(steps=50)
+
+The session compiles one program per strategy *phase* — the synced step, the
+purely-local step, the parameter-round, LAG's probe/sync/reuse — and the
+strategy's :class:`~repro.core.strategy.RoundScheduler` dispatches between
+them host-side (exactly how LAG deploys on a real pod: data-dependent wire
+traffic cannot live inside one SPMD program).  Communication rounds are
+counted HONESTLY: a round is a collective that actually ran (gradient syncs
++ parameter rounds; LAG's 8-byte trigger probes are tallied separately as
+``control_rounds``), which is the survey's Table 2 quantity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save as save_ckpt
+from repro.configs import get_config, reduced
+from repro.core import (GradientSynchronizer, PlanExecutor, SyncConfig,
+                        SyncStrategy, get_scheduler)
+from repro.core.schedule import (LINK_PRESETS, LinkParams, RoundSchedule,
+                                 StrategyPlan, fixed_config_plan, plan,
+                                 plan_rounds, profiles_from_grads,
+                                 serial_round_plan)
+from repro.core.schedule.planner import FIXED_BASELINES, local_sgd_arm
+from repro.core.strategy import LocalSGDScheduler
+from repro.data import DataConfig, SyntheticPipeline
+from repro.launch.mesh import data_axes, make_host_mesh
+from repro.launch.steps import (_make_synced_train_step, _world_of,
+                                broadcast_worker_state, make_lag_programs,
+                                make_local_train_step, make_param_round_step,
+                                make_train_step, worker_view)
+from repro.models import Model
+from repro.models.sharding_ctx import set_mesh_ctx
+from repro.optim import make_optimizer, warmup_cosine
+
+
+@dataclasses.dataclass
+class SessionConfig:
+    """What to train (model/optimizer/data); HOW to synchronize is the
+    strategy, passed separately."""
+    arch: str = "xlstm-125m"
+    reduced: bool = False
+    steps: int = 100            # LR-schedule horizon and default run length
+    batch: int = 8
+    seq: int = 128
+    lr: float = 3e-3
+    warmup: int = 20
+    optimizer: str = "adam"
+    data_parallel: int = 0      # 0 -> all devices
+    seed: int = 0
+
+
+def strategy_from_plan(sp: StrategyPlan,
+                       axes: Sequence[str] = ("data",)) -> SyncStrategy:
+    """Instantiate the executable strategy a planner composite describes."""
+    if sp.schedule.kind == "local_sgd":
+        return SyncStrategy(
+            scheduler=get_scheduler("local_sgd", period=sp.schedule.period),
+            param_reducer=PlanExecutor(sp.comm, tuple(axes)))
+    return SyncStrategy(scheduler=get_scheduler("every_step"),
+                        grad_reducer=PlanExecutor(sp.comm, tuple(axes)))
+
+
+class TrainSession:
+    """One training run driven by a :class:`SyncStrategy`.
+
+    ``strategy=None`` is the vanilla BSP baseline (pjit, XLA-inserted
+    collectives).  Everything else goes through the scheduler-dispatched
+    phase programs.  Rounds accounting: ``grad_rounds`` (gradient syncs),
+    ``param_rounds`` (parameter averaging), ``control_rounds`` (LAG scalar
+    probes); ``comm_rounds = grad_rounds + param_rounds``.
+    """
+
+    def __init__(self, cfg: Optional[SessionConfig] = None,
+                 strategy: Optional[SyncStrategy] = None):
+        self.cfg = cfg or SessionConfig()
+        self.strategy = strategy
+        c = self.cfg
+        model_cfg = get_config(c.arch)
+        if c.reduced:
+            model_cfg = reduced(model_cfg)
+        self.model_cfg = model_cfg
+        self.model = Model(model_cfg)
+        n_dev = len(jax.devices())
+        dp = c.data_parallel or n_dev
+        self.mesh = make_host_mesh(data=dp, model=n_dev // dp)
+        set_mesh_ctx(self.mesh, ("data",))
+        self.axes = data_axes(self.mesh)
+        self.world = _world_of(self.mesh, self.axes)
+        lr = warmup_cosine(c.lr, c.warmup, c.steps)
+        self.optimizer = make_optimizer(c.optimizer, lr=lr)
+        self.data = SyntheticPipeline(DataConfig(
+            vocab_size=model_cfg.vocab_size, seq_len=c.seq,
+            global_batch=c.batch,
+            embedding_dim=model_cfg.d_model if model_cfg.embedding_inputs
+            else 0))
+        self.rng = jax.random.PRNGKey(c.seed)
+        self._params = self.model.init(self.rng)
+        self._opt_state = self.optimizer.init(self._params)
+
+        self.step = 0
+        self.losses: List[float] = []
+        self.grad_rounds = 0
+        self.param_rounds = 0
+        self.control_rounds = 0
+        self.planned: Optional[Dict[str, Any]] = None
+        self._built = False
+
+    # -- state views ---------------------------------------------------------
+
+    @property
+    def comm_rounds(self) -> int:
+        """Collective rounds that actually ran (survey Table 2)."""
+        return self.grad_rounds + self.param_rounds
+
+    @property
+    def _diverging(self) -> bool:
+        return (self.strategy is not None
+                and self.strategy.scheduler.diverges_params)
+
+    @property
+    def params(self):
+        return worker_view(self._params) if (self._built and self._diverging) \
+            else self._params
+
+    @property
+    def opt_state(self):
+        return worker_view(self._opt_state) \
+            if (self._built and self._diverging) else self._opt_state
+
+    @property
+    def sync_state(self):
+        """Grad-reducer state (EF residuals etc.), worker-0 view."""
+        if getattr(self, "_sync_state", None) is None:
+            return None
+        return worker_view(self._sync_state)
+
+    # -- auto planning (rounds × bits × overlap) -----------------------------
+
+    def resolve_link(self, link="fast_ici", alpha=None,
+                     beta_gbps=None) -> LinkParams:
+        lp = LINK_PRESETS[link] if isinstance(link, str) else link
+        a = lp.alpha_s if alpha is None else alpha
+        b = lp.beta_s_per_byte if beta_gbps is None \
+            else 1.0 / (beta_gbps * 1e9)
+        return LinkParams(alpha_s=a, beta_s_per_byte=b)
+
+    def profile_backward(self) -> float:
+        """Wall time of the PER-DEVICE backward (compile excluded): the
+        planned shard_map step computes global_batch / world per device, so
+        time that slice — timing the full global batch would inflate
+        t_backward by the data-parallel factor and make the planner
+        over-hide communication.  bwd ≈ 2/3 of a grad step."""
+        grad_fn = jax.jit(lambda p, b: jax.grad(self.model.loss)(p, b))
+        batch = jax.tree.map(jnp.asarray, self.data.batch(0))
+        n_global = jax.tree.leaves(batch)[0].shape[0]
+        per_dev = max(1, n_global // self.world)
+        batch = jax.tree.map(lambda x: x[:per_dev], batch)
+        jax.block_until_ready(grad_fn(self._params, batch))   # compile
+        t0 = time.time()
+        jax.block_until_ready(grad_fn(self._params, batch))
+        return (time.time() - t0) * (2.0 / 3.0)
+
+    def plan_auto(self, link="fast_ici", *, alpha=None, beta_gbps=None,
+                  plan_world: int = 0, tau_grid=None, candidates=None,
+                  scheduler=None, t_backward_s: Optional[float] = None
+                  ) -> StrategyPlan:
+        """``--sync auto``: profile one step, search (rounds schedule ×
+        per-bucket strategy), install the winning composite as this
+        session's strategy.  ``scheduler`` pins the rounds axis (an
+        explicit ``--local-sgd``/``--lag``/``--push-pull`` choice) and only
+        the per-bucket plan is searched.  Stashes the full decision record
+        in ``self.planned`` for reporting."""
+        if self._built:
+            raise RuntimeError("plan_auto must run before the first step")
+        lp = self.resolve_link(link, alpha, beta_gbps)
+        world = plan_world or self.world
+        if t_backward_s is None:
+            t_backward_s = self.profile_backward()
+        profiles = profiles_from_grads(self._params, t_backward_s)
+        kw: Dict[str, Any] = {}
+        if candidates is not None:
+            kw["candidates"] = candidates
+        t_bwd = sum(p.t_backward_s for p in profiles)
+
+        arms: Dict[str, StrategyPlan]
+        if scheduler is None:
+            best, arms = plan_rounds(
+                profiles, lp, world,
+                **dict(kw, **({"tau_grid": tau_grid}
+                              if tau_grid is not None else {})))
+            self.strategy = strategy_from_plan(best, self.axes)
+        elif isinstance(scheduler, LocalSGDScheduler):
+            rp = serial_round_plan(profiles, lp, world, **kw)
+            best = local_sgd_arm(rp, t_bwd, scheduler.cfg.period)
+            arms = {best.schedule.key: best}
+            self.strategy = SyncStrategy(
+                scheduler=scheduler,
+                param_reducer=PlanExecutor(rp, tuple(self.axes)))
+        else:
+            # LAG / push-pull / every-step instance: the grad-sync rounds
+            # get the overlap-planned per-bucket plan; the round COUNT is
+            # the scheduler's (data-dependent for LAG), so the every-step
+            # modeled time is an upper bound.  The schedule records the
+            # scheduler actually executed, not every_step.
+            cp = plan(profiles, lp, world, **kw)
+            best = StrategyPlan(
+                schedule=RoundSchedule(kind=scheduler.name), comm=cp,
+                modeled_step_s=cp.modeled_step_s,
+                round_cost_s=cp.modeled_step_s, t_backward_s=t_bwd)
+            arms = {best.schedule.key: best}
+            self.strategy = SyncStrategy(
+                scheduler=scheduler,
+                grad_reducer=PlanExecutor(cp, tuple(self.axes)))
+
+        baselines = {
+            name: fixed_config_plan(profiles, lp, world, comp, algo,
+                                    compressor_args=cargs)
+            for name, (comp, algo, cargs) in FIXED_BASELINES.items()}
+        self.planned = {"strategy_plan": best, "arms": arms,
+                        "baselines": baselines,
+                        "t_backward_s": t_backward_s}
+        return best
+
+    # -- program construction ------------------------------------------------
+
+    def _build(self) -> None:
+        if self._built:
+            return
+        self._sync_state = None
+        self._anchor = None
+        self._red_state = None
+        if self.strategy is None:
+            self._base = jax.jit(
+                make_train_step(self.model, self.optimizer),
+                donate_argnums=(0, 1))
+            self._built = True
+            return
+
+        st = self.strategy
+        sched = st.scheduler
+        self._sched_state = sched.init_state(self._params)
+        engine = st.grad_reducer
+        if engine is None and "sync" in sched.computes:
+            engine = GradientSynchronizer(SyncConfig(), tuple(self.axes))
+
+        if sched.needs_grad_probe:
+            probe, sync_apply, reuse_apply = make_lag_programs(
+                self.model, self.optimizer, engine, self.mesh, self.axes)
+            # probe must NOT donate: params/batch are reused by the apply
+            # program the scheduler dispatches afterwards
+            self._probe = jax.jit(probe)
+            self._sync = jax.jit(sync_apply, donate_argnums=(0, 1, 2, 3))
+            self._reuse = jax.jit(reuse_apply, donate_argnums=(0, 1))
+            self._sync_state = broadcast_worker_state(
+                engine.init_state(self._params), self.world)
+        elif "sync" in sched.computes:
+            step_fn, _, init_sync_state = _make_synced_train_step(
+                self.model, self.optimizer, engine, self.mesh, self.axes,
+                per_worker_params=sched.diverges_params)
+            self._sync = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+            self._sync_state = init_sync_state(self._params)
+        if "local" in sched.computes:
+            self._local = jax.jit(
+                make_local_train_step(self.model, self.optimizer, self.mesh,
+                                      self.axes),
+                donate_argnums=(0, 1))
+        if sched.has_param_rounds:
+            self._param_round = jax.jit(
+                make_param_round_step(st.param_reducer, self.mesh, self.axes,
+                                      algo=st.param_algo),
+                donate_argnums=(0, 1, 2))
+            if st.param_reducer is not None:
+                self._anchor = jax.tree.map(
+                    lambda p: p.astype(jnp.float32), self._params)
+                self._red_state = broadcast_worker_state(
+                    st.param_reducer.init_state(self._params), self.world)
+        if sched.diverges_params:
+            self._params = broadcast_worker_state(self._params, self.world)
+            self._opt_state = broadcast_worker_state(self._opt_state,
+                                                     self.world)
+        self._built = True
+
+    # -- stepping ------------------------------------------------------------
+
+    def step_once(self) -> float:
+        """Run one training step under the strategy; returns the loss."""
+        self._build()
+        step = self.step
+        batch = jax.tree.map(jnp.asarray, self.data.batch(step))
+        step_i = jnp.asarray(step, jnp.int32)
+        rng_s = jax.random.fold_in(self.rng, step)
+
+        if self.strategy is None:
+            self._params, self._opt_state, loss = self._base(
+                self._params, self._opt_state, batch, step_i)
+            self.grad_rounds += 1   # BSP syncs gradients every step
+            loss = float(loss)
+            self.losses.append(loss)
+            self.step += 1
+            return loss
+
+        sched = self.strategy.scheduler
+        probe = None
+        if sched.needs_grad_probe:
+            loss_p, grads_w, delta, scale = self._probe(
+                self._params, batch, self._sched_state["g_last"])
+            probe = {"delta": float(delta), "scale": float(scale)}
+            self.control_rounds += 1
+        action, self._sched_state = sched.round(step, self._sched_state,
+                                                probe)
+        synced = None
+        if action.compute == "sync":
+            if sched.needs_grad_probe:
+                self._params, self._opt_state, self._sync_state, synced = \
+                    self._sync(self._params, self._opt_state,
+                               self._sync_state, grads_w, step_i, rng_s)
+                loss = loss_p
+            else:
+                self._params, self._opt_state, self._sync_state, loss = \
+                    self._sync(self._params, self._opt_state,
+                               self._sync_state, batch, step_i, rng_s)
+            self.grad_rounds += 1
+        elif action.compute == "reuse":
+            self._params, self._opt_state = self._reuse(
+                self._params, self._opt_state, self._sched_state["g_last"],
+                step_i)
+            loss = loss_p
+        elif action.compute == "local":
+            self._params, self._opt_state, loss = self._local(
+                self._params, self._opt_state, batch, step_i)
+        else:
+            raise ValueError(f"unknown action {action.compute!r}")
+        if action.param_round:
+            self._params, self._anchor, self._red_state = self._param_round(
+                self._params, self._anchor, self._red_state, rng_s)
+            self.param_rounds += 1
+        self._sched_state = sched.commit(self._sched_state, action, synced)
+
+        loss = float(loss)
+        self.losses.append(loss)
+        self.step += 1
+        return loss
+
+    def run(self, steps: Optional[int] = None, log_every: int = 0,
+            log=print) -> List[float]:
+        """Train ``steps`` steps (default: ``cfg.steps``); returns the
+        losses of THIS run.  The step log reports honest round counts."""
+        steps = steps or self.cfg.steps
+        t0 = time.time()
+        start = self.step
+        out: List[float] = []
+        for i in range(steps):
+            loss = self.step_once()
+            out.append(loss)
+            if log_every and i % log_every == 0:
+                dt = (time.time() - t0) / max(i, 1)
+                log(f"step {self.step - 1:5d} loss {loss:.4f} "
+                    f"({dt * 1e3:.0f} ms/step, comm rounds "
+                    f"{self.comm_rounds})", flush=True)
+        self.wall_s = time.time() - t0
+        self.steps_run = self.step - start
+        return out
+
+    def save_checkpoint(self, path: str) -> None:
+        save_ckpt(path, {"params": self.params, "opt": self.opt_state},
+                  step=self.step)
+
+    def summary(self) -> str:
+        parts = [f"steps {self.step}", f"comm rounds {self.comm_rounds} "
+                 f"(grad {self.grad_rounds}, param {self.param_rounds}"
+                 + (f", control probes {self.control_rounds}"
+                    if self.control_rounds else "") + ")"]
+        if self.strategy is not None:
+            parts.append(self.strategy.describe())
+        else:
+            parts.append("vanilla BSP")
+        return "; ".join(parts)

@@ -5,5 +5,10 @@ from repro.core.grad_sync import (  # noqa: F401
     plan_from_config)
 from repro.core.schedule.planner import BucketPlan, CommPlan  # noqa: F401
 from repro.core.local_sgd import (  # noqa: F401
-    LocalSGDConfig, average_params, communication_rounds, should_sync)
+    AsymmetricPushPullConfig, LocalSGDConfig, average_params,
+    communication_rounds, should_sync)
 from repro.core.lag import LAGConfig, init_lag_state, lag_trigger, lag_update_state  # noqa: F401
+from repro.core.strategy import (  # noqa: F401
+    EveryStepScheduler, LAGScheduler, LocalSGDScheduler, PushPullScheduler,
+    RoundAction, RoundScheduler, SCHEDULERS, SyncStrategy, get_scheduler,
+    make_strategy, register_scheduler)

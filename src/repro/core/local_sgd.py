@@ -35,6 +35,11 @@ class AsymmetricPushPullConfig:
     n_push: int = 1
     n_fetch: int = 1
 
+    def __post_init__(self):
+        if self.n_push < 1 or self.n_fetch < 1:
+            raise ValueError(f"push/fetch cadences must be >= 1, got "
+                             f"n_push={self.n_push} n_fetch={self.n_fetch}")
+
     def should_push(self, step: int) -> bool:
         return (step + 1) % self.n_push == 0
 

@@ -7,5 +7,6 @@ from repro.core.schedule.perf_model import (  # noqa: F401
     iteration_time_tac, wfbp_case)
 from repro.core.schedule.planner import (  # noqa: F401
     BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
-    DENSE_SMALL_BYTES, fixed_config_plan, plan, plan_cost_s,
-    profiles_from_grads, profiles_from_sizes)
+    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, RoundSchedule, StrategyPlan,
+    TAU_GRID, fixed_config_plan, plan, plan_cost_s, plan_rounds,
+    profiles_from_grads, profiles_from_sizes, serial_round_plan)

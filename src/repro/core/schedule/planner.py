@@ -288,6 +288,168 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
     return best_plan
 
 
+# ---------------------------------------------------------------------------
+# The rounds axis (survey §3.1 composed with §3.2-3.3)
+# ---------------------------------------------------------------------------
+
+# Local-SGD periods searched by ``plan_rounds``.  τ=1 is the every-step arm.
+TAU_GRID = (1, 2, 4, 8, 16)
+
+# Statistical-efficiency surcharge for τ>1: local SGD needs more steps to
+# reach the same loss (survey §3.1.2 — convergence holds only for bounded τ),
+# which a pure wall-clock model cannot see; without it the rounds search
+# degenerates to "communicate never" (τ→∞ always minimizes time/step).  Each
+# τ-averaged step is charged ``1 + γ·(1 - 1/τ)`` of its modeled time — a
+# crude, documented stand-in (γ ≈ 5% more steps at large τ) that makes
+# every-step win when communication is already hidden by backward overlap
+# and lets τ>1 win exactly when communication dominates compute.
+LOCAL_SGD_STEP_INFLATION = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """The rounds lever of a composite strategy: WHEN reduce rounds run."""
+    kind: str = "every_step"       # 'every_step' | 'local_sgd'
+    period: int = 1                # τ (local_sgd); 1 for every_step
+
+    @property
+    def key(self) -> str:
+        return f"{self.kind}/tau{self.period}" if self.kind == "local_sgd" \
+            else self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyPlan:
+    """A composite strategy: rounds schedule × per-bucket comm plan.
+
+    ``modeled_step_s`` is the amortized per-step time (every-step: the
+    overlap-simulated iteration; local_sgd: backward + round_cost/τ, with
+    the statistical surcharge).  ``comm.modeled_step_s`` keeps its own
+    meaning for the every-step arm; for τ>1 arms ``round_cost_s`` is the
+    serial cost of one averaging round."""
+    schedule: RoundSchedule
+    comm: CommPlan
+    modeled_step_s: float
+    round_cost_s: float
+    t_backward_s: float
+
+    def describe(self) -> str:
+        return (f"{self.schedule.key}: {self.modeled_step_s * 1e3:.3f} ms/step"
+                f" (round {self.round_cost_s * 1e3:.3f} ms, "
+                f"{self.comm.n_buckets} buckets)")
+
+
+def serial_round_plan(layer_profiles: Sequence[LayerProfile],
+                      link: LinkParams, world: int,
+                      candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                      bucket_grid: Sequence[int] = BUCKET_GRID,
+                      dense_small_bytes: float = DENSE_SMALL_BYTES,
+                      mean: bool = True) -> CommPlan:
+    """Per-bucket plan for one UNOVERLAPPED reduce round (a local-SGD
+    parameter-averaging round runs at a barrier after the optimizer step, so
+    nothing hides it): minimize the serial sum of bucket costs instead of
+    the WFBP-simulated iteration time.  ``modeled_step_s`` on the returned
+    plan is that serial round cost."""
+    if world <= 1:
+        buckets = (BucketPlan(
+            leaves=tuple(range(len(layer_profiles)))[::-1],
+            compressor="none", algo="psum",
+            bucket_bytes=int(sum(l.grad_bytes for l in layer_profiles))),)
+        return CommPlan(buckets=buckets, mean=mean, modeled_step_s=0.0,
+                        world=world, link=link)
+
+    best: Optional[CommPlan] = None
+
+    def consider(bps) -> None:
+        nonlocal best
+        total = sum(_bucket_cost_s(b, world, link) for b in bps)
+        if best is None or total < best.modeled_step_s:
+            best = CommPlan(buckets=tuple(bps), mean=mean,
+                            modeled_step_s=total, world=world, link=link)
+
+    for bb in bucket_grid:
+        bucket_leaves = _form_buckets(layer_profiles, bb)
+        sizes = [sum(layer_profiles[i].grad_bytes for i in leaves)
+                 for leaves in bucket_leaves]
+        greedy = []
+        for leaves, n_bytes in zip(bucket_leaves, sizes):
+            cand, _ = _pick_candidate(n_bytes, world, link, candidates,
+                                      dense_small_bytes)
+            greedy.append(BucketPlan(
+                leaves=leaves, compressor=cand.compressor,
+                compressor_args=cand.compressor_args, algo=cand.algo,
+                bucket_bytes=int(n_bytes)))
+        consider(greedy)
+        # uniform sweeps: the greedy pick restricts small buckets to dense;
+        # keep the min over unrestricted uniform plans so the round is never
+        # modeled slower than any fixed config
+        for cand in candidates:
+            consider([BucketPlan(leaves=leaves, compressor=cand.compressor,
+                                 compressor_args=cand.compressor_args,
+                                 algo=cand.algo, bucket_bytes=int(n_bytes))
+                      for leaves, n_bytes in zip(bucket_leaves, sizes)])
+    return best
+
+
+def local_sgd_arm(round_plan: CommPlan, t_backward_s: float, tau: int,
+                  inflation: float = LOCAL_SGD_STEP_INFLATION) -> StrategyPlan:
+    """The τ>1 composite arm: one serial averaging round (``round_plan``,
+    from :func:`serial_round_plan`, whose ``modeled_step_s`` is the round
+    cost) amortized over τ steps, with the statistical surcharge.  THE
+    amortization formula — shared by :func:`plan_rounds` and the pinned
+    ``--local-sgd`` path so auto and pinned runs score identically."""
+    rc = round_plan.modeled_step_s
+    per_step = (t_backward_s + rc / tau) * (1.0 + inflation * (1 - 1 / tau))
+    return StrategyPlan(
+        schedule=RoundSchedule(kind="local_sgd", period=int(tau)),
+        comm=round_plan, modeled_step_s=per_step, round_cost_s=rc,
+        t_backward_s=t_backward_s)
+
+
+def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
+                world: int,
+                candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                bucket_grid: Sequence[int] = BUCKET_GRID,
+                tau_grid: Sequence[int] = TAU_GRID,
+                dense_small_bytes: float = DENSE_SMALL_BYTES,
+                inflation: float = LOCAL_SGD_STEP_INFLATION,
+                mean: bool = True
+                ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
+    """Search the rounds axis × the bits axis: every candidate composite is a
+    (RoundSchedule, CommPlan) pair; returns (best, all_arms_by_key).
+
+    The every-step arm reuses :func:`plan` (overlap-simulated, with its
+    uniform-plan guarantee), so the winner is never modeled slower than any
+    fixed single-strategy config — the planner's acceptance invariant
+    carries over to composites.  τ>1 arms amortize one serial averaging
+    round over τ steps and pay the ``LOCAL_SGD_STEP_INFLATION`` surcharge.
+    """
+    t_bwd = sum(l.t_backward_s for l in layer_profiles)
+    every = plan(layer_profiles, link, world, candidates=candidates,
+                 bucket_grid=bucket_grid,
+                 dense_small_bytes=dense_small_bytes, mean=mean)
+    arms: Dict[str, StrategyPlan] = {
+        "every_step": StrategyPlan(
+            schedule=RoundSchedule(), comm=every,
+            modeled_step_s=every.modeled_step_s,
+            round_cost_s=sum(_bucket_cost_s(b, world, link)
+                             for b in every.buckets),
+            t_backward_s=t_bwd)}
+    if world > 1:
+        rp = serial_round_plan(layer_profiles, link, world,
+                               candidates=candidates,
+                               bucket_grid=bucket_grid,
+                               dense_small_bytes=dense_small_bytes,
+                               mean=mean)
+        for tau in tau_grid:
+            if tau <= 1:
+                continue
+            arm = local_sgd_arm(rp, t_bwd, tau, inflation)
+            arms[arm.schedule.key] = arm
+    best = min(arms.values(), key=lambda s: s.modeled_step_s)
+    return best, arms
+
+
 def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
                       link: LinkParams, world: int, compressor: str,
                       algo: str,

@@ -1,0 +1,307 @@
+"""SyncStrategy — the survey's two algorithm-level levers as ONE composable
+surface (§3.1 rounds × §3.2-3.3 bits).
+
+A strategy is a **round scheduler** (how often a communication round runs:
+every step, local-SGD τ, LAG's lazy trigger, Dean-style asymmetric
+push/pull) composed with a **per-round reducer** (what a round moves: a
+``CommPlan`` executed by ``PlanExecutor`` — possibly compressed, per-bucket
+heterogeneous — or plain parameter averaging).  The two levers multiply:
+periodic averaging *of compressed per-bucket syncs* is the regime both the
+comprehensive (2003.06307) and quantitative (2005.13247) surveys highlight,
+and this module is what lets ``--sync auto`` choose it.
+
+Schedulers carry their own state through a uniform ``init_state`` /
+``round`` interface and live in a registry mirroring
+``core/compression.REGISTRY``:
+
+    sched = get_scheduler("local_sgd", period=8)
+    action, state = sched.round(step, state)        # host-side dispatch
+    state = sched.commit(state, action, synced)     # after the round ran
+
+``round`` returns a :class:`RoundAction` naming which compiled program the
+trainer dispatches this step (``sync`` — gradient-reducing step, ``local``
+— purely local step with NO gradient collective, ``reuse`` — LAG's apply of
+the last synchronized gradient) plus whether a parameter-averaging round
+follows.  ``repro.api.TrainSession`` holds the compiled programs and the
+honest communication-rounds accounting; ``launch/train.py`` is a thin CLI
+over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, FrozenSet, Optional
+
+from repro.core.grad_sync import GradientSynchronizer, PlanExecutor, SyncConfig
+from repro.core.lag import LAGConfig, init_lag_state, lag_update_state
+from repro.core.local_sgd import (AsymmetricPushPullConfig, LocalSGDConfig,
+                                  should_sync)
+from repro.core.schedule.planner import CommPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundAction:
+    """What the trainer runs at one step (decided host-side, like LAG's
+    host dispatch — the decision picks between compiled programs)."""
+    compute: str = "sync"        # 'sync' | 'local' | 'reuse'
+    param_round: bool = False    # run the parameter-reduce program after
+
+
+class RoundScheduler:
+    """Base round scheduler: WHEN communication happens (survey §3.1).
+
+    Class attributes describe what the trainer must compile:
+
+      * ``computes`` — the set of compute actions ``round`` may return
+      * ``has_param_rounds`` — ever requests a parameter-averaging round
+      * ``needs_grad_probe`` — ``round`` needs this step's gradient norms
+        (LAG: the trainer runs a probe program first and passes
+        ``probe={'delta': .., 'scale': ..}``)
+      * ``diverges_params`` — local phases let per-worker parameters drift,
+        so the trainer must carry params/optimizer state PER WORKER
+        (leading device axis) instead of replicated
+    """
+    name: str = "base"
+    computes: FrozenSet[str] = frozenset({"sync"})
+    has_param_rounds: bool = False
+    needs_grad_probe: bool = False
+    diverges_params: bool = False
+
+    def init_state(self, params) -> Dict[str, Any]:
+        return {}
+
+    def round(self, step: int, state: Dict[str, Any],
+              probe: Optional[Dict[str, float]] = None
+              ) -> tuple[RoundAction, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def commit(self, state: Dict[str, Any], action: RoundAction,
+               synced_grads=None) -> Dict[str, Any]:
+        """Called after the dispatched program ran (LAG records the newly
+        synchronized gradient here)."""
+        return state
+
+    def describe(self) -> str:
+        return self.name
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors core/compression.REGISTRY)
+# ---------------------------------------------------------------------------
+
+SCHEDULERS: Dict[str, Callable[..., RoundScheduler]] = {}
+
+
+def register_scheduler(name: str):
+    def deco(cls):
+        SCHEDULERS[name] = cls
+        return cls
+    return deco
+
+
+def get_scheduler(name: str, **kwargs) -> RoundScheduler:
+    if name not in SCHEDULERS:
+        raise KeyError(
+            f"unknown scheduler {name!r}; known: {sorted(SCHEDULERS)}")
+    return SCHEDULERS[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# The schedulers
+# ---------------------------------------------------------------------------
+
+@register_scheduler("every_step")
+class EveryStepScheduler(RoundScheduler):
+    """Vanilla BSP cadence: one gradient-sync round per step.  The
+    degenerate strategy — bit-for-bit the legacy GradientSynchronizer /
+    make_comm_optimized_train_step path when composed with the same
+    reducer."""
+    name = "every_step"
+    computes = frozenset({"sync"})
+
+    def round(self, step, state, probe=None):
+        return RoundAction("sync"), state
+
+
+@register_scheduler("local_sgd")
+class LocalSGDScheduler(RoundScheduler):
+    """Periodic averaging (survey §3.1.2): τ purely-local optimizer steps,
+    then one parameter-averaging round; ``post_local_after`` runs a
+    parameter round after EVERY step during warmup (post-local SGD in the
+    param-averaging formulation; per-worker optimizer moments stay local
+    throughout, as in local Adam).  Rounds = T/τ, the survey's Table 2
+    quantity."""
+    name = "local_sgd"
+    computes = frozenset({"local"})
+    has_param_rounds = True
+    diverges_params = True
+
+    def __init__(self, period: int = 4, post_local_after: int = 0,
+                 cfg: Optional[LocalSGDConfig] = None):
+        self.cfg = cfg or LocalSGDConfig(period=period,
+                                         post_local_after=post_local_after)
+        if self.cfg.period < 1:
+            raise ValueError(f"local SGD period must be >= 1, "
+                             f"got {self.cfg.period}")
+
+    def round(self, step, state, probe=None):
+        return RoundAction("local",
+                           param_round=should_sync(step, self.cfg)), state
+
+    def describe(self):
+        return (f"local_sgd τ={self.cfg.period}"
+                + (f" post_local={self.cfg.post_local_after}"
+                   if self.cfg.post_local_after else ""))
+
+
+@register_scheduler("lag")
+class LAGScheduler(RoundScheduler):
+    """Lazily aggregated gradients (survey §3.1.2, Chen et al. 2018):
+    communicate only when the gradient changed enough,
+
+        sync  iff  ||g_t - g_last||² > threshold · ||g_t||²,
+
+    otherwise reuse the last synchronized gradient.  The trainer's probe
+    program computes the two (globally psum-ed) scalars — the only wire
+    traffic of a skipped round, which is LAG's entire point.  State schema:
+    ``{'g_last': pytree, 'rounds': int32}`` (``core.lag.init_lag_state``)."""
+    name = "lag"
+    computes = frozenset({"sync", "reuse"})
+    needs_grad_probe = True
+
+    def __init__(self, threshold: float = 0.1,
+                 cfg: Optional[LAGConfig] = None):
+        self.cfg = cfg or LAGConfig(threshold=threshold)
+        if self.cfg.check_every != 1:
+            # the probe IS the backward here (grads are needed every step
+            # regardless); a trigger cadence would only skip two scalar
+            # psums while silently changing the sync pattern, so reject it
+            # rather than ignore it
+            raise ValueError("check_every != 1 is not supported by this "
+                             "executor: the trigger rides the per-step "
+                             "backward probe")
+
+    def init_state(self, params):
+        return init_lag_state(params)
+
+    def round(self, step, state, probe=None):
+        if probe is None:
+            raise ValueError("LAG needs a gradient probe "
+                             "({'delta': .., 'scale': ..})")
+        # the first round must sync unconditionally: g_last is still zero,
+        # so delta == scale and a threshold >= 1 would otherwise reuse the
+        # all-zero gradient forever (training silently frozen)
+        trigger = (int(state["rounds"]) == 0
+                   or probe["delta"] > self.cfg.threshold * probe["scale"])
+        return RoundAction("sync" if trigger else "reuse"), state
+
+    def commit(self, state, action, synced_grads=None):
+        if action.compute == "sync":
+            return lag_update_state(state, synced_grads, True)
+        return state
+
+    def describe(self):
+        return f"lag θ={self.cfg.threshold}"
+
+
+@register_scheduler("push_pull")
+class PushPullScheduler(RoundScheduler):
+    """Dean et al. 2012 asymmetric push/pull (survey §3.1.2): gradients are
+    pushed (synced) every ``n_push`` steps, parameters fetched (re-averaged)
+    every ``n_fetch`` steps — the two directions of worker↔server traffic on
+    decoupled cadences.  Steps that push neither run purely locally."""
+    name = "push_pull"
+    computes = frozenset({"sync", "local"})
+    has_param_rounds = True
+    diverges_params = True
+
+    def __init__(self, n_push: int = 1, n_fetch: int = 1,
+                 cfg: Optional[AsymmetricPushPullConfig] = None):
+        self.cfg = cfg or AsymmetricPushPullConfig(n_push=n_push,
+                                                   n_fetch=n_fetch)
+
+    def round(self, step, state, probe=None):
+        compute = "sync" if self.cfg.should_push(step) else "local"
+        return RoundAction(compute,
+                           param_round=self.cfg.should_fetch(step)), state
+
+    def describe(self):
+        return f"push_pull push={self.cfg.n_push} fetch={self.cfg.n_fetch}"
+
+
+# ---------------------------------------------------------------------------
+# The composed strategy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyncStrategy:
+    """scheduler × reducers.  Reducers are any engine with the
+    ``init_state(tree)`` / ``__call__(tree, state, rng)`` interface
+    (``PlanExecutor``, ``GradientSynchronizer``):
+
+      * ``grad_reducer`` — runs inside 'sync' rounds on the gradients
+        (None -> dense psum, the vanilla exchange)
+      * ``param_reducer`` — runs inside parameter rounds on the params-minus-
+        anchor delta (None -> plain dense ``average_params``); compressing
+        the delta instead of the raw parameters is what keeps error feedback
+        and sparsification sound for periodic averaging
+    """
+    scheduler: RoundScheduler
+    grad_reducer: Any = None
+    param_reducer: Any = None
+    param_algo: str = "psum"
+
+    def describe(self) -> str:
+        parts = [self.scheduler.describe()]
+        if "sync" in self.scheduler.computes:
+            parts.append("grads via "
+                         + _describe_reducer(self.grad_reducer, "dense psum"))
+        if self.scheduler.has_param_rounds:
+            parts.append("param rounds via "
+                         + _describe_reducer(self.param_reducer,
+                                             f"dense {self.param_algo} avg"))
+        return "; ".join(parts)
+
+
+def _describe_reducer(reducer, default: str) -> str:
+    if reducer is None:
+        return default
+    if isinstance(reducer, GradientSynchronizer):
+        c = reducer.cfg
+        return f"{c.algo}/{c.compressor}"
+    if isinstance(reducer, PlanExecutor):
+        n = reducer.plan.n_buckets
+        kinds = sorted({f"{b.algo}/{b.compressor}"
+                        for b in reducer.plan.buckets})
+        return f"CommPlan[{n} buckets: {', '.join(kinds)}]"
+    return type(reducer).__name__
+
+
+def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
+                  axes=("data",), sync: Optional[SyncConfig] = None,
+                  plan: Optional[CommPlan] = None,
+                  param_plan: Optional[CommPlan] = None,
+                  param_algo: str = "psum",
+                  **scheduler_kwargs) -> SyncStrategy:
+    """Convenience constructor: resolve the scheduler by registry name and
+    build reducers from either a global ``SyncConfig`` or a planned
+    ``CommPlan``.  For schedulers with parameter rounds the sync config /
+    ``param_plan`` feeds the param-round reducer instead."""
+    if isinstance(scheduler, str):
+        scheduler = get_scheduler(scheduler, **scheduler_kwargs)
+    if sync is not None and plan is not None:
+        raise ValueError("pass either sync= or plan=, not both")
+
+    grad_reducer = param_reducer = None
+    if plan is not None:
+        grad_reducer = PlanExecutor(plan, tuple(axes))
+    elif sync is not None:
+        grad_reducer = GradientSynchronizer(sync, tuple(axes))
+    if scheduler.has_param_rounds:
+        if param_plan is not None:
+            param_reducer = PlanExecutor(param_plan, tuple(axes))
+        elif "sync" not in scheduler.computes:
+            # pure param-round schedulers (local_sgd): a given sync/plan
+            # describes the ROUND's exchange, not a per-step grad sync
+            param_reducer, grad_reducer = grad_reducer, None
+    return SyncStrategy(scheduler=scheduler, grad_reducer=grad_reducer,
+                        param_reducer=param_reducer, param_algo=param_algo)

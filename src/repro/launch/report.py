@@ -71,10 +71,17 @@ def variants_table() -> str:
     return "\n".join(lines)
 
 
-def render_comm_plan(plan, baselines=None, t_backward_s=None) -> str:
+def render_comm_plan(plan, baselines=None, t_backward_s=None,
+                     total_label="modeled iteration",
+                     auto_step_s=None) -> str:
     """Markdown rendering of a ``CommPlan`` (``--sync auto``, DESIGN.md §6):
-    one row per bucket plus the modeled iteration time next to the fixed
-    baselines the planner had to beat."""
+    one row per bucket plus the plan's modeled time next to the fixed
+    baselines the planner had to beat.  ``total_label`` names what
+    ``plan.modeled_step_s`` is (an iteration for every-step plans, one
+    reduce round for τ>1 round plans); ``auto_step_s`` overrides the
+    denominator of the speedup column (the composite's AMORTIZED per-step
+    time — dividing iteration baselines by a single round cost would
+    overstate the win)."""
     from repro.core.schedule.cost import bucket_sync_cost_s
 
     world, link = plan.world, plan.link
@@ -96,26 +103,73 @@ def render_comm_plan(plan, baselines=None, t_backward_s=None) -> str:
         lines.append(f"| {j} | {len(b.leaves)} | "
                      f"{b.bucket_bytes / 2**20:.2f} | "
                      f"{b.algo}/{b.compressor} | {cost} |")
-    lines += ["", f"modeled iteration: {plan.modeled_step_s * 1e3:.3f} ms"]
+    lines += ["", f"{total_label}: {plan.modeled_step_s * 1e3:.3f} ms"]
     if baselines:
+        step_s = plan.modeled_step_s if auto_step_s is None else auto_step_s
         lines += ["", "| fixed config | modeled iteration | auto speedup |",
                   "|---|---|---|"]
         for name, bp in sorted(baselines.items()):
-            ratio = bp.modeled_step_s / max(plan.modeled_step_s, 1e-12)
+            ratio = bp.modeled_step_s / max(step_s, 1e-12)
             lines.append(f"| {name} | {bp.modeled_step_s * 1e3:.3f} ms | "
                          f"{ratio:.2f}× |")
     return "\n".join(lines)
 
 
-def save_comm_plan(plan, arch: str) -> str:
-    """Write the plan record under artifacts/comm_plans/ (called by the
-    ``--sync auto`` path); returns the file path."""
+def render_strategy_plan(sp, arms=None, baselines=None,
+                         t_backward_s=None) -> str:
+    """Markdown rendering of a composite ``StrategyPlan`` (``--sync auto``
+    over rounds × bits × overlap, DESIGN.md §7): the rounds-axis arms the
+    planner scored, then the winning per-bucket comm plan next to the fixed
+    baselines it must beat."""
+    # only local_sgd arms carry a distinct per-round cost; for every_step /
+    # pinned lag / push-pull the comm plan's time IS the iteration
+    round_like = sp.schedule.kind == "local_sgd"
+    detail = (f"one reduce round: {sp.round_cost_s * 1e3:.3f} ms, "
+              if round_like else "")
+    lines = ["### Sync strategy (auto-tuned: rounds × bits × overlap)", "",
+             f"chosen rounds schedule: **{sp.schedule.key}** — modeled "
+             f"{sp.modeled_step_s * 1e3:.3f} ms/step "
+             f"({detail}backward {sp.t_backward_s * 1e3:.3f} ms)"]
+    if arms and len(arms) > 1:
+        lines += ["", "| rounds schedule | round cost | modeled /step |",
+                  "|---|---|---|"]
+        for key, a in sorted(arms.items(),
+                             key=lambda kv: kv[1].modeled_step_s):
+            mark = " ←" if key == sp.schedule.key else ""
+            lines.append(f"| {key}{mark} | {a.round_cost_s * 1e3:.3f} ms | "
+                         f"{a.modeled_step_s * 1e3:.3f} ms |")
+    lines += ["", render_comm_plan(
+        sp.comm, baselines=baselines, t_backward_s=t_backward_s,
+        total_label=("modeled reduce round" if round_like
+                     else "modeled iteration"),
+        auto_step_s=sp.modeled_step_s)]
+    return "\n".join(lines)
+
+
+def _write_plan_record(rec: dict, arch: str) -> str:
     from repro.launch.paths import COMM_PLANS
     os.makedirs(COMM_PLANS, exist_ok=True)
     path = os.path.join(COMM_PLANS, f"{arch}.json")
     with open(path, "w") as f:
-        json.dump(comm_plan_record(plan), f, indent=1)
+        json.dump(rec, f, indent=1)
     return path
+
+
+def save_comm_plan(plan, arch: str) -> str:
+    """Write the plan record under artifacts/comm_plans/ (called by the
+    ``--sync auto`` path); returns the file path."""
+    return _write_plan_record(comm_plan_record(plan), arch)
+
+
+def save_strategy_plan(sp, arch: str) -> str:
+    """Write the composite-strategy record (rounds schedule + comm plan)
+    under artifacts/comm_plans/; returns the file path."""
+    rec = comm_plan_record(sp.comm)
+    rec["schedule"] = {"kind": sp.schedule.kind, "period": sp.schedule.period}
+    rec["modeled_step_s"] = sp.modeled_step_s
+    rec["round_cost_s"] = sp.round_cost_s
+    rec["t_backward_s"] = sp.t_backward_s
+    return _write_plan_record(rec, arch)
 
 
 def comm_plan_record(plan) -> dict:

@@ -110,13 +110,37 @@ def make_planned_train_step(model: Model, plan: CommPlan, optimizer, mesh,
                                    data_axes)
 
 
-def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
-                            data_axes: Sequence[str]):
-    """Shared shard_map step around any grad-sync engine exposing
-    ``init_state(grads)`` and ``__call__(grads, state, rng)``."""
+def _world_of(mesh, data_axes: Sequence[str]) -> int:
     world = 1
     for a in data_axes:
         world *= mesh.shape[a]
+    return world
+
+
+def broadcast_worker_state(tree, world: int):
+    """Give every leaf a leading device axis of length ``world`` (to be
+    sharded over the data axes): the layout of anything carried PER WORKER —
+    EF residuals, and params/optimizer state under strategies with local
+    phases (local SGD, push-pull), where workers genuinely diverge."""
+    return jax.tree.map(
+        lambda s: jnp.broadcast_to(s, (world,) + s.shape), tree)
+
+
+def worker_view(tree):
+    """Worker-0 slice of a per-worker tree (checkpointing / inspection)."""
+    return jax.tree.map(lambda s: s[0], tree)
+
+
+def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
+                            data_axes: Sequence[str],
+                            per_worker_params: bool = False):
+    """Shared shard_map step around any grad-sync engine exposing
+    ``init_state(grads)`` and ``__call__(grads, state, rng)``.
+
+    ``per_worker_params=True`` carries params/optimizer state with a leading
+    per-worker axis (push-pull: gradients are synced but parameters have
+    diverged during local phases, so they may differ across workers)."""
+    world = _world_of(mesh, data_axes)
 
     def body(params, opt_state, sync_state, batch, step, rng):
         from repro.models.sharding_ctx import manual_region
@@ -126,6 +150,9 @@ def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
         # the f32 residual (a full parameter copy) across the data axes
         # instead of replicating it (§Perf pair-3 iteration 5 finding).
         sync_state = jax.tree.map(lambda s: s[0], sync_state)
+        if per_worker_params:
+            params = jax.tree.map(lambda s: s[0], params)
+            opt_state = jax.tree.map(lambda s: s[0], opt_state)
         with manual_region():
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
         grads, sync_state = synchronizer(grads, sync_state, rng)
@@ -134,6 +161,9 @@ def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
         # local losses differ per shard only through data; report the mean
         loss = jax.lax.pmean(loss, tuple(data_axes))
         sync_state = jax.tree.map(lambda s: s[None], sync_state)
+        if per_worker_params:
+            params = jax.tree.map(lambda s: s[None], params)
+            opt_state = jax.tree.map(lambda s: s[None], opt_state)
         return params, opt_state, sync_state, loss
 
     # Specs describe only the MANUAL (data) axes: params / optimizer state
@@ -142,22 +172,189 @@ def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
     # layout comes from the jit in_shardings outside this shard_map.
     batch_spec = {"tokens": P(tuple(data_axes), None)}
     state_spec = P(tuple(data_axes))
+    p_spec = state_spec if per_worker_params else P()
 
     def step_fn(params, opt_state, sync_state, batch, step, rng):
         f = jax.shard_map(
             body, mesh=mesh,
-            in_specs=(P(), P(), state_spec, batch_spec, P(), P()),
-            out_specs=(P(), P(), state_spec, P(), ),
+            in_specs=(p_spec, p_spec, state_spec, batch_spec, P(), P()),
+            out_specs=(p_spec, p_spec, state_spec, P(), ),
             axis_names=set(data_axes), check_vma=False)
         return f(params, opt_state, sync_state, batch, step, rng)
 
     def init_sync_state(params):
-        """Per-worker EF state with a leading device axis (shard over data)."""
-        one = synchronizer.init_state(params)
-        return jax.tree.map(
-            lambda s: jnp.broadcast_to(s, (world,) + s.shape), one)
+        """Per-worker EF state with a leading device axis (shard over data).
+        Takes the PLAIN params pytree (no worker axis) in either mode."""
+        return broadcast_worker_state(synchronizer.init_state(params), world)
 
     return step_fn, synchronizer, init_sync_state
+
+
+# ---------------------------------------------------------------------------
+# Strategy phase programs (SyncStrategy sessions — DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def make_local_train_step(model: Model, optimizer, mesh,
+                          data_axes: Sequence[str] = ("data",)):
+    """Purely-local step: per-shard loss/backward/update with NO gradient
+    collective (the skip program of local SGD / push-pull).  Params and
+    optimizer state carry a leading per-worker axis sharded over the data
+    axes, so workers genuinely diverge between rounds — the legacy
+    ``--local-sgd`` path ran the BSP step, whose XLA-inserted gradient
+    allreduce made the later averaging a no-op on real meshes.  Only the
+    scalar loss is pmean-ed (reporting)."""
+    batch_spec = {"tokens": P(tuple(data_axes), None)}
+    state_spec = P(tuple(data_axes))
+
+    def body(params, opt_state, batch, step):
+        from repro.models.sharding_ctx import manual_region
+        params = jax.tree.map(lambda s: s[0], params)
+        opt_state = jax.tree.map(lambda s: s[0], opt_state)
+        with manual_region():
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        loss = jax.lax.pmean(loss, tuple(data_axes))
+        params = jax.tree.map(lambda s: s[None], params)
+        opt_state = jax.tree.map(lambda s: s[None], opt_state)
+        return params, opt_state, loss
+
+    def step_fn(params, opt_state, batch, step):
+        f = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(state_spec, state_spec, batch_spec, P()),
+            out_specs=(state_spec, state_spec, P()),
+            axis_names=set(data_axes), check_vma=False)
+        return f(params, opt_state, batch, step)
+
+    return step_fn
+
+
+def make_param_round_step(reducer, mesh, data_axes: Sequence[str] = ("data",),
+                          algo: str = "psum"):
+    """One parameter-reduce round (local SGD averaging / push-pull fetch).
+
+    ``reducer=None``: plain dense ``average_params`` on ``algo``.  Otherwise
+    the round moves the params-minus-anchor DELTA through the reducer (a
+    ``PlanExecutor`` — per-bucket compression + error feedback) and rebuilds
+    ``params = anchor + reduced_delta``; the anchor (the parameters agreed
+    at the last round, identical on every worker) is what keeps compressed
+    periodic averaging sound — compressing raw parameter values would, e.g.
+    under top-k, zero most of the model.
+
+    Returns ``round_fn(params_w, anchor, red_state, rng) -> (params_w,
+    anchor, red_state)`` where ``params_w``/``red_state`` carry the leading
+    per-worker axis and ``anchor`` is replicated (None when reducer is None).
+    """
+    from repro.core import average_params
+    state_spec = P(tuple(data_axes))
+
+    if reducer is None:
+        def avg_body(params):
+            p = jax.tree.map(lambda s: s[0], params)
+            p = average_params(p, tuple(data_axes), algo)
+            return jax.tree.map(lambda s: s[None], p)
+
+        def round_fn(params, anchor, red_state, rng):
+            f = jax.shard_map(avg_body, mesh=mesh, in_specs=(state_spec,),
+                              out_specs=state_spec,
+                              axis_names=set(data_axes), check_vma=False)
+            return f(params), anchor, red_state
+
+        return round_fn
+
+    def body(params, anchor, red_state, rng):
+        p = jax.tree.map(lambda s: s[0], params)
+        rs = jax.tree.map(lambda s: s[0], red_state)
+        delta = jax.tree.map(
+            lambda x, a: x.astype(jnp.float32) - a.astype(jnp.float32),
+            p, anchor)
+        reduced, rs = reducer(delta, rs, rng)   # mean over world (plan.mean)
+        # params keep their ORIGINAL dtype (bf16 stays bf16); the f32 anchor
+        # is rebuilt FROM the cast result so it equals what workers actually
+        # hold entering the next local phase — otherwise the cast error
+        # would sit in every future delta as a constant offset
+        new_p = jax.tree.map(lambda a, d, x: (a + d).astype(x.dtype),
+                             anchor, reduced, p)
+        new_anchor = jax.tree.map(lambda x: x.astype(jnp.float32), new_p)
+        return (jax.tree.map(lambda s: s[None], new_p), new_anchor,
+                jax.tree.map(lambda s: s[None], rs))
+
+    def round_fn(params, anchor, red_state, rng):
+        f = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(state_spec, P(), state_spec, P()),
+            out_specs=(state_spec, P(), state_spec),
+            axis_names=set(data_axes), check_vma=False)
+        return f(params, anchor, red_state, rng)
+
+    return round_fn
+
+
+def make_lag_programs(model: Model, optimizer, synchronizer, mesh,
+                      data_axes: Sequence[str] = ("data",)):
+    """The three LAG programs (host dispatch, DESIGN.md §5/§7):
+
+      * ``probe(params, batch, g_last) -> (loss, grads_w, delta, scale)`` —
+        per-shard backward plus the two globally psum-ed scalars of LAG's
+        trigger; the 8-byte scalars are the ONLY wire traffic of a skipped
+        round.  ``grads_w`` returns per-worker (leading axis, sharded).
+      * ``sync_apply(params, opt_state, sync_state, grads_w, step, rng)``
+        — reduce this step's gradients through the strategy's reducer and
+        update; also returns the synchronized gradient (the new ``g_last``).
+      * ``reuse_apply(params, opt_state, g_last, step)`` — apply the last
+        synchronized gradient with no collective at all.
+    """
+    batch_spec = {"tokens": P(tuple(data_axes), None)}
+    state_spec = P(tuple(data_axes))
+    axes = tuple(data_axes)
+
+    def probe_body(params, batch, g_last):
+        from repro.models.sharding_ctx import manual_region
+        with manual_region():
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+
+        def sq(t):
+            return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                       for l in jax.tree.leaves(t))
+
+        delta = jax.lax.psum(
+            sq(jax.tree.map(lambda a, b: a.astype(jnp.float32) - b,
+                            grads, g_last)), axes)
+        scale = jax.lax.psum(sq(grads), axes)
+        loss = jax.lax.pmean(loss, axes)
+        return (loss, jax.tree.map(lambda g: g[None], grads), delta, scale)
+
+    def probe(params, batch, g_last):
+        f = jax.shard_map(
+            probe_body, mesh=mesh,
+            in_specs=(P(), batch_spec, P()),
+            out_specs=(P(), state_spec, P(), P()),
+            axis_names=set(data_axes), check_vma=False)
+        return f(params, batch, g_last)
+
+    def sync_body(params, opt_state, sync_state, grads_w, step, rng):
+        g = jax.tree.map(lambda s: s[0], grads_w)
+        ss = jax.tree.map(lambda s: s[0], sync_state)
+        synced, ss = synchronizer(g, ss, rng)
+        updates, opt_state = optimizer.update(synced, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return (params, opt_state, jax.tree.map(lambda s: s[None], ss),
+                synced)
+
+    def sync_apply(params, opt_state, sync_state, grads_w, step, rng):
+        f = jax.shard_map(
+            sync_body, mesh=mesh,
+            in_specs=(P(), P(), state_spec, state_spec, P(), P()),
+            out_specs=(P(), P(), state_spec, P()),
+            axis_names=set(data_axes), check_vma=False)
+        return f(params, opt_state, sync_state, grads_w, step, rng)
+
+    def reuse_apply(params, opt_state, g_last, step):
+        updates, opt_state = optimizer.update(g_last, opt_state, params, step)
+        return apply_updates(params, updates), opt_state
+
+    return probe, sync_apply, reuse_apply
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,23 @@
-"""Training launcher.
+"""Training launcher — a thin CLI over ``repro.api.TrainSession``.
 
-Modes (the survey's taxonomy, selectable from the CLI):
+Modes (the survey's taxonomy, selectable from the CLI; every flag below maps
+onto a ``SyncStrategy`` = round scheduler × per-round reducer, DESIGN.md §7):
+
   * --sync vanilla                 BSP data-parallel, dense psum (baseline)
-  * --sync comm                    GradientSynchronizer: --compressor/--algo/
-                                   --bucket-mb/--no-error-feedback
+  * --sync comm                    every-step sync through --compressor/
+                                   --algo/--bucket-mb/--no-error-feedback
   * --sync auto                    communication planner: profile one step,
-                                   search per-bucket (compressor x algo x
-                                   fusion) against the --link α-β model,
-                                   then run the planned step (DESIGN.md §6)
-  * --local-sgd TAU                periodic model averaging (+ --post-local N)
-  * --lag THRESH                   lazily aggregated gradients (host dispatch)
+                                   search (rounds schedule x per-bucket
+                                   compressor x algo x fusion) against the
+                                   --link α-β model, run the winning
+                                   composite (DESIGN.md §6/§7)
+  * --local-sgd TAU                periodic averaging (+ --post-local N);
+                                   with --sync comm the averaging round
+                                   itself is compressed (anchor-delta)
+  * --lag THRESH                   lazily aggregated gradients (host
+                                   dispatch; skipped rounds cost only the
+                                   8-byte trigger probe)
+  * --push-pull N_PUSH N_FETCH     Dean-style asymmetric push/pull cadences
 
 Runs on whatever devices exist (CPU: 1-device mesh; the same code drives the
 production mesh).  Example (the e2e driver, deliverable b):
@@ -20,104 +28,15 @@ production mesh).  Example (the e2e driver, deliverable b):
 from __future__ import annotations
 
 import argparse
-import time
-from functools import partial
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.checkpoint import save as save_ckpt
-from repro.configs import ALL_ARCHS, get_config, reduced
-from repro.core import (GradientSynchronizer, LAGConfig, LocalSGDConfig,
-                        SyncConfig, average_params, init_lag_state,
-                        lag_trigger, should_sync)
-from repro.core.schedule import (LINK_PRESETS, LinkParams, fixed_config_plan,
-                                 plan as plan_comm, profiles_from_grads)
-from repro.core.schedule.planner import FIXED_BASELINES
-from repro.data import DataConfig, SyntheticPipeline
-from repro.launch.mesh import data_axes, make_host_mesh
-from repro.launch.report import render_comm_plan, save_comm_plan
-from repro.launch.steps import (make_comm_optimized_train_step,
-                                make_planned_train_step, make_train_step)
-from repro.models import Model
-from repro.models.sharding_ctx import set_mesh_ctx
-from repro.optim import make_optimizer, warmup_cosine
+from repro.api import SessionConfig, TrainSession
+from repro.configs import ALL_ARCHS
+from repro.core import SyncConfig, SyncStrategy, get_scheduler, make_strategy
+from repro.core.schedule import LINK_PRESETS
+from repro.launch.report import render_strategy_plan, save_strategy_plan
 
 
-def build(args):
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    model = Model(cfg)
-    n_dev = len(jax.devices())
-    dp = args.data_parallel or n_dev
-    mesh = make_host_mesh(data=dp, model=n_dev // dp)
-    set_mesh_ctx(mesh, ("data",))
-    lr = warmup_cosine(args.lr, args.warmup, args.steps)
-    opt = make_optimizer(args.optimizer, lr=lr)
-    return cfg, model, mesh, opt
-
-
-def resolve_link(args) -> LinkParams:
-    link = LINK_PRESETS[args.link]
-    alpha = link.alpha_s if args.alpha is None else args.alpha
-    beta = link.beta_s_per_byte if args.beta_gbps is None \
-        else 1.0 / (args.beta_gbps * 1e9)
-    return LinkParams(alpha_s=alpha, beta_s_per_byte=beta)
-
-
-def plan_for_training(model, params, data, mesh, axes, args):
-    """``--sync auto``: profile one step, then search per-bucket strategies.
-
-    Profiling measures the wall time of one jitted grad step (compile
-    excluded) and apportions it across gradient leaves by size — the
-    granularity we actually have on TPU, where XLA fuses per-layer times
-    away.  The planner then optimizes the simulated WFBP iteration time
-    under the chosen α-β link model; the result is printed through
-    ``report.render_comm_plan`` next to the fixed baselines it must beat.
-    """
-    mesh_world = 1
-    for a in axes:
-        mesh_world *= mesh.shape[a]
-    world = args.plan_world or mesh_world
-    link = resolve_link(args)
-
-    # Profile the PER-DEVICE backward: the planned shard_map step computes
-    # global_batch / mesh_world per device, so time that slice — timing the
-    # full global batch would inflate t_backward by the data-parallel
-    # factor and make the planner over-hide communication.
-    grad_fn = jax.jit(lambda p, b: jax.grad(model.loss)(p, b))
-    batch = jax.tree.map(jnp.asarray, data.batch(0))
-    n_global = jax.tree.leaves(batch)[0].shape[0]
-    per_dev = max(1, n_global // mesh_world)
-    batch = jax.tree.map(lambda x: x[:per_dev], batch)
-    jax.block_until_ready(grad_fn(params, batch))          # compile
-    t0 = time.time()
-    jax.block_until_ready(grad_fn(params, batch))
-    t_backward = (time.time() - t0) * (2.0 / 3.0)  # bwd ≈ 2/3 of grad step
-
-    profiles = profiles_from_grads(params, t_backward)
-    comm_plan = plan_comm(profiles, link, world)
-    baselines = {
-        name: fixed_config_plan(profiles, link, world, comp, algo,
-                                compressor_args=cargs)
-        for name, (comp, algo, cargs) in FIXED_BASELINES.items()}
-    print(render_comm_plan(comm_plan, baselines=baselines,
-                           t_backward_s=t_backward), flush=True)
-    plan_path = save_comm_plan(comm_plan, args.arch)
-    print(f"plan record: {plan_path}", flush=True)
-    best_fixed = min(p.modeled_step_s for p in baselines.values())
-    if comm_plan.modeled_step_s > best_fixed + 1e-12:
-        raise RuntimeError(
-            f"planner regression: auto plan modeled "
-            f"{comm_plan.modeled_step_s:.6f}s > best fixed baseline "
-            f"{best_fixed:.6f}s")
-    return comm_plan
-
-
-def main(argv=None):
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, default="xlstm-125m")
     ap.add_argument("--reduced", action="store_true",
@@ -145,35 +64,52 @@ def main(argv=None):
     ap.add_argument("--plan-world", type=int, default=0,
                     help="plan for this world size instead of the mesh's "
                          "(model a pod from a laptop)")
+    ap.add_argument("--plan-backward-ms", type=float, default=0.0,
+                    help="plan for this per-step backward time instead of "
+                         "measuring (model a TPU's backward from a laptop; "
+                         "--sync auto)")
     ap.add_argument("--local-sgd", type=int, default=0, metavar="TAU")
     ap.add_argument("--post-local", type=int, default=0)
     ap.add_argument("--lag", type=float, default=0.0, metavar="THRESH")
+    ap.add_argument("--push-pull", type=int, nargs=2, default=None,
+                    metavar=("N_PUSH", "N_FETCH"),
+                    help="push gradients every N_PUSH steps, fetch (average) "
+                         "parameters every N_FETCH steps")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args(argv)
+    return ap.parse_args(argv)
 
-    cfg, model, mesh, opt = build(args)
-    rng = jax.random.PRNGKey(0)
-    params = model.init(rng)
-    opt_state = opt.init(params)
-    step_i = jnp.zeros((), jnp.int32)
 
-    data = SyntheticPipeline(DataConfig(
-        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
-        embedding_dim=cfg.d_model if cfg.embedding_inputs else 0))
+def scheduler_from_args(args):
+    """The rounds axis a user pinned explicitly (None -> every step, or the
+    planner's choice under --sync auto)."""
+    picked = [f for f, on in (("--lag", args.lag > 0),
+                              ("--local-sgd", args.local_sgd > 1),
+                              ("--push-pull", args.push_pull is not None))
+              if on]
+    if len(picked) > 1:
+        raise SystemExit(f"pick one rounds schedule, got {picked}")
+    if args.lag > 0:
+        return get_scheduler("lag", threshold=args.lag)
+    if args.local_sgd > 1:
+        return get_scheduler("local_sgd", period=args.local_sgd,
+                             post_local_after=args.post_local)
+    if args.push_pull is not None:
+        return get_scheduler("push_pull", n_push=args.push_pull[0],
+                             n_fetch=args.push_pull[1])
+    return None
 
-    axes = data_axes(mesh)
-    sync_cfg = SyncConfig(
-        compressor=args.compressor, algo=args.algo,
-        error_feedback=not args.no_error_feedback,
-        bucket_bytes=int(args.bucket_mb * 2**20))
 
-    if args.sync == "comm":
-        step_fn, synchronizer, init_sync_state = make_comm_optimized_train_step(
-            model, opt, sync_cfg, mesh, axes)
-        sync_state = init_sync_state(params)
-        jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
-    elif args.sync == "auto":
+def main(argv=None):
+    args = parse_args(argv)
+    scfg = SessionConfig(
+        arch=args.arch, reduced=args.reduced, steps=args.steps,
+        batch=args.batch, seq=args.seq, lr=args.lr, warmup=args.warmup,
+        optimizer=args.optimizer, data_parallel=args.data_parallel)
+    scheduler = scheduler_from_args(args)
+    session = TrainSession(scfg)
+
+    if args.sync == "auto":
         ignored = []
         if args.compressor != "none":
             ignored.append("--compressor")
@@ -186,56 +122,46 @@ def main(argv=None):
         if ignored:
             print(f"warning: --sync auto chooses per-bucket strategies; "
                   f"ignoring {', '.join(ignored)}", flush=True)
-        comm_plan = plan_for_training(model, params, data, mesh, axes, args)
-        step_fn, executor, init_sync_state = make_planned_train_step(
-            model, comm_plan, opt, mesh, axes)
-        sync_state = init_sync_state(params)
-        jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
-    else:
-        base = make_train_step(model, opt)
-        jit_step = jax.jit(base, donate_argnums=(0, 1))
-        sync_state = None
+        sp = session.plan_auto(
+            link=args.link, alpha=args.alpha, beta_gbps=args.beta_gbps,
+            plan_world=args.plan_world, scheduler=scheduler,
+            t_backward_s=(args.plan_backward_ms / 1e3
+                          if args.plan_backward_ms > 0 else None))
+        print(render_strategy_plan(
+            sp, arms=session.planned["arms"],
+            baselines=session.planned["baselines"],
+            t_backward_s=session.planned["t_backward_s"]), flush=True)
+        plan_path = save_strategy_plan(sp, args.arch)
+        print(f"plan record: {plan_path}", flush=True)
+        best_fixed = min(p.modeled_step_s
+                         for p in session.planned["baselines"].values())
+        if scheduler is None and sp.modeled_step_s > best_fixed + 1e-12:
+            raise RuntimeError(
+                f"planner regression: auto strategy modeled "
+                f"{sp.modeled_step_s:.6f}s > best fixed baseline "
+                f"{best_fixed:.6f}s")
+    elif args.sync == "comm":
+        sync_cfg = SyncConfig(
+            compressor=args.compressor, algo=args.algo,
+            error_feedback=not args.no_error_feedback,
+            bucket_bytes=int(args.bucket_mb * 2**20))
+        session.strategy = make_strategy(
+            scheduler if scheduler is not None else "every_step",
+            axes=session.axes, sync=sync_cfg)
+    elif scheduler is not None:
+        # vanilla + an explicit rounds schedule: dense reducers
+        session.strategy = SyncStrategy(scheduler=scheduler)
+    # else: strategy None -> vanilla BSP (pjit, XLA collectives)
 
-    # local-SGD variant: an extra compiled program for the averaging round
-    avg_fn = None
-    if args.local_sgd > 1:
-        local_cfg = LocalSGDConfig(period=args.local_sgd,
-                                   post_local_after=args.post_local)
-
-        def avg(params):
-            f = jax.shard_map(lambda p: average_params(p, axes),
-                              mesh=mesh, in_specs=P(), out_specs=P(),
-                              axis_names=set(axes), check_vma=False)
-            return f(params)
-        avg_fn = jax.jit(avg)
-
-    lag_state = init_lag_state(params) if args.lag > 0 else None
-    losses, t0, rounds = [], time.time(), 0
-    for step in range(args.steps):
-        batch = jax.tree.map(jnp.asarray, data.batch(step))
-        step_i = jnp.asarray(step, jnp.int32)
-        if args.sync in ("comm", "auto"):
-            params, opt_state, sync_state, loss = jit_step(
-                params, opt_state, sync_state, batch, step_i,
-                jax.random.fold_in(rng, step))
-            rounds += 1
-        else:
-            params, opt_state, loss = jit_step(params, opt_state, batch, step_i)
-            rounds += 1
-        if avg_fn is not None and should_sync(step, local_cfg):
-            params = avg_fn(params)
-        losses.append(float(loss))
-        if step % args.log_every == 0:
-            dt = (time.time() - t0) / max(step, 1)
-            print(f"step {step:5d} loss {float(loss):.4f} "
-                  f"({dt*1e3:.0f} ms/step, comm rounds {rounds})", flush=True)
+    if session.strategy is not None:
+        print(f"strategy: {session.strategy.describe()}", flush=True)
+    losses = session.run(args.steps, log_every=args.log_every)
 
     if args.checkpoint:
-        save_ckpt(args.checkpoint, {"params": params, "opt": opt_state},
-                  step=args.steps)
+        session.save_checkpoint(args.checkpoint)
         print("checkpoint written:", args.checkpoint)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
-          f"steps/s {args.steps/(time.time()-t0):.2f}")
+          f"steps/s {args.steps / session.wall_s:.2f} | {session.summary()}")
     return losses
 
 

@@ -166,6 +166,37 @@ def check_local_sgd():
     print("local sgd averaging ok")
 
 
+def check_param_round_strategy():
+    """SyncStrategy param round on 8 REAL workers (DESIGN.md §7): per-worker
+    diverged params go in with a leading worker axis, one anchor-delta
+    round brings every worker to (≈, for the compressed plan) the mean."""
+    from repro.core import PlanExecutor, SyncConfig, plan_from_config
+    from repro.launch.steps import make_param_round_step
+
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    anchor = {"w": jax.random.normal(jax.random.PRNGKey(11), (16, 8))}
+    noise = jax.random.normal(jax.random.PRNGKey(12), (8, 16, 8)) * 0.01
+    params_w = {"w": anchor["w"][None] + noise}   # 8 diverged workers
+
+    for comp, tol in (("none", 1e-6), ("int8", 2e-3)):
+        reducer = PlanExecutor(
+            plan_from_config(SyncConfig(compressor=comp, bucket_bytes=0),
+                             anchor), ("data",))
+        round_fn = jax.jit(make_param_round_step(reducer, mesh, ("data",)))
+        red_state = jax.tree.map(
+            lambda s: jnp.broadcast_to(s, (8,) + s.shape),
+            reducer.init_state(anchor))
+        out, new_anchor, _ = round_fn(params_w, anchor, red_state,
+                                      jax.random.PRNGKey(0))
+        got = np.asarray(out["w"])
+        want = np.asarray(params_w["w"]).mean(0)
+        assert np.all(got == got[0:1]), f"{comp}: workers disagree"
+        np.testing.assert_allclose(got[0], want, atol=tol)
+        np.testing.assert_allclose(np.asarray(new_anchor["w"]), got[0],
+                                   atol=1e-6)
+    print("strategy param round ok")
+
+
 def check_hlo_collective_parse():
     from repro.launch.hlo_analysis import analyze
     mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
@@ -186,5 +217,6 @@ if __name__ == "__main__":
     check_error_feedback_converges_distributed()
     check_plan_executor_heterogeneous()
     check_local_sgd()
+    check_param_round_strategy()
     check_hlo_collective_parse()
     print("ALL MULTI-DEVICE CHECKS PASSED")

@@ -1,0 +1,390 @@
+"""SyncStrategy sessions (core/strategy.py + repro/api.py + planner rounds
+axis).  Covers: the scheduler registry, host-side rounds-accounting
+properties per scheduler, the degenerate every-step strategy's bit-for-bit
+equivalence with the legacy GradientSynchronizer path (params, optimizer
+state, EF residuals over ≥3 steps), the LAG regression (a high threshold
+must actually SKIP rounds — the flag used to be dead), honest comm-rounds
+accounting end-to-end, the parameter-round program's anchor-delta
+semantics, and the planner's rounds axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import SessionConfig, TrainSession, strategy_from_plan
+from repro.core import (AsymmetricPushPullConfig, GradientSynchronizer,
+                        LocalSGDConfig, PlanExecutor, SCHEDULERS, SyncConfig,
+                        SyncStrategy, communication_rounds, get_scheduler,
+                        make_strategy, plan_from_config)
+from repro.core.schedule import (LINK_PRESETS, LayerProfile, plan_rounds,
+                                 serial_round_plan)
+
+ARCH_KW = dict(arch="xlstm-125m", reduced=True, batch=2, seq=16, steps=8)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_scheduler_registry():
+    assert {"every_step", "local_sgd", "lag", "push_pull"} <= set(SCHEDULERS)
+    with pytest.raises(KeyError):
+        get_scheduler("nope")
+    s = get_scheduler("local_sgd", period=7)
+    assert s.cfg.period == 7 and s.diverges_params and s.has_param_rounds
+
+
+# ---------------------------------------------------------------------------
+# Rounds-accounting properties (host-side dispatch, no compilation)
+# ---------------------------------------------------------------------------
+
+def _simulate(sched, steps, probes=None):
+    state = sched.init_state({"w": jnp.zeros((3,))})
+    actions = []
+    for t in range(steps):
+        a, state = sched.round(t, state, None if probes is None
+                               else probes[t])
+        actions.append(a)
+        state = sched.commit(state, a, {"w": jnp.ones((3,))})
+    return actions
+
+
+def test_every_step_rounds():
+    acts = _simulate(get_scheduler("every_step"), 17)
+    assert all(a.compute == "sync" and not a.param_round for a in acts)
+
+
+def test_local_sgd_rounds_match_table2():
+    cfg = LocalSGDConfig(period=4, post_local_after=3)
+    sched = get_scheduler("local_sgd", cfg=cfg)
+    acts = _simulate(sched, 12)
+    assert all(a.compute == "local" for a in acts)
+    assert sum(a.param_round for a in acts) == communication_rounds(12, cfg)
+    assert [t for t, a in enumerate(acts) if a.param_round] == \
+        [0, 1, 2, 3, 7, 11]
+
+
+def test_push_pull_rounds_match_config():
+    cfg = AsymmetricPushPullConfig(n_push=2, n_fetch=3)
+    acts = _simulate(get_scheduler("push_pull", cfg=cfg), 12)
+    rounds = cfg.rounds(12)
+    assert sum(a.compute == "sync" for a in acts) == rounds["push"] == 6
+    assert sum(a.param_round for a in acts) == rounds["fetch"] == 4
+    assert acts[0].compute == "local"   # step 0 pushes nothing (n_push=2)
+
+
+def test_lag_rounds_follow_trigger():
+    sched = get_scheduler("lag", threshold=0.5)
+    probes = [{"delta": 1.0, "scale": 1.0},   # first: ||g-0||² = ||g||² > θ
+              {"delta": 0.1, "scale": 1.0},   # small change: reuse
+              {"delta": 0.9, "scale": 1.0}]   # large change: sync
+    acts = _simulate(sched, 3, probes)
+    assert [a.compute for a in acts] == ["sync", "reuse", "sync"]
+    with pytest.raises(ValueError):
+        sched.round(0, sched.init_state({"w": jnp.zeros(2)}), None)
+
+
+def test_lag_first_round_always_syncs():
+    """θ >= 1 must not freeze training: g_last starts at zero (delta ==
+    scale), so the first round syncs unconditionally; only later rounds
+    consult the threshold."""
+    sched = get_scheduler("lag", threshold=5.0)
+    acts = _simulate(sched, 3, [{"delta": 1.0, "scale": 1.0}] * 3)
+    assert [a.compute for a in acts] == ["sync", "reuse", "reuse"]
+
+
+def test_lag_rejects_check_every():
+    from repro.core import LAGConfig
+    with pytest.raises(ValueError):
+        get_scheduler("lag", cfg=LAGConfig(threshold=0.1, check_every=10))
+
+
+def test_lag_commit_updates_g_last_and_rounds():
+    sched = get_scheduler("lag", threshold=0.5)
+    state = sched.init_state({"w": jnp.zeros((2,))})
+    a, state = sched.round(0, state, {"delta": 1.0, "scale": 1.0})
+    state = sched.commit(state, a, {"w": jnp.full((2,), 3.0)})
+    assert int(state["rounds"]) == 1
+    np.testing.assert_array_equal(np.asarray(state["g_last"]["w"]),
+                                  np.full((2,), 3.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: every-step strategy == legacy GradientSynchronizer path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync_kw", [
+    dict(compressor="int8", algo="ring"),                    # allreduce wire
+    dict(compressor="topk", algo="ring",
+         compressor_args=(("ratio", 0.25),), bucket_bytes=8192),  # gather+EF
+])
+def test_every_step_session_equals_legacy_path(sync_kw):
+    """TrainSession with the degenerate every-step strategy must reproduce
+    the legacy make_comm_optimized_train_step loop bit-for-bit: params,
+    optimizer state and EF residuals over 3 steps."""
+    from repro.configs import get_config, reduced
+    from repro.data import DataConfig, SyntheticPipeline
+    from repro.launch.mesh import data_axes, make_host_mesh
+    from repro.launch.steps import make_comm_optimized_train_step
+    from repro.models import Model
+    from repro.models.sharding_ctx import set_mesh_ctx
+    from repro.optim import make_optimizer, warmup_cosine
+
+    steps = 3
+    scfg = SyncConfig(**sync_kw)
+    cfg = SessionConfig(**dict(ARCH_KW, steps=steps))
+    sess = TrainSession(cfg, strategy=make_strategy(
+        "every_step", axes=("data",), sync=scfg))
+    sess.run(steps)
+
+    # the legacy wiring, exactly as train.py's main() used to hand-build it
+    model_cfg = reduced(get_config(cfg.arch))
+    model = Model(model_cfg)
+    mesh = make_host_mesh(data=1, model=len(jax.devices()))
+    set_mesh_ctx(mesh, ("data",))
+    axes = data_axes(mesh)
+    opt = make_optimizer(cfg.optimizer,
+                         lr=warmup_cosine(cfg.lr, cfg.warmup, cfg.steps))
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    opt_state = opt.init(params)
+    data = SyntheticPipeline(DataConfig(vocab_size=model_cfg.vocab_size,
+                                        seq_len=cfg.seq,
+                                        global_batch=cfg.batch))
+    step_fn, _, init_sync_state = make_comm_optimized_train_step(
+        model, opt, scfg, mesh, axes)
+    sync_state = init_sync_state(params)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    for step in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(step))
+        params, opt_state, sync_state, loss = jit_step(
+            params, opt_state, sync_state, batch,
+            jnp.asarray(step, jnp.int32), jax.random.fold_in(rng, step))
+
+    for name, a, b in [("params", params, sess.params),
+                       ("opt", opt_state, sess.opt_state),
+                       ("sync_state",
+                        jax.tree.map(lambda s: s[0], sync_state),
+                        sess.sync_state)]:
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb), name
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{sync_kw} {name}")
+    assert sess.comm_rounds == sess.grad_rounds == steps
+
+
+# ---------------------------------------------------------------------------
+# The dead --lag regression + honest rounds accounting, end-to-end
+# ---------------------------------------------------------------------------
+
+def test_lag_session_skips_rounds_at_high_threshold():
+    """--lag used to build state and never consult it (every step synced).
+    Under the scheduler, a high threshold in LAG's regime (deterministic
+    full-batch gradients) must reuse the last synced gradient on most
+    steps: rounds < steps, while every step still pays the scalar probe."""
+    steps = 8
+    sess = TrainSession(SessionConfig(**ARCH_KW), strategy=SyncStrategy(
+        scheduler=get_scheduler("lag", threshold=0.5)))
+    orig = sess.data.batch
+    sess.data.batch = lambda step, **kw: orig(0)   # LAG's full-batch regime
+    p0 = jax.tree.leaves(sess.params)[0].copy()
+    sess.run(steps)
+    assert 1 <= sess.grad_rounds < steps, sess.grad_rounds
+    assert sess.control_rounds == steps
+    assert sess.comm_rounds == sess.grad_rounds
+    assert int(sess._sched_state["rounds"]) == sess.grad_rounds
+    # reused gradients still move the parameters
+    assert not np.array_equal(np.asarray(p0),
+                              np.asarray(jax.tree.leaves(sess.params)[0]))
+
+
+def test_local_sgd_session_rounds_accounting():
+    """comm_rounds is the survey's Table 2 quantity: T/τ averaging rounds,
+    not one per step (the legacy loop counted every step as a round)."""
+    sess = TrainSession(SessionConfig(**dict(ARCH_KW, steps=7)),
+                        strategy=make_strategy("local_sgd", period=3,
+                                               axes=("data",)))
+    losses = sess.run(7)
+    assert sess.grad_rounds == 0
+    assert sess.param_rounds == communication_rounds(
+        7, LocalSGDConfig(period=3)) == 2
+    assert sess.comm_rounds == 2
+    assert all(np.isfinite(losses))
+
+
+def test_push_pull_session_with_compressed_push():
+    """Asymmetric push/pull composed with a compressing (EF) grad reducer:
+    params/opt state diverge per worker between rounds, the EF residual is
+    per-worker, and the two cadences are counted separately."""
+    sess = TrainSession(
+        SessionConfig(**dict(ARCH_KW, steps=5)),
+        strategy=make_strategy("push_pull", n_push=2, n_fetch=2,
+                               axes=("data",),
+                               sync=SyncConfig(compressor="topk",
+                                               compressor_args=(("ratio",
+                                                                 0.25),))))
+    losses = sess.run(5)
+    expect = AsymmetricPushPullConfig(n_push=2, n_fetch=2).rounds(5)
+    assert sess.grad_rounds == expect["push"] == 2
+    assert sess.param_rounds == expect["fetch"] == 2
+    assert all(np.isfinite(losses))
+    assert sess.sync_state is not None and "error" in sess.sync_state
+    # EF residual must be parameter-shaped, not worker-axis-mangled
+    errs = [e for e in sess.sync_state["error"] if e is not None]
+    assert errs and all(e.ndim >= 1 for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-round program (anchor-delta compressed averaging)
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(3)
+    return {"w": jax.random.normal(k, (16, 8)),
+            "b": jax.random.normal(jax.random.PRNGKey(4), (5,))}
+
+
+def _run_param_round(sync_cfg):
+    from repro.launch.steps import (broadcast_worker_state,
+                                    make_param_round_step)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = _toy_params()
+    reducer = PlanExecutor(plan_from_config(sync_cfg, params), ("data",))
+    round_fn = jax.jit(make_param_round_step(reducer, mesh, ("data",)))
+    anchor = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    # pretend one local phase moved the params
+    moved = jax.tree.map(lambda p: p + 0.01 * jnp.sign(p), params)
+    out, new_anchor, _ = round_fn(
+        broadcast_worker_state(moved, 1), anchor,
+        broadcast_worker_state(reducer.init_state(params), 1),
+        jax.random.PRNGKey(0))
+    return moved, jax.tree.map(lambda s: s[0], out), new_anchor
+
+
+def test_param_round_dense_is_exact_average():
+    """anchor + mean(p - anchor) with a dense plan is exactly mean(p) —
+    on one worker, the moved params themselves."""
+    moved, out, new_anchor = _run_param_round(SyncConfig(compressor="none"))
+    for k in moved:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(moved[k]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_anchor[k]),
+                                   np.asarray(out[k]), rtol=1e-6)
+
+
+def test_param_round_preserves_param_dtype():
+    """A compressed round must hand back params in their ORIGINAL dtype
+    (bf16 stays bf16 — the f32 anchor is round state, not the params),
+    otherwise the first averaging round silently doubles parameter memory
+    and retraces the local step."""
+    from repro.launch.steps import (broadcast_worker_state,
+                                    make_param_round_step)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), _toy_params())
+    reducer = PlanExecutor(
+        plan_from_config(SyncConfig(compressor="int8", bucket_bytes=0),
+                         params), ("data",))
+    round_fn = jax.jit(make_param_round_step(reducer, mesh, ("data",)))
+    anchor = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    out, new_anchor, _ = round_fn(
+        broadcast_worker_state(params, 1), anchor,
+        broadcast_worker_state(reducer.init_state(params), 1),
+        jax.random.PRNGKey(0))
+    for k in params:
+        assert out[k].dtype == jnp.bfloat16, (k, out[k].dtype)
+        assert new_anchor[k].dtype == jnp.float32
+
+
+def test_param_round_compressed_tracks_params():
+    """Compressing the anchor DELTA (not raw params) keeps the round sound:
+    int8 quantization of a 0.01-scale delta lands within quantization error
+    of the true average; compressing raw params would be off by O(|p|)."""
+    moved, out, _ = _run_param_round(SyncConfig(compressor="int8",
+                                                bucket_bytes=0))
+    for k in moved:
+        err = np.abs(np.asarray(out[k]) - np.asarray(moved[k])).max()
+        assert err < 2e-3, (k, err)   # delta scale 0.01, int8 grid ≈ 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Planner rounds axis
+# ---------------------------------------------------------------------------
+
+def _profs(n=12, mb=4.0, t_layer=2e-4):
+    return [LayerProfile(t_backward_s=t_layer, grad_bytes=mb * 2**20)
+            for _ in range(n)]
+
+
+def test_rounds_axis_commodity_picks_periodic_compressed():
+    """When communication dominates compute (slow link, light backward) the
+    composite winner must reduce rounds AND bits: τ>1 with a compressed
+    per-bucket plan — the regime both surveys highlight."""
+    best, arms = plan_rounds(_profs(t_layer=2e-5), LINK_PRESETS["commodity"],
+                             world=64)
+    assert best.schedule.kind == "local_sgd" and best.schedule.period > 1
+    assert any(b.compressor != "none" for b in best.comm.buckets)
+    assert best.modeled_step_s <= arms["every_step"].modeled_step_s
+
+
+def test_rounds_axis_fast_link_heavy_backward_stays_every_step():
+    """When overlap already hides communication, reducing rounds buys
+    nothing but the statistical surcharge: every-step dense must win."""
+    best, _ = plan_rounds(_profs(t_layer=1e-3), LINK_PRESETS["fast_ici"],
+                          world=64)
+    assert best.schedule.kind == "every_step"
+    assert all(b.compressor == "none" for b in best.comm.buckets)
+
+
+def test_rounds_axis_never_slower_than_fixed_baselines():
+    """The acceptance invariant extends to composites: the winner is never
+    modeled slower than any fixed every-step config."""
+    from repro.core.schedule import fixed_config_plan
+    from repro.core.schedule.planner import FIXED_BASELINES
+    for preset in ("fast_ici", "datacenter", "commodity"):
+        link = LINK_PRESETS[preset]
+        for world in (8, 64, 256):
+            profs = _profs()
+            best, _ = plan_rounds(profs, link, world)
+            for name, (comp, algo, cargs) in FIXED_BASELINES.items():
+                fp = fixed_config_plan(profs, link, world, comp, algo,
+                                       compressor_args=cargs)
+                assert best.modeled_step_s <= fp.modeled_step_s + 1e-12, (
+                    preset, world, name)
+
+
+def test_serial_round_plan_cost_is_sum_of_buckets():
+    from repro.core.schedule.cost import bucket_sync_cost_s
+    link = LINK_PRESETS["datacenter"]
+    rp = serial_round_plan(_profs(), link, world=32)
+    total = sum(bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
+                                   b.bucket_bytes, 32, link)
+                for b in rp.buckets)
+    assert abs(rp.modeled_step_s - total) < 1e-12
+
+
+def test_strategy_from_plan_round_trip():
+    best, arms = plan_rounds(_profs(t_layer=2e-5), LINK_PRESETS["commodity"],
+                             world=64)
+    st = strategy_from_plan(best, ("data",))
+    assert st.scheduler.name == "local_sgd"
+    assert isinstance(st.param_reducer, PlanExecutor)
+    st2 = strategy_from_plan(arms["every_step"], ("data",))
+    assert st2.scheduler.name == "every_step"
+    assert isinstance(st2.grad_reducer, PlanExecutor)
+
+
+def test_make_strategy_routes_reducers():
+    scfg = SyncConfig(compressor="int8", algo="ring")
+    st = make_strategy("every_step", axes=("data",), sync=scfg)
+    assert isinstance(st.grad_reducer, GradientSynchronizer)
+    assert st.param_reducer is None
+    st = make_strategy("local_sgd", period=4, axes=("data",), sync=scfg)
+    assert st.grad_reducer is None        # pure param-round scheduler:
+    assert isinstance(st.param_reducer, GradientSynchronizer)  # cfg -> round
+    st = make_strategy("push_pull", n_push=2, n_fetch=3, axes=("data",),
+                       sync=scfg)
+    assert isinstance(st.grad_reducer, GradientSynchronizer)
+    assert st.param_reducer is None       # fetch rounds: plain averaging
