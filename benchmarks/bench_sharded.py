@@ -1,0 +1,153 @@
+"""Sharded data parallelism: modeled + measured comparison (ISSUE 3).
+
+Two views, both emitted as ``name,us_per_call,derived`` rows:
+
+  * ``sharded/modeled/...`` — for full-size archs × link regimes, the
+    modeled iteration time and per-worker optimizer-state memory of the
+    fixed REPLICATED dense mode, the fixed SHARDED dense mode, and the
+    planner's auto composite with the shard axis enabled.  Asserted
+    acceptance inequalities: auto is never modeled slower than either
+    fixed mode, the sharded fixed mode is never modeled faster than the
+    replicated one (the gather tail is pure wall-clock cost), and the
+    sharded memory is ~(moments+1)/(moments·world) of replicated.  A
+    budget-constrained row shows the planner flipping to the shard arm
+    when replicated optimizer state does not fit.
+
+  * ``sharded/measured/...`` — on the host mesh, MEASURED wall time per
+    train step for the sharded vs replicated execution of the same dense
+    plan on a reduced arch, plus the measured per-worker bytes of the
+    partitioned state arrays (exact nbytes, not a model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import LINK_PRESETS, emit, time_fn
+from repro.configs import get_config, reduced
+from repro.core.schedule import (fixed_config_plan, opt_state_bytes_per_worker,
+                                 plan_rounds, profiles_from_grads)
+
+ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
+REGIMES = ("fast_ici", "commodity")
+PEAK_FLOPS = 197e12
+TOKENS = 4096
+WORLD = 256
+OPT = "adam"
+
+
+def _modeled():
+    from repro.models import Model
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        params = Model(cfg).abstract_params()
+        n_params = sum(int(jnp.prod(jnp.asarray(p.shape)))
+                       for p in jax.tree.leaves(params))
+        t_backward = 4.0 * n_params * TOKENS / PEAK_FLOPS
+        profiles = profiles_from_grads(params, t_backward)
+        pb = float(sum(p.grad_bytes for p in profiles))
+        for regime in REGIMES:
+            link = LINK_PRESETS[regime]
+            fixed = {}
+            for shard in (False, True):
+                fp = fixed_config_plan(profiles, link, WORLD, "none", "ring",
+                                       shard_state=shard)
+                mem = opt_state_bytes_per_worker(OPT, pb, WORLD, shard)
+                tag = "sharded" if shard else "replicated"
+                fixed[shard] = fp.modeled_step_s
+                emit(f"sharded/modeled/{arch}/{regime}/fixed_{tag}",
+                     fp.modeled_step_s * 1e6,
+                     f"opt_mem_mib={mem / 2**20:.1f}")
+            # the gather tail is pure cost: fixed sharded >= fixed replicated
+            assert fixed[True] >= fixed[False] - 1e-15, (arch, regime)
+            # memory identity: ~(mom+1)/(mom*world)
+            ratio = (opt_state_bytes_per_worker(OPT, pb, WORLD, True)
+                     / opt_state_bytes_per_worker(OPT, pb, WORLD, False))
+            assert abs(ratio - 1.5 / WORLD) < 1e-12, ratio
+
+            best, arms = plan_rounds(profiles, link, WORLD, opt_name=OPT)
+            assert best.modeled_step_s <= min(fixed.values()) + 1e-12, \
+                (arch, regime)
+            emit(f"sharded/modeled/{arch}/{regime}/auto",
+                 best.modeled_step_s * 1e6,
+                 f"schedule={best.schedule.key} shard={best.shard_state} "
+                 f"speedup_vs_best_fixed="
+                 f"{min(fixed.values()) / best.modeled_step_s:.2f}x")
+
+            # a budget below the replicated footprint forces the shard arm
+            budget = opt_state_bytes_per_worker(OPT, pb, WORLD, False) / 2
+            tight, _ = plan_rounds(profiles, link, WORLD, opt_name=OPT,
+                                   memory_budget_bytes=budget)
+            assert tight.shard_state, (arch, regime)
+            assert tight.opt_mem_bytes <= budget, (arch, regime)
+            assert tight.modeled_step_s <= fixed[True] + 1e-12, (arch, regime)
+            emit(f"sharded/modeled/{arch}/{regime}/auto_budget",
+                 tight.modeled_step_s * 1e6,
+                 f"budget_mib={budget / 2**20:.0f} "
+                 f"opt_mem_mib={tight.opt_mem_bytes / 2**20:.1f}")
+
+
+def _measured():
+    from repro.core import PlanExecutor, ShardLayout, SyncConfig
+    from repro.core.grad_sync import sharded_plan_from_config
+    from repro.data import DataConfig, SyntheticPipeline
+    from repro.launch.mesh import data_axes, make_host_mesh
+    from repro.launch.steps import (_make_synced_train_step,
+                                    make_sharded_train_step)
+    from repro.optim import make_optimizer, make_sharded_optimizer
+
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    axes = data_axes(mesh)
+    world = 1
+    for a in axes:
+        world *= mesh.shape[a]
+    arch = "xlstm-125m"
+    cfg = reduced(get_config(arch))
+    from repro.models import Model
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=2 * world))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    rng = jax.random.PRNGKey(1)
+    step_i = jnp.zeros((), jnp.int32)
+    plan_ = sharded_plan_from_config(SyncConfig(), params)
+
+    opt = make_optimizer(OPT, lr=1e-3)
+    step_fn, _, init_ss = _make_synced_train_step(
+        model, opt, PlanExecutor(plan_, axes), mesh, axes)
+    opt_state, sync_state = opt.init(params), init_ss(params)
+    jit_r = jax.jit(step_fn)
+    us_r = time_fn(lambda: jit_r(params, opt_state, sync_state, batch,
+                                 step_i, rng), iters=5, warmup=1)
+    rep_bytes = sum(np.asarray(x).nbytes
+                    for x in jax.tree.leaves(opt_state))
+    emit(f"sharded/measured/{arch}/replicated", us_r,
+         f"world={world} opt_bytes={rep_bytes}")
+
+    axis_sizes = tuple(mesh.shape[a] for a in axes)
+    layout = ShardLayout.from_plan(plan_, params, axis_sizes)
+    shopt = make_sharded_optimizer(OPT, layout, axes, lr=1e-3)
+    sfn, init_rows, init_ss2 = make_sharded_train_step(
+        model, PlanExecutor(plan_, axes), layout, shopt, mesh, axes)
+    rows, sync_state2 = init_rows(params), init_ss2(params)
+    jit_s = jax.jit(sfn)
+    us_s = time_fn(lambda: jit_s(params, rows, sync_state2, batch,
+                                 step_i, rng), iters=5, warmup=1)
+    # exact per-worker bytes of the partitioned arrays (master + moments)
+    shard_bytes = sum(np.asarray(x).nbytes
+                      for x in jax.tree.leaves(rows)) // world
+    emit(f"sharded/measured/{arch}/sharded", us_s,
+         f"world={world} opt_bytes_per_worker={shard_bytes} "
+         f"overhead_vs_replicated={us_s / us_r:.2f}x")
+
+
+def run():
+    _modeled()
+    _measured()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

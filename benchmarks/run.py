@@ -11,7 +11,7 @@ import traceback
 
 from benchmarks import (bench_collectives, bench_compression,
                         bench_large_batch, bench_overlap, bench_periodic,
-                        bench_planner, bench_protocols)
+                        bench_planner, bench_protocols, bench_sharded)
 
 SUITES = {
     "table1": bench_large_batch,
@@ -21,6 +21,7 @@ SUITES = {
     "fig10": bench_collectives,
     "protocols": bench_protocols,
     "planner": bench_planner,
+    "sharded": bench_sharded,
 }
 
 

@@ -1,17 +1,18 @@
 #!/usr/bin/env bash
-# Smoke suite: tier-1 tests + quickstart example + a 5-step `--sync auto`
-# train on the reduced xlstm-125m config (the communication-planner
-# acceptance path).  Run from the repo root:
+# Smoke suite: tier-1 tests (fast selection — pytest.ini excludes the
+# `slow` marker, which runs as its own CI matrix job) + quickstart example
+# + a 5-step `--sync auto` train + a 3-step `--shard-state` train on the
+# reduced xlstm-125m config.  Run from the repo root:
 #
 #     bash scripts/ci.sh [--fast]
 #
-# --fast skips the (slow on CPU) xlstm auto-train.
+# --fast skips the (slow on CPU) xlstm trains.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1: pytest ==="
+echo "=== tier-1: pytest (fast selection) ==="
 python -m pytest -x -q
 
 echo "=== smoke: examples/quickstart.py ==="
@@ -25,9 +26,14 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 5 --batch 2 --seq 32 --sync auto \
       --plan-world 256 --link commodity --plan-backward-ms 20 --log-every 1
+
+  echo "=== smoke: 3-step sharded-DP train (--shard-state) ==="
+  python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 3 --batch 2 --seq 32 --shard-state --log-every 1
 fi
 
-echo "=== smoke: planner benchmark (modeled only is fast; full table) ==="
+echo "=== smoke: planner + sharded benchmarks (modeled tables) ==="
 python -m benchmarks.run --only planner
+python -m benchmarks.run --only sharded
 
 echo "ALL SMOKE CHECKS PASSED"

@@ -43,8 +43,9 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save as save_ckpt
 from repro.configs import get_config, reduced
-from repro.core import (GradientSynchronizer, PlanExecutor, SyncConfig,
-                        SyncStrategy, get_scheduler)
+from repro.core import (GradientSynchronizer, PlanExecutor, ShardLayout,
+                        SyncConfig, SyncStrategy, get_scheduler)
+from repro.core.grad_sync import sharded_plan_from_config
 from repro.core.schedule import (LINK_PRESETS, LinkParams, RoundSchedule,
                                  StrategyPlan, fixed_config_plan, plan,
                                  plan_rounds, profiles_from_grads,
@@ -56,10 +57,11 @@ from repro.launch.mesh import data_axes, make_host_mesh
 from repro.launch.steps import (_make_synced_train_step, _world_of,
                                 broadcast_worker_state, make_lag_programs,
                                 make_local_train_step, make_param_round_step,
-                                make_train_step, worker_view)
+                                make_sharded_train_step, make_train_step,
+                                worker_view)
 from repro.models import Model
 from repro.models.sharding_ctx import set_mesh_ctx
-from repro.optim import make_optimizer, warmup_cosine
+from repro.optim import make_optimizer, make_sharded_optimizer, warmup_cosine
 
 
 @dataclasses.dataclass
@@ -86,7 +88,8 @@ def strategy_from_plan(sp: StrategyPlan,
             scheduler=get_scheduler("local_sgd", period=sp.schedule.period),
             param_reducer=PlanExecutor(sp.comm, tuple(axes)))
     return SyncStrategy(scheduler=get_scheduler("every_step"),
-                        grad_reducer=PlanExecutor(sp.comm, tuple(axes)))
+                        grad_reducer=PlanExecutor(sp.comm, tuple(axes)),
+                        shard_state=sp.shard_state)
 
 
 class TrainSession:
@@ -116,6 +119,7 @@ class TrainSession:
         self.axes = data_axes(self.mesh)
         self.world = _world_of(self.mesh, self.axes)
         lr = warmup_cosine(c.lr, c.warmup, c.steps)
+        self._lr = lr          # schedule, reused by the sharded optimizer
         self.optimizer = make_optimizer(c.optimizer, lr=lr)
         self.data = SyntheticPipeline(DataConfig(
             vocab_size=model_cfg.vocab_size, seq_len=c.seq,
@@ -125,6 +129,13 @@ class TrainSession:
         self.rng = jax.random.PRNGKey(c.seed)
         self._params = self.model.init(self.rng)
         self._opt_state = self.optimizer.init(self._params)
+        # measured f32 moment buffers per parameter (sgd with momentum=0.0
+        # carries none; the planner's per-name default would over-count) —
+        # feeds the memory model and the per-worker report
+        n_elems = sum(l.size for l in jax.tree.leaves(self._params))
+        self.opt_moments = (sum(l.size for l in
+                                jax.tree.leaves(self._opt_state))
+                            / max(n_elems, 1))
 
         self.step = 0
         self.losses: List[float] = []
@@ -132,6 +143,7 @@ class TrainSession:
         self.param_rounds = 0
         self.control_rounds = 0
         self.planned: Optional[Dict[str, Any]] = None
+        self.layout: Optional[ShardLayout] = None   # set by sharded builds
         self._built = False
 
     # -- state views ---------------------------------------------------------
@@ -191,16 +203,28 @@ class TrainSession:
 
     def plan_auto(self, link="fast_ici", *, alpha=None, beta_gbps=None,
                   plan_world: int = 0, tau_grid=None, candidates=None,
-                  scheduler=None, t_backward_s: Optional[float] = None
-                  ) -> StrategyPlan:
+                  scheduler=None, t_backward_s: Optional[float] = None,
+                  shard_state: Optional[bool] = None,
+                  memory_budget_gb: Optional[float] = None) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
-        per-bucket strategy), install the winning composite as this
-        session's strategy.  ``scheduler`` pins the rounds axis (an
+        per-bucket strategy × shard axis), install the winning composite as
+        this session's strategy.  ``scheduler`` pins the rounds axis (an
         explicit ``--local-sgd``/``--lag``/``--push-pull`` choice) and only
-        the per-bucket plan is searched.  Stashes the full decision record
-        in ``self.planned`` for reporting."""
+        the per-bucket plan is searched.  ``shard_state`` pins the shard
+        axis (None = searched: sharded wins only when
+        ``memory_budget_gb`` rules replicated optimizer state out — the
+        gather tail never wins on wall clock alone).  Stashes the full
+        decision record in ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
+        if scheduler is not None and shard_state:
+            raise ValueError("shard_state composes only with the planner's "
+                             "every-step arm, not a pinned rounds scheduler")
+        if scheduler is not None and memory_budget_gb is not None:
+            raise ValueError(
+                "memory_budget_gb constrains the planner's FREE search "
+                "over arms; a pinned rounds scheduler fixes the memory "
+                "footprint, so the budget cannot be enforced — drop one")
         lp = self.resolve_link(link, alpha, beta_gbps)
         world = plan_world or self.world
         if t_backward_s is None:
@@ -213,8 +237,15 @@ class TrainSession:
 
         arms: Dict[str, StrategyPlan]
         if scheduler is None:
+            shard_grid = ((False, True) if shard_state is None
+                          else (bool(shard_state),))
             best, arms = plan_rounds(
                 profiles, lp, world,
+                opt_name=self.cfg.optimizer, shard_grid=shard_grid,
+                opt_moments=self.opt_moments,
+                memory_budget_bytes=(memory_budget_gb * 2**30
+                                     if memory_budget_gb is not None
+                                     else None),
                 **dict(kw, **({"tau_grid": tau_grid}
                               if tau_grid is not None else {})))
             self.strategy = strategy_from_plan(best, self.axes)
@@ -265,6 +296,11 @@ class TrainSession:
             self._built = True
             return
 
+        if self.strategy.shard_state:
+            self._build_sharded(self.strategy)
+            self._built = True
+            return
+
         st = self.strategy
         sched = st.scheduler
         self._sched_state = sched.init_state(self._params)
@@ -308,6 +344,56 @@ class TrainSession:
             self._opt_state = broadcast_worker_state(self._opt_state,
                                                      self.world)
         self._built = True
+
+    def _build_sharded(self, st: SyncStrategy) -> None:
+        """Sharded-DP programs (DESIGN.md §8): the every-step sync program
+        is replaced by ``make_sharded_train_step`` and ``self._opt_state``
+        becomes the partitioned {master, moments} shard rows."""
+        sched = st.scheduler
+        if (sched.computes != frozenset({"sync"}) or sched.has_param_rounds
+                or sched.needs_grad_probe or sched.diverges_params):
+            raise ValueError(
+                f"shard_state requires an every-step gradient-sync "
+                f"scheduler, got {sched.name!r}: local phases (local_sgd/"
+                f"push_pull) and gradient reuse (lag) need full per-worker "
+                f"optimizer state by construction")
+        self._sched_state = sched.init_state(self._params)
+        engine = st.grad_reducer
+        if engine is None:
+            engine = PlanExecutor(
+                sharded_plan_from_config(SyncConfig(), self._params),
+                tuple(self.axes))
+        elif isinstance(engine, GradientSynchronizer):
+            engine = PlanExecutor(
+                sharded_plan_from_config(engine.cfg, self._params),
+                tuple(self.axes))
+        axis_sizes = tuple(self.mesh.shape[a] for a in self.axes)
+        self.layout = ShardLayout.from_plan(engine.plan, self._params,
+                                            axis_sizes)
+        shopt = make_sharded_optimizer(self.cfg.optimizer, self.layout,
+                                       self.axes, lr=self._lr)
+        step_fn, init_opt_rows, init_sync_state = make_sharded_train_step(
+            self.model, engine, self.layout, shopt, self.mesh, self.axes)
+        self._sync = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        self._opt_state = init_opt_rows(self._params)   # replaces replicated
+        self._sync_state = init_sync_state(self._params)
+        self._anchor = None
+        self._red_state = None
+
+    def full_opt_state(self):
+        """Leaf-shaped view of the optimizer state: the replicated state
+        as-is, or — in sharded mode — moments and the f32 master params
+        reconstructed from the canonical shard rows (checkpoint
+        portability / conformance testing)."""
+        if not (self._built and self.strategy is not None
+                and self.strategy.shard_state):
+            return self.opt_state
+        rows = self._opt_state
+        full = {k: self.layout.tree_from_rows(v, self._params)
+                for k, v in rows["opt"].items()}
+        full["master"] = self.layout.tree_from_rows(rows["master"],
+                                                    self._params)
+        return full
 
     # -- stepping ------------------------------------------------------------
 
@@ -391,7 +477,13 @@ class TrainSession:
         return out
 
     def save_checkpoint(self, path: str) -> None:
-        save_ckpt(path, {"params": self.params, "opt": self.opt_state},
+        """In sharded mode the optimizer state is saved LEAF-SHAPED (via
+        :meth:`full_opt_state` — master params + moments reconstructed
+        from the canonical shard rows), so a checkpoint restores onto any
+        mesh shape or bucket plan; raw (world, m) rows would pin the
+        checkpoint to this run's layout.  ``ShardLayout.shard_rows``
+        re-partitions on restore."""
+        save_ckpt(path, {"params": self.params, "opt": self.full_opt_state()},
                   step=self.step)
 
     def summary(self) -> str:

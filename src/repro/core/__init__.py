@@ -4,6 +4,8 @@ from repro.core.grad_sync import (  # noqa: F401
     GradientSynchronizer, PlanExecutor, SyncConfig, bucketize,
     plan_from_config)
 from repro.core.schedule.planner import BucketPlan, CommPlan  # noqa: F401
+from repro.core.shard_state import (  # noqa: F401
+    BucketShard, ShardLayout, chunk_rows, rows_to_flat)
 from repro.core.local_sgd import (  # noqa: F401
     AsymmetricPushPullConfig, LocalSGDConfig, average_params,
     communication_rounds, should_sync)

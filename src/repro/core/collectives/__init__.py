@@ -1,7 +1,10 @@
 from repro.core.collectives.api import (  # noqa: F401
-    ALGOS, LinkParams, allreduce, allreduce_cost_s)
+    ALGOS, LinkParams, all_gather_shards, allreduce, allreduce_cost_s,
+    local_chunk, my_chunk_index, nested_shard_len, pad_to_chunks,
+    reduce_scatter)
 from repro.core.collectives.ring import (  # noqa: F401
-    ring_allreduce, ring_reduce_scatter, ring_all_gather_chunks)
+    ring_all_gather_canonical, ring_allreduce, ring_reduce_scatter,
+    ring_all_gather_chunks, ring_reduce_scatter_canonical)
 from repro.core.collectives.tree import tree_allreduce  # noqa: F401
 from repro.core.collectives.hierarchical import hierarchical_allreduce  # noqa: F401
 from repro.core.collectives.mesh2d import mesh2d_allreduce  # noqa: F401

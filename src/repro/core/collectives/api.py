@@ -12,9 +12,13 @@ from typing import Sequence
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core.collectives.hierarchical import hierarchical_allreduce
 from repro.core.collectives.mesh2d import mesh2d_allreduce
-from repro.core.collectives.ring import ring_allreduce
+from repro.core.collectives.ring import (ring_all_gather_canonical,
+                                         ring_allreduce,
+                                         ring_reduce_scatter_canonical)
 from repro.core.collectives.tree import tree_allreduce
 from repro.core.schedule.cost import (  # noqa: F401  (compat re-export)
     LINK_PRESETS, LinkParams, allreduce_cost_s)
@@ -46,3 +50,99 @@ def allreduce(x, algo: str, axes: Sequence[str]):
             return ring_allreduce(x, axes[0])
         return mesh2d_allreduce(x, axes[0], axes[1], split=algo == "mesh2d_split")
     raise ValueError(f"unknown collective algo {algo!r}; known: {ALGOS}")
+
+
+# ---------------------------------------------------------------------------
+# Sharded-DP edges: reduce_scatter / all_gather (survey §3.1.3, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# Chunking convention (shared with repro.core.shard_state's host-side twin):
+# the flat buffer is padded and split NESTED over the manual axes in order —
+# first into p1 chunks of m1 = ceil(n/p1), each of those into p2 chunks of
+# m2 = ceil(m1/p2), ... — so the canonical owner of the chunk at flat offset
+# w*m is the device at row-major mesh position w over the data axes.  The
+# nesting is what lets the explicit ring variants scatter one axis at a time
+# (hierarchical reduce-scatter) while agreeing bit-for-bit on WHO owns WHAT
+# with the psum-based variant and with host-side state initialisation.
+
+def nested_shard_len(n: int, axis_sizes) -> int:
+    """Per-rank shard length of an n-element buffer under nested chunking."""
+    m = int(n)
+    for p in axis_sizes:
+        m = -(-m // int(p))
+    return m
+
+
+def pad_to_chunks(flat, axis_sizes):
+    """Reorder/pad a flat buffer to canonical chunk-major order
+    ((world*m,), chunk w at [w*m, (w+1)*m)) under nested chunking."""
+    arr = flat.reshape(1, -1)
+    for p in axis_sizes:
+        n = arr.shape[-1]
+        m = -(-n // int(p))
+        arr = jnp.pad(arr, [(0, 0)] * (arr.ndim - 1) + [(0, int(p) * m - n)])
+        arr = arr.reshape(arr.shape[:-1] + (int(p), m))
+    return arr.reshape(-1)
+
+
+def my_chunk_index(axes: Sequence[str]):
+    """Row-major rank index over the manual ``axes`` (the canonical shard
+    this rank owns).  Must run inside shard_map."""
+    w = 0
+    for ax in axes:
+        w = w * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return w
+
+
+def local_chunk(flat, axes: Sequence[str], axis_sizes=None):
+    """This rank's canonical chunk of an (already summed) flat buffer —
+    the zero-communication fallback used when a full reduction is already
+    in hand (psum algo, PowerSGD's reconstructed approximation)."""
+    axes = tuple(axes)
+    sizes = tuple(axis_sizes) if axis_sizes is not None else tuple(
+        jax.lax.axis_size(ax) for ax in axes)
+    m = nested_shard_len(flat.size, sizes)
+    padded = pad_to_chunks(flat.reshape(-1), sizes)
+    return jax.lax.dynamic_slice_in_dim(padded, my_chunk_index(axes) * m, m)
+
+
+def reduce_scatter(x, algo: str, axes: Sequence[str]):
+    """Sum a flat buffer over the manual ``axes`` and return this rank's
+    canonical chunk ((m,), nested-padded).
+
+    * ``psum``: XLA allreduce + local slice — bit-identical to the psum
+      allreduce path (XLA owns the wire; on TPU it rewrites to a true
+      reduce-scatter where profitable).  The α-β model prices the edge as
+      a genuine reduce-scatter (cost.reduce_scatter_cost_s).
+    * everything else: explicit ring reduce-scatter per axis (one axis =
+      ring, the bandwidth-optimal (p-1)·n/p edge; two axes = hierarchical,
+      inner ring then outer ring on the 1/p1 shard).  Chunk values are
+      bit-identical to the matching slices of ``ring_allreduce``.
+    """
+    axes = tuple(axes)
+    if algo == "psum":
+        return local_chunk(jax.lax.psum(x.reshape(-1), axes), axes)
+    out = x.reshape(-1)
+    for ax in axes:
+        out, _ = ring_reduce_scatter_canonical(out, ax)
+    return out
+
+
+def all_gather_shards(shard, n: int, algo: str, axes: Sequence[str]):
+    """Inverse edge: every rank contributes its canonical chunk (m,) and
+    gets back the full unpadded buffer (n,).  ``psum`` uses XLA's
+    all-gather; other algos run the explicit ring gather per axis (inner
+    axes first, undoing the nested padding level by level)."""
+    axes = tuple(axes)
+    sizes = [jax.lax.axis_size(ax) for ax in axes]
+    lens = [int(n)]
+    for p in sizes[:-1]:
+        lens.append(-(-lens[-1] // p))
+    out = shard.reshape(-1)
+    for ax, ln in zip(reversed(axes), reversed(lens)):
+        if algo == "psum":
+            out = jax.lax.all_gather(out, ax, tiled=True)
+        else:
+            out = ring_all_gather_canonical(out, ax)
+        out = out[:ln]
+    return out

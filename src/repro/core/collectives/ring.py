@@ -66,3 +66,37 @@ def ring_allreduce(x, axis: str):
     mine, my_idx, n = ring_reduce_scatter(x, axis)
     gathered = ring_all_gather_chunks(mine, my_idx, p, axis)
     return gathered.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Canonical-ownership variants (sharded data parallelism, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter_canonical(x, axis: str):
+    """Reduce-scatter with CANONICAL ownership: rank r ends holding chunk r
+    of the padded sum (m = ceil(n/p) elements).
+
+    ``ring_reduce_scatter`` leaves rank r with chunk (r+1) % p; one extra
+    ppermute hop relabels ownership without touching the values, so each
+    chunk stays bit-identical to the corresponding slice of
+    ``ring_allreduce`` — the property the sharded-DP conformance suite
+    asserts.  Returns (my_chunk (m,), n_unpadded)."""
+    p = jax.lax.axis_size(axis)
+    flat = x.reshape(-1)
+    if p == 1:
+        return flat, flat.shape[0]
+    mine, _, n = ring_reduce_scatter(flat, axis)
+    # rank r holds chunk (r+1) % p, whose canonical owner is rank (r+1) % p:
+    # send one hop forward (rank r receives chunk r from rank r-1).
+    return jax.lax.ppermute(mine, axis, _ring_perm(p)), n
+
+
+def ring_all_gather_canonical(shard, axis: str):
+    """Inverse phase for canonically-owned chunks: every rank contributes
+    its chunk r (m,) and ends with the full padded buffer (p*m,)."""
+    p = jax.lax.axis_size(axis)
+    if p == 1:
+        return shard.reshape(-1)
+    r = jax.lax.axis_index(axis)
+    out = ring_all_gather_chunks(shard.reshape(-1), r, p, axis)
+    return out.reshape(-1)

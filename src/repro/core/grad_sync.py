@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.collectives import allreduce
+from repro.core.collectives import allreduce, local_chunk, reduce_scatter
 from repro.core.compression import get_compressor
 from repro.core.schedule.planner import (BucketPlan, CommPlan,
                                          form_bucket_indices)
@@ -151,6 +151,30 @@ def plan_from_config(cfg: SyncConfig, grads) -> CommPlan:
             error_feedback=cfg.error_feedback, ef_decay=cfg.ef_decay)
             for b in defs)
     return CommPlan(buckets=buckets, mean=cfg.mean)
+
+
+def sharded_plan_from_config(cfg: SyncConfig, grads) -> CommPlan:
+    """The plan ``--shard-state`` induces from a global ``SyncConfig``:
+    like :func:`plan_from_config` but dense buckets are PACKED at the
+    config's fusion granularity, because the reduce-scatter edge operates
+    on fused flat buffers (a bucket is the scatter unit).
+
+    Bit-compat note (DESIGN.md §8): ring-allreduce sums each chunk in a
+    ring order determined by the chunk's position, so replicated-vs-sharded
+    exactness holds per BUCKET BOUNDARY — executing this same plan on the
+    replicated path (PlanExecutor's fused dense exchange) is the reference
+    the conformance suite compares against; the legacy per-leaf unpacked
+    dense plan differs in the last ulp."""
+    if cfg.compressor != "none":
+        return dataclasses.replace(plan_from_config(cfg, grads),
+                                   shard_state=True)
+    bb = cfg.bucket_bytes if cfg.bucket_bytes > 0 else 32 * 2**20
+    defs, _, _ = bucketize(grads, bb)
+    buckets = tuple(BucketPlan(
+        leaves=tuple(i for i, _ in b), compressor="none", algo=cfg.algo,
+        bucket_bytes=4 * sum(sz for _, sz in b), pack=True,
+        error_feedback=False) for b in defs)
+    return CommPlan(buckets=buckets, mean=cfg.mean, shard_state=True)
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +353,88 @@ class PlanExecutor:
         if "q" in state:
             new_state["q"] = new_qs
         return jax.tree.unflatten(treedef, out), new_state
+
+    # -- sharded-DP sync (reduce-scatter edge, DESIGN.md §8) ------------------
+
+    def sync_shards(self, grads, state, rng):
+        """Sharded-DP gradient exchange: per bucket, this rank's CANONICAL
+        shard of exactly the synced gradient ``__call__`` would return.
+
+          * dense buckets: true ``reduce_scatter`` (ring / nested-ring; the
+            psum algo is psum + local slice, XLA owning the wire) — chunk
+            values are bit-identical to the matching allreduce slices;
+          * aggregatable compressed (PowerSGD factors, qsgd): the payload
+            exchange is unchanged, and the reconstructed approximation is
+            sliced locally (zero extra wire);
+          * gather-pattern compressed (sign/top-k/int8): the SAME compressed
+            payload all-gather as replicated mode — every rank decompresses
+            and keeps its owned slice of the sum — so EF residual dynamics
+            are bit-identical to replicated mode (the residual corrects
+            what this worker SENT, which sharding does not change).
+
+        Returns ``(bucket_shards, new_state)`` where ``bucket_shards[j]`` is
+        the (m_j,) f32 mean-gradient shard of plan bucket j; ``new_state``
+        has the same schema as ``__call__``'s."""
+        plan = self.plan
+        leaves, _ = jax.tree.flatten(grads)
+        self._check_cover(len(leaves))
+        denom = float(self._world()) if plan.mean else 1.0
+        nb = len(plan.buckets)
+        rngs = jax.random.split(rng, nb) if nb else []
+        errors = state.get("error", [None] * nb)
+        qs = state.get("q", [None] * nb)
+
+        shards: List[jnp.ndarray] = []
+        new_errors: List[Optional[jnp.ndarray]] = []
+        new_qs: List[Optional[jnp.ndarray]] = []
+        for j, (b, comp) in enumerate(zip(plan.buckets, self.comps)):
+            if b.compressor == "none":
+                buf = self._pack_bucket(leaves, b.leaves)
+                shards.append(reduce_scatter(buf, b.algo, self.axes) / denom)
+                new_errors.append(errors[j])
+                new_qs.append(qs[j])
+            elif b.compressor == "powersgd":
+                e, q, synced = self._sync_powersgd_leaf(
+                    leaves[b.leaves[0]], errors[j], qs[j], b, comp, denom)
+                # factors were already allreduced; the full approximation is
+                # in hand on every rank — slice, no extra collective
+                shards.append(local_chunk(
+                    synced.reshape(-1).astype(jnp.float32), self.axes))
+                new_errors.append(e)
+                new_qs.append(q)
+            else:
+                buf = (self._pack_bucket(leaves, b.leaves) if b.pack
+                       else leaves[b.leaves[0]].astype(jnp.float32))
+                if comp.aggregatable:
+                    # like _sync_buffer, but the dense decompressed sum
+                    # goes out as a reduce-scatter instead of an allreduce
+                    use_ef = self._bucket_uses_ef(b)
+                    corrected = (buf + b.ef_decay * errors[j] if use_ef
+                                 else buf)
+                    payload, meta = comp.compress(corrected, rngs[j])
+                    g_hat = comp.decompress(payload, meta)
+                    new_errors.append(corrected - g_hat if use_ef
+                                      else errors[j])
+                    shards.append(
+                        reduce_scatter(g_hat.reshape(-1), b.algo, self.axes)
+                        / denom)
+                else:
+                    # gather-pattern wire: the replicated exchange verbatim
+                    # (so EF residual dynamics are bit-identical), then the
+                    # owner's slice of the decompressed sum
+                    e, synced = self._sync_buffer(buf, errors[j], rngs[j],
+                                                  b, comp, denom)
+                    new_errors.append(e)
+                    shards.append(local_chunk(synced.reshape(-1),
+                                              self.axes))
+                new_qs.append(None)
+
+        new_state: Dict[str, Any] = {"step": state["step"] + 1}
+        if "error" in state:
+            new_state["error"] = new_errors
+        if "q" in state:
+            new_state["q"] = new_qs
+        return shards, new_state
 
     # EF + compress + exchange of one flat/leaf-shaped f32 buffer.
     def _sync_buffer(self, buf, e, rng, b: BucketPlan, comp, denom):

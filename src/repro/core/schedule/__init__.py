@@ -1,12 +1,14 @@
 from repro.core.schedule.cost import (  # noqa: F401
     LINK_PRESETS, LinkParams, allgather_cost_s, allreduce_cost_s,
-    bucket_sync_cost_s, compressed_wire_bytes)
+    bucket_sync_cost_s, compressed_wire_bytes, reduce_scatter_cost_s,
+    shard_gather_cost_s)
 from repro.core.schedule.perf_model import (  # noqa: F401
     LayerProfile, comm_time, iteration_time_fifo, iteration_time_wfbp,
     iteration_time_mg_wfbp, iteration_time_p3, iteration_time_tic,
     iteration_time_tac, wfbp_case)
 from repro.core.schedule.planner import (  # noqa: F401
     BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
-    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, RoundSchedule, StrategyPlan,
-    TAU_GRID, fixed_config_plan, plan, plan_cost_s, plan_rounds,
-    profiles_from_grads, profiles_from_sizes, serial_round_plan)
+    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, OPT_MOMENTS, RoundSchedule,
+    StrategyPlan, TAU_GRID, fixed_config_plan, opt_state_bytes_per_worker,
+    plan, plan_cost_s, plan_rounds, profiles_from_grads, profiles_from_sizes,
+    serial_round_plan, shard_gather_tail_s)

@@ -70,6 +70,33 @@ def allreduce_cost_s(algo: str, n_bytes: float, p: int, link: LinkParams,
     raise ValueError(algo)
 
 
+def reduce_scatter_cost_s(algo: str, n_bytes: float, p: int,
+                          link: LinkParams) -> float:
+    """One reduce-scatter of ``n_bytes`` (each rank keeps 1/p): (p-1)
+    steps of n/p — the bandwidth-optimal (p-1)/p·n edge that ZeRO-style
+    sharded DP pays instead of the allreduce's 2(p-1)/p·n.
+
+    Priced as the RING reduce half for EVERY algo, because that is what
+    ``collectives.reduce_scatter`` executes: explicit algos run the ring
+    (nested per axis), and the psum algo delegates to XLA, whose
+    reduce-scatter is ring-equivalent.  Pricing the named algo's allreduce
+    half instead would let the planner pick e.g. a latency-optimal tree
+    bucket whose sharded execution is actually a (p-1)-hop ring — the
+    modeled/executed gap the conformance work exists to prevent."""
+    del algo
+    return allreduce_cost_s("ring", n_bytes, p, link) / 2.0
+
+
+def shard_gather_cost_s(algo: str, n_bytes: float, p: int,
+                        link: LinkParams) -> float:
+    """All-gather of partitioned state totalling ``n_bytes`` (each rank
+    contributes n/p) — the forward-edge params gather of sharded DP.
+    Ring-priced for every algo, mirroring :func:`reduce_scatter_cost_s`
+    (the executed gather is a ring / XLA's ring-equivalent)."""
+    del algo
+    return allreduce_cost_s("ring", n_bytes, p, link) / 2.0
+
+
 def allgather_cost_s(n_bytes: float, p: int, link: LinkParams) -> float:
     """Ring all-gather where every rank contributes ``n_bytes``: (p-1) steps
     each moving one rank's payload (the gather-based compressor wire
@@ -98,7 +125,8 @@ COMPRESS_PROC_BW = 30e9
 
 def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
                        algo: str, n_bytes: float, p: int, link: LinkParams,
-                       proc_bw: float = COMPRESS_PROC_BW) -> float:
+                       proc_bw: float = COMPRESS_PROC_BW,
+                       shard_state: bool = False) -> float:
     """Predicted wall time to synchronise ONE fused gradient bucket of
     ``n_bytes`` (dense f32) across ``p`` ranks with the given strategy.
 
@@ -109,10 +137,20 @@ def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], 
                                 plus one compress pass and p per-rank
                                 decompress/accumulate passes over the
                                 compact payloads (the DGC pattern)
-    """
+
+    ``shard_state=True`` prices the sharded-DP SCATTER edge instead: dense
+    exchanges become reduce-scatters (half the allreduce — each rank only
+    needs its owned chunk of the sum); compressed exchanges are unchanged
+    (gather-based payloads already all-gather the compressed bytes, and
+    aggregatable factorizations must be fully visible on every rank to
+    rebuild the approximation — sharding only changes which slice a rank
+    keeps).  The params all-gather on the forward edge is priced separately
+    (``shard_gather_cost_s``) because it cannot overlap the backward."""
     if p <= 1:
         return 0.0
     if compressor == "none":
+        if shard_state:
+            return reduce_scatter_cost_s(algo, n_bytes, p, link)
         return allreduce_cost_s(algo, n_bytes, p, link)
     from repro.core.compression import get_compressor
     comp = get_compressor(compressor, **dict(compressor_args))

@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.schedule.cost import LinkParams, bucket_sync_cost_s
+from repro.core.schedule.cost import (LinkParams, bucket_sync_cost_s,
+                                      shard_gather_cost_s)
 from repro.core.schedule.perf_model import LayerProfile
 
 # Buckets smaller than this stay dense: at these sizes the exchange is
@@ -93,12 +94,19 @@ class BucketPlan:
 
 @dataclasses.dataclass(frozen=True)
 class CommPlan:
-    """An ordered per-bucket communication schedule (DESIGN.md §6)."""
+    """An ordered per-bucket communication schedule (DESIGN.md §6).
+
+    ``shard_state=True`` marks the sharded-DP execution mode (DESIGN.md
+    §8): gradients reduce-scatter to canonical per-bucket owners, optimizer
+    moments and f32 master params are partitioned 1/world, and the updated
+    params all-gather back on the forward edge.  ``modeled_step_s`` then
+    includes the (un-overlappable) gather tail."""
     buckets: Tuple[BucketPlan, ...]
     mean: bool = True              # divide by world size after reduce
     modeled_step_s: float = float("nan")   # simulated iteration time
     world: int = 1
     link: Optional[LinkParams] = None
+    shard_state: bool = False
 
     @property
     def n_buckets(self) -> int:
@@ -142,9 +150,22 @@ def profiles_from_grads(grads, t_backward_s: float) -> List[LayerProfile]:
 # Plan simulation (generalised MG-WFBP with per-bucket strategies)
 # ---------------------------------------------------------------------------
 
-def _bucket_cost_s(b: BucketPlan, world: int, link: LinkParams) -> float:
+def _bucket_cost_s(b: BucketPlan, world: int, link: LinkParams,
+                   shard_state: bool = False) -> float:
     return bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
-                              b.bucket_bytes, world, link)
+                              b.bucket_bytes, world, link,
+                              shard_state=shard_state)
+
+
+def shard_gather_tail_s(plan: CommPlan, link: LinkParams,
+                        world: int) -> float:
+    """Serial cost of the params all-gather a sharded plan pays after the
+    optimizer step: the updated 1/p master shards must be whole on every
+    rank before the next forward, so nothing hides this edge."""
+    if world <= 1:
+        return 0.0
+    return sum(shard_gather_cost_s(b.algo, b.bucket_bytes, world, link)
+               for b in plan.buckets)
 
 
 def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
@@ -154,7 +175,9 @@ def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
     Backward produces leaf gradients last-layer-first (WFBP); a bucket is
     ready when its last-produced leaf exists; ready buckets go out on the
     link in readiness order.  This is ``iteration_time_mg_wfbp`` generalised
-    to heterogeneous per-bucket communication costs."""
+    to heterogeneous per-bucket communication costs.  Sharded plans pay the
+    (cheaper) reduce-scatter per bucket inside the overlap window plus the
+    serial params-gather tail after it."""
     n = len(layers)
     produce_at = [0.0] * n
     t = 0.0
@@ -169,8 +192,12 @@ def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
     link_free = 0.0
     for ready, j in events:
         start = max(ready, link_free)
-        link_free = start + _bucket_cost_s(plan.buckets[j], world, link)
-    return max(t_total, link_free)
+        link_free = start + _bucket_cost_s(plan.buckets[j], world, link,
+                                           plan.shard_state)
+    base = max(t_total, link_free)
+    if plan.shard_state:
+        base += shard_gather_tail_s(plan, link, world)
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -228,13 +255,14 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
          candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
          bucket_grid: Sequence[int] = BUCKET_GRID,
          dense_small_bytes: float = DENSE_SMALL_BYTES,
-         mean: bool = True) -> CommPlan:
+         mean: bool = True, shard_state: bool = False) -> CommPlan:
     """Search (compressor × algo × fusion granularity) per bucket.
 
     ``layer_profiles`` must be in leaf (tree) order — index i is flattened
     leaf i; backward produces them in reverse, like ``bucketize``.  Returns
     the plan with the smallest simulated iteration time; ``modeled_step_s``
     carries that time so callers can compare against fixed configurations.
+    ``shard_state`` prices (and marks) the sharded-DP execution mode.
     """
     if world <= 1:
         # Degenerate world: communication is free; one dense bucket.
@@ -244,7 +272,7 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
             bucket_bytes=int(sum(l.grad_bytes for l in layer_profiles))),)
         t = sum(l.t_backward_s for l in layer_profiles)
         return CommPlan(buckets=buckets, mean=mean, modeled_step_s=t,
-                        world=world, link=link)
+                        world=world, link=link, shard_state=shard_state)
 
     best_plan: Optional[CommPlan] = None
 
@@ -269,7 +297,7 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
                 compressor_args=cand.compressor_args, algo=cand.algo,
                 bucket_bytes=int(n_bytes)))
         consider(CommPlan(buckets=tuple(bps), mean=mean, world=world,
-                          link=link))
+                          link=link, shard_state=shard_state))
         # uniform plans: one candidate everywhere — exactly the plan a fixed
         # SyncConfig induces.  Including them in the min GUARANTEES the
         # returned plan is never modeled slower than any fixed config built
@@ -284,7 +312,7 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
                            compressor_args=cand.compressor_args,
                            algo=cand.algo, bucket_bytes=int(n_bytes))
                 for leaves, n_bytes in zip(bucket_leaves, sizes)),
-                mean=mean, world=world, link=link))
+                mean=mean, world=world, link=link, shard_state=shard_state))
     return best_plan
 
 
@@ -326,17 +354,46 @@ class StrategyPlan:
     overlap-simulated iteration; local_sgd: backward + round_cost/τ, with
     the statistical surcharge).  ``comm.modeled_step_s`` keeps its own
     meaning for the every-step arm; for τ>1 arms ``round_cost_s`` is the
-    serial cost of one averaging round."""
+    serial cost of one averaging round.  ``shard_state`` mirrors
+    ``comm.shard_state`` (the memory axis of the search);
+    ``opt_mem_bytes`` is the modeled per-worker optimizer-state footprint
+    under that choice."""
     schedule: RoundSchedule
     comm: CommPlan
     modeled_step_s: float
     round_cost_s: float
     t_backward_s: float
+    shard_state: bool = False
+    opt_mem_bytes: float = float("nan")
 
     def describe(self) -> str:
-        return (f"{self.schedule.key}: {self.modeled_step_s * 1e3:.3f} ms/step"
+        shard = " [shard_state 1/p]" if self.shard_state else ""
+        return (f"{self.schedule.key}{shard}: "
+                f"{self.modeled_step_s * 1e3:.3f} ms/step"
                 f" (round {self.round_cost_s * 1e3:.3f} ms, "
                 f"{self.comm.n_buckets} buckets)")
+
+
+# f32 moment buffers per parameter for the registered optimizers (sharded
+# mode adds the partitioned f32 master copy on top).  This is the
+# worst-case DEFAULT per name; the session passes the measured count
+# instead (sgd with momentum=0.0 carries NO moment state, so the name
+# alone over-counts it).
+OPT_MOMENTS: Dict[str, int] = {"sgd": 1, "adam": 2, "lamb": 2, "lars": 1}
+
+
+def opt_state_bytes_per_worker(opt_name: str, param_bytes: float, world: int,
+                               shard_state: bool,
+                               moments: Optional[float] = None) -> float:
+    """Modeled per-worker optimizer-state footprint: ``moments`` f32
+    buffers replicated, or (moments + the f32 master copy) over the 1/p
+    shard when partitioned — the ZeRO memory identity the report prints.
+    ``moments`` overrides the per-name default with the measured buffer
+    count (actual state bytes / param bytes)."""
+    mom = OPT_MOMENTS.get(opt_name, 2) if moments is None else moments
+    if not shard_state:
+        return float(mom) * param_bytes
+    return (mom + 1.0) * param_bytes / max(int(world), 1)
 
 
 def serial_round_plan(layer_profiles: Sequence[LayerProfile],
@@ -413,40 +470,67 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
                 tau_grid: Sequence[int] = TAU_GRID,
                 dense_small_bytes: float = DENSE_SMALL_BYTES,
                 inflation: float = LOCAL_SGD_STEP_INFLATION,
-                mean: bool = True
+                mean: bool = True,
+                opt_name: str = "adam",
+                shard_grid: Sequence[bool] = (False, True),
+                memory_budget_bytes: Optional[float] = None,
+                opt_moments: Optional[float] = None
                 ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
-    """Search the rounds axis × the bits axis: every candidate composite is a
-    (RoundSchedule, CommPlan) pair; returns (best, all_arms_by_key).
+    """Search the rounds axis × the bits axis × the shard axis: every
+    candidate composite is a (RoundSchedule, CommPlan) pair; returns
+    (best, all_arms_by_key).
 
     The every-step arm reuses :func:`plan` (overlap-simulated, with its
     uniform-plan guarantee), so the winner is never modeled slower than any
     fixed single-strategy config — the planner's acceptance invariant
     carries over to composites.  τ>1 arms amortize one serial averaging
     round over τ steps and pay the ``LOCAL_SGD_STEP_INFLATION`` surcharge.
+
+    The SHARD axis (``every_step_sharded``) trades the params-gather tail
+    against per-worker optimizer memory: sharded is never modeled faster on
+    wall clock (the tail cannot overlap), so it wins only through
+    ``memory_budget_bytes`` — arms whose modeled per-worker optimizer state
+    exceeds the budget are dropped (schedulers with diverging per-worker
+    params — local SGD — inherently carry replicated-size state and drop
+    with them).  If nothing fits, the minimum-memory arm is returned
+    anyway (the budget is advisory, the decision record is honest).
     """
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
-    every = plan(layer_profiles, link, world, candidates=candidates,
-                 bucket_grid=bucket_grid,
-                 dense_small_bytes=dense_small_bytes, mean=mean)
-    arms: Dict[str, StrategyPlan] = {
-        "every_step": StrategyPlan(
+    pb = float(sum(l.grad_bytes for l in layer_profiles))   # f32 param bytes
+    arms: Dict[str, StrategyPlan] = {}
+    for shard in shard_grid:
+        every = plan(layer_profiles, link, world, candidates=candidates,
+                     bucket_grid=bucket_grid,
+                     dense_small_bytes=dense_small_bytes, mean=mean,
+                     shard_state=shard)
+        key = "every_step_sharded" if shard else "every_step"
+        arms[key] = StrategyPlan(
             schedule=RoundSchedule(), comm=every,
             modeled_step_s=every.modeled_step_s,
-            round_cost_s=sum(_bucket_cost_s(b, world, link)
+            round_cost_s=sum(_bucket_cost_s(b, world, link, shard)
                              for b in every.buckets),
-            t_backward_s=t_bwd)}
-    if world > 1:
+            t_backward_s=t_bwd, shard_state=shard,
+            opt_mem_bytes=opt_state_bytes_per_worker(opt_name, pb, world,
+                                                     shard, opt_moments))
+    if world > 1 and any(not s for s in shard_grid):
         rp = serial_round_plan(layer_profiles, link, world,
                                candidates=candidates,
                                bucket_grid=bucket_grid,
                                dense_small_bytes=dense_small_bytes,
                                mean=mean)
+        mem = opt_state_bytes_per_worker(opt_name, pb, world, False,
+                                         opt_moments)
         for tau in tau_grid:
             if tau <= 1:
                 continue
             arm = local_sgd_arm(rp, t_bwd, tau, inflation)
-            arms[arm.schedule.key] = arm
-    best = min(arms.values(), key=lambda s: s.modeled_step_s)
+            arms[arm.schedule.key] = dataclasses.replace(
+                arm, opt_mem_bytes=mem)
+    pool = list(arms.values())
+    if memory_budget_bytes is not None:
+        fits = [a for a in pool if a.opt_mem_bytes <= memory_budget_bytes]
+        pool = fits or [min(pool, key=lambda s: s.opt_mem_bytes)]
+    best = min(pool, key=lambda s: s.modeled_step_s)
     return best, arms
 
 
@@ -455,7 +539,8 @@ def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
                       algo: str,
                       compressor_args: Tuple[Tuple[str, Any], ...] = (),
                       bucket_bytes: int = 32 * 2**20,
-                      mean: bool = True) -> CommPlan:
+                      mean: bool = True,
+                      shard_state: bool = False) -> CommPlan:
     """The degenerate plan a single global ``SyncConfig`` induces — every
     bucket gets the same strategy.  Used to score fixed baselines with the
     same simulator the planner optimises."""
@@ -466,6 +551,7 @@ def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
             leaves=leaves, compressor=compressor,
             compressor_args=compressor_args, algo=algo,
             bucket_bytes=int(n_bytes)))
-    p = CommPlan(buckets=tuple(bps), mean=mean, world=world, link=link)
+    p = CommPlan(buckets=tuple(bps), mean=mean, world=world, link=link,
+                 shard_state=shard_state)
     return dataclasses.replace(
         p, modeled_step_s=plan_cost_s(p, layer_profiles, link, world))

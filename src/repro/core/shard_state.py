@@ -1,0 +1,201 @@
+"""Shard layout for sharded data parallelism (ZeRO-style, DESIGN.md §8).
+
+Sharded-DP partitions the per-bucket flat state — f32 master parameters and
+optimizer moments — over the data axes: the canonical owner of chunk w of a
+bucket is the device at row-major mesh position w.  This module is the
+single source of truth for that layout:
+
+  * the NESTED chunking rule (pad to p1 chunks of m1 = ceil(n/p1), each of
+    those to p2 chunks of m2 = ceil(m1/p2), ...) — the host-side twin of
+    ``repro.core.collectives.pad_to_chunks``, so state initialised here
+    lands exactly where the reduce-scatter edge delivers gradient chunks;
+  * host-side pack / shard / unshard conversions (checkpoint resharding:
+    a state saved under one mesh shape restores bit-equal under another);
+  * per-element leaf segment ids (layerwise optimizers — LAMB/LARS trust
+    ratios need per-LAYER norms, which a shard only partially sees);
+  * the optimizer-memory accounting the planner and report use.
+
+Everything here is static host-side metadata + numpy; the only jax arrays
+are the shard rows themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule.planner import OPT_MOMENTS, CommPlan  # noqa: F401
+
+
+def nested_ms(n: int, axis_sizes: Sequence[int]) -> List[int]:
+    """Per-level chunk lengths [m1, m2, ...]; the last entry is the
+    per-rank shard length."""
+    ms, cur = [], int(n)
+    for p in axis_sizes:
+        cur = -(-cur // int(p))
+        ms.append(cur)
+    return ms
+
+
+def chunk_rows(flat: np.ndarray, axis_sizes: Sequence[int]) -> np.ndarray:
+    """Host twin of ``collectives.pad_to_chunks``: (n,) -> (world, m) with
+    row w = the canonical chunk owned by rank w."""
+    arr = np.asarray(flat).reshape(1, -1)
+    for p in axis_sizes:
+        p = int(p)
+        n = arr.shape[-1]
+        m = -(-n // p)
+        arr = np.pad(arr, [(0, 0)] * (arr.ndim - 1) + [(0, p * m - n)])
+        arr = arr.reshape(arr.shape[:-1] + (p, m))
+    return arr.reshape(-1, arr.shape[-1])
+
+
+def rows_to_flat(rows: np.ndarray, n: int,
+                 axis_sizes: Sequence[int]) -> np.ndarray:
+    """Inverse of :func:`chunk_rows`: (world, m) canonical rows -> (n,)."""
+    sizes = [int(p) for p in axis_sizes]
+    ms = nested_ms(n, sizes)
+    lens = [int(n)] + ms[:-1]
+    arr = np.asarray(rows).reshape(tuple(sizes) + (ms[-1],))
+    for ln in reversed(lens):
+        arr = arr.reshape(arr.shape[:-2] + (arr.shape[-2] * arr.shape[-1],))
+        arr = arr[..., :ln]
+    return arr.reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketShard:
+    """Static shard geometry of one fused bucket."""
+    leaves: Tuple[int, ...]        # leaf ids, in packed order
+    sizes: Tuple[int, ...]         # element count per packed leaf
+    n: int                         # unpadded bucket elements
+    m: int                         # per-rank shard elements (nested ceil)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Canonical sharded layout of a ``CommPlan``'s buckets over the data
+    axes (``axis_sizes`` in mesh-axis order; world = their product)."""
+    axis_sizes: Tuple[int, ...]
+    buckets: Tuple[BucketShard, ...]
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_dtypes: Tuple[Any, ...]
+
+    @property
+    def world(self) -> int:
+        w = 1
+        for p in self.axis_sizes:
+            w *= int(p)
+        return w
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaf_shapes)
+
+    @classmethod
+    def from_plan(cls, plan: CommPlan, params,
+                  axis_sizes: Sequence[int]) -> "ShardLayout":
+        leaves = jax.tree.leaves(params)
+        sizes = tuple(int(np.prod(l.shape)) for l in leaves)
+        buckets = []
+        for b in plan.buckets:
+            bs = tuple(sizes[i] for i in b.leaves)
+            n = int(sum(bs))
+            buckets.append(BucketShard(
+                leaves=tuple(b.leaves), sizes=bs, n=n,
+                m=nested_ms(n, axis_sizes)[-1] if n else 0))
+        claimed = sorted(i for b in buckets for i in b.leaves)
+        if claimed != list(range(len(leaves))):
+            raise ValueError(f"plan does not cover the pytree: {claimed} "
+                             f"vs {len(leaves)} leaves")
+        return cls(axis_sizes=tuple(int(p) for p in axis_sizes),
+                   buckets=tuple(buckets),
+                   leaf_shapes=tuple(tuple(l.shape) for l in leaves),
+                   leaf_dtypes=tuple(l.dtype for l in leaves))
+
+    # -- host-side conversions (init / checkpoint resharding) ----------------
+
+    def _pack_np(self, leaves, b: BucketShard) -> np.ndarray:
+        return np.concatenate([
+            np.asarray(jax.device_get(leaves[i])).reshape(-1)
+            .astype(np.float32) for i in b.leaves])
+
+    def shard_rows(self, tree) -> List[jnp.ndarray]:
+        """Pack a leaf-shaped pytree into per-bucket canonical shard rows
+        [(world, m_b) f32] — how partitioned state is initialised AND how
+        it is carried (leading device axis, sharded over the data axes)."""
+        leaves = jax.tree.leaves(tree)
+        return [jnp.asarray(chunk_rows(self._pack_np(leaves, b),
+                                       self.axis_sizes))
+                for b in self.buckets]
+
+    def tree_from_rows(self, rows, like) -> Any:
+        """Inverse of :func:`shard_rows`: reassemble the full leaf-shaped
+        pytree (f32) from per-bucket shard rows.  ``like`` supplies the
+        tree structure; values come entirely from ``rows``."""
+        leaves = jax.tree.leaves(like)
+        out = [None] * len(leaves)
+        for b, r in zip(self.buckets, rows):
+            flat = rows_to_flat(np.asarray(jax.device_get(r)), b.n,
+                                self.axis_sizes)
+            off = 0
+            for i, sz in zip(b.leaves, b.sizes):
+                out[i] = jnp.asarray(
+                    flat[off:off + sz].reshape(self.leaf_shapes[i]))
+                off += sz
+        return jax.tree.unflatten(jax.tree.structure(like), out)
+
+    def reshard(self, rows, new_axis_sizes: Sequence[int]
+                ) -> Tuple["ShardLayout", List[Any]]:
+        """Move saved shard rows to a different mesh shape (checkpoint
+        restore on a new world size): returns (new_layout, new_rows).
+        Full state round-trips bit-equal because both layouts chunk the
+        same canonical flat buffer."""
+        new = dataclasses.replace(
+            self, axis_sizes=tuple(int(p) for p in new_axis_sizes),
+            buckets=tuple(dataclasses.replace(
+                b, m=nested_ms(b.n, new_axis_sizes)[-1])
+                for b in self.buckets))
+        out = []
+        for b, r in zip(self.buckets, rows):
+            flat = rows_to_flat(np.asarray(jax.device_get(r)), b.n,
+                                self.axis_sizes)
+            out.append(jnp.asarray(chunk_rows(flat, new.axis_sizes)))
+        return new, out
+
+    # -- layerwise-optimizer support -----------------------------------------
+
+    def seg_rows(self, b_idx: int) -> np.ndarray:
+        """(world, m) int32 leaf-segment id per padded slot of bucket
+        ``b_idx`` (padding slots get the sentinel id ``n_leaves``): rank w
+        indexes row w to segment-sum its partial per-layer norms."""
+        b = self.buckets[b_idx]
+        ids = np.concatenate([np.full(sz, i, np.int32)
+                              for i, sz in zip(b.leaves, b.sizes)])
+        rows = chunk_rows(ids.astype(np.float64) + 1.0, self.axis_sizes)
+        # padding became 0.0 under chunk_rows; shift back so real ids are
+        # exact and padding maps to the sentinel
+        rows = rows.astype(np.int64) - 1
+        rows[rows < 0] = self.n_leaves
+        return rows.astype(np.int32)
+
+    # -- memory accounting (the report's headline number) --------------------
+
+    def param_bytes(self) -> int:
+        """Dense f32 bytes of the full parameter set."""
+        return 4 * sum(b.n for b in self.buckets)
+
+    def opt_bytes_per_worker(self, opt_name: str, sharded: bool,
+                             moments: float = None) -> float:
+        """f32 optimizer-state bytes per worker: ``moments`` buffers
+        replicated, or (moments + the f32 master copy) over the 1/p shard
+        (padded) when partitioned.  ``moments`` overrides the per-name
+        worst-case default with the measured buffer count (sgd with
+        momentum=0.0 carries none)."""
+        mom = OPT_MOMENTS.get(opt_name, 2) if moments is None else moments
+        if not sharded:
+            return mom * self.param_bytes()
+        return (mom + 1) * 4 * sum(b.m for b in self.buckets)

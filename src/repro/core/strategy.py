@@ -244,14 +244,23 @@ class SyncStrategy:
         anchor delta (None -> plain dense ``average_params``); compressing
         the delta instead of the raw parameters is what keeps error feedback
         and sparsification sound for periodic averaging
+
+    ``shard_state=True`` selects the sharded-DP execution mode (DESIGN.md
+    §8): gradients reduce-scatter per bucket, optimizer moments + f32
+    master params are partitioned 1/p over the data axes, and updated
+    params all-gather back on the forward edge.  Only every-step gradient
+    sync composes with it — schedulers with local phases or gradient reuse
+    need full per-worker optimizer state by construction.
     """
     scheduler: RoundScheduler
     grad_reducer: Any = None
     param_reducer: Any = None
     param_algo: str = "psum"
+    shard_state: bool = False
 
     def describe(self) -> str:
-        parts = [self.scheduler.describe()]
+        parts = [self.scheduler.describe()
+                 + (" [shard_state 1/p]" if self.shard_state else "")]
         if "sync" in self.scheduler.computes:
             parts.append("grads via "
                          + _describe_reducer(self.grad_reducer, "dense psum"))
@@ -281,6 +290,7 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
                   plan: Optional[CommPlan] = None,
                   param_plan: Optional[CommPlan] = None,
                   param_algo: str = "psum",
+                  shard_state: bool = False,
                   **scheduler_kwargs) -> SyncStrategy:
     """Convenience constructor: resolve the scheduler by registry name and
     build reducers from either a global ``SyncConfig`` or a planned
@@ -304,4 +314,5 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
             # describes the ROUND's exchange, not a per-step grad sync
             param_reducer, grad_reducer = grad_reducer, None
     return SyncStrategy(scheduler=scheduler, grad_reducer=grad_reducer,
-                        param_reducer=param_reducer, param_algo=param_algo)
+                        param_reducer=param_reducer, param_algo=param_algo,
+                        shard_state=shard_state)

@@ -97,12 +97,20 @@ def render_comm_plan(plan, baselines=None, t_backward_s=None,
     for j, b in enumerate(plan.buckets):
         cost = ""
         if link is not None:
+            # shard_state matters: sharded dense buckets pay the (half)
+            # reduce-scatter inside the overlap window, not the allreduce
             c = bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
-                                   b.bucket_bytes, world, link)
+                                   b.bucket_bytes, world, link,
+                                   shard_state=plan.shard_state)
             cost = f"{c * 1e6:.1f} µs"
         lines.append(f"| {j} | {len(b.leaves)} | "
                      f"{b.bucket_bytes / 2**20:.2f} | "
                      f"{b.algo}/{b.compressor} | {cost} |")
+    if plan.shard_state and link is not None:
+        from repro.core.schedule.planner import shard_gather_tail_s
+        tail = shard_gather_tail_s(plan, link, world)
+        lines.append(f"| — | — | — | params all-gather tail (serial) | "
+                     f"{tail * 1e6:.1f} µs |")
     lines += ["", f"{total_label}: {plan.modeled_step_s * 1e3:.3f} ms"]
     if baselines:
         step_s = plan.modeled_step_s if auto_step_s is None else auto_step_s
@@ -126,18 +134,33 @@ def render_strategy_plan(sp, arms=None, baselines=None,
     round_like = sp.schedule.kind == "local_sgd"
     detail = (f"one reduce round: {sp.round_cost_s * 1e3:.3f} ms, "
               if round_like else "")
-    lines = ["### Sync strategy (auto-tuned: rounds × bits × overlap)", "",
-             f"chosen rounds schedule: **{sp.schedule.key}** — modeled "
-             f"{sp.modeled_step_s * 1e3:.3f} ms/step "
+    shard = " + shard_state (optimizer state 1/p)" if sp.shard_state else ""
+    lines = ["### Sync strategy (auto-tuned: rounds × bits × overlap"
+             " × shard)", "",
+             f"chosen rounds schedule: **{sp.schedule.key}{shard}** — "
+             f"modeled {sp.modeled_step_s * 1e3:.3f} ms/step "
              f"({detail}backward {sp.t_backward_s * 1e3:.3f} ms)"]
+    if sp.shard_state and sp.opt_mem_bytes == sp.opt_mem_bytes:
+        repl = (arms or {}).get("every_step")
+        vs = (f" (replicated would be {repl.opt_mem_bytes / 2**20:.1f} MiB)"
+              if repl is not None and repl.opt_mem_bytes ==
+              repl.opt_mem_bytes else "")
+        lines.append(f"optimizer state/worker: "
+                     f"{sp.opt_mem_bytes / 2**20:.1f} MiB{vs}")
+
+    def _mem(a):
+        return (f"{a.opt_mem_bytes / 2**20:.1f} MiB"
+                if a.opt_mem_bytes == a.opt_mem_bytes else "—")
+
     if arms and len(arms) > 1:
-        lines += ["", "| rounds schedule | round cost | modeled /step |",
-                  "|---|---|---|"]
+        lines += ["", "| rounds schedule | round cost | modeled /step | "
+                  "opt state/worker |", "|---|---|---|---|"]
         for key, a in sorted(arms.items(),
                              key=lambda kv: kv[1].modeled_step_s):
-            mark = " ←" if key == sp.schedule.key else ""
+            mark = " ←" if (key == sp.schedule.key
+                            + ("_sharded" if sp.shard_state else "")) else ""
             lines.append(f"| {key}{mark} | {a.round_cost_s * 1e3:.3f} ms | "
-                         f"{a.modeled_step_s * 1e3:.3f} ms |")
+                         f"{a.modeled_step_s * 1e3:.3f} ms | {_mem(a)} |")
     lines += ["", render_comm_plan(
         sp.comm, baselines=baselines, t_backward_s=t_backward_s,
         total_label=("modeled reduce round" if round_like
@@ -169,7 +192,38 @@ def save_strategy_plan(sp, arch: str) -> str:
     rec["modeled_step_s"] = sp.modeled_step_s
     rec["round_cost_s"] = sp.round_cost_s
     rec["t_backward_s"] = sp.t_backward_s
+    rec["shard_state"] = sp.shard_state
+    if sp.opt_mem_bytes == sp.opt_mem_bytes:   # not NaN
+        rec["opt_mem_bytes_per_worker"] = sp.opt_mem_bytes
     return _write_plan_record(rec, arch)
+
+
+def render_sharded_memory(layout, opt_name: str, moments=None) -> str:
+    """One-line per-worker memory report for a sharded-DP run (the ZeRO
+    identity the acceptance criterion checks): partitioned moments + f32
+    master shards vs the replicated moments footprint.  ``moments`` is the
+    session's MEASURED buffer count (overrides the per-name default)."""
+    rep = layout.opt_bytes_per_worker(opt_name, sharded=False,
+                                      moments=moments)
+    sh = layout.opt_bytes_per_worker(opt_name, sharded=True,
+                                     moments=moments)
+    if sh <= rep:
+        verdict = f"{rep / max(sh, 1):.2f}× smaller"
+    elif rep <= 0:
+        # e.g. sgd with momentum=0: no replicated moment state at all —
+        # a ratio is meaningless, the master shard is the whole cost
+        verdict = ("pure master-shard cost (this optimizer keeps no "
+                   "moment state)")
+    else:
+        # small worlds: the f32 master copy is added with little or no 1/p
+        # benefit to divide it by — say so instead of "0.67x smaller"
+        verdict = (f"{sh / max(rep, 1):.2f}× LARGER (world="
+                   f"{layout.world}: the f32 master shard outweighs the "
+                   f"1/p split)")
+    return (f"optimizer state/worker: {sh / 2**20:.2f} MiB sharded "
+            f"(master+moments over world={layout.world}) vs "
+            f"{rep / 2**20:.2f} MiB replicated — {verdict}; params "
+            f"{layout.param_bytes() / 2**20:.2f} MiB f32")
 
 
 def comm_plan_record(plan) -> dict:
@@ -177,6 +231,7 @@ def comm_plan_record(plan) -> dict:
     return {
         "world": plan.world,
         "modeled_step_s": plan.modeled_step_s,
+        "shard_state": plan.shard_state,
         "n_buckets": plan.n_buckets,
         "buckets": [{
             "leaves": list(b.leaves),

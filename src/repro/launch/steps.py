@@ -191,6 +191,96 @@ def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
 
 
 # ---------------------------------------------------------------------------
+# Sharded data parallelism (ZeRO-style, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def make_sharded_train_step(model: Model, executor, layout, sharded_opt,
+                            mesh, data_axes: Sequence[str] = ("data",)):
+    """Sharded-DP step: gradients reduce-scatter per bucket to canonical
+    owners (``PlanExecutor.sync_shards``), each rank updates only its (m,)
+    slice of f32 master params + optimizer moments (``sharded_opt``, from
+    ``repro.optim.make_sharded_optimizer``), and the updated master shards
+    all-gather back into full params for the next forward.
+
+    Params enter and leave REPLICATED over the data axes (the forward needs
+    them whole); what is partitioned — the ~2-3× params of optimizer state —
+    is carried as per-bucket shard rows with a leading device axis of length
+    world, sharded over the data axes (each device holds exactly its own
+    (1, m) slice): ``{"master": [rows...], "opt": <moments of rows>}``.
+
+    Bit-compatibility (the conformance suite's promise): for dense fp32
+    plans on psum/ring, params and reconstructed optimizer state match the
+    replicated ``_make_synced_train_step`` path bit-for-bit — the scatter
+    chunks equal the allreduce slices, the elementwise update commutes with
+    slicing, and the gather moves exact values.
+    """
+    world = _world_of(mesh, data_axes)
+    axes = tuple(data_axes)
+    if tuple(b.leaves for b in executor.plan.buckets) != \
+            tuple(b.leaves for b in layout.buckets):
+        raise ValueError("ShardLayout does not match the executor's plan "
+                         "buckets — build it with ShardLayout.from_plan on "
+                         "the same CommPlan")
+    batch_spec = {"tokens": P(tuple(data_axes), None)}
+    state_spec = P(tuple(data_axes))
+
+    def body(params, opt_rows, sync_state, batch, step, rng):
+        from repro.core.collectives import all_gather_shards
+        from repro.models.sharding_ctx import manual_region
+        sync_state = jax.tree.map(lambda s: s[0], sync_state)
+        opt = jax.tree.map(lambda s: s[0], opt_rows)
+        with manual_region():
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        gshards, sync_state = executor.sync_shards(grads, sync_state, rng)
+        updates, inner = sharded_opt.update(gshards, opt["opt"],
+                                            opt["master"], step)
+        # the add mirrors apply_updates on the replicated path (masters ARE
+        # the f32 params); XLA's per-graph FMA contraction of this add is
+        # the one place the two modes may differ in the last ulp — see the
+        # conformance suite's tolerance notes (DESIGN.md §8)
+        masters = [m + u for m, u in zip(opt["master"], updates)]
+
+        # forward edge: gather the updated 1/p master shards back to full
+        # params (in the leaves' own dtypes)
+        leaves = jax.tree.leaves(params)
+        out = [None] * len(leaves)
+        for b, bl, shard in zip(executor.plan.buckets, layout.buckets,
+                                masters):
+            full = all_gather_shards(shard, bl.n, b.algo, axes)
+            off = 0
+            for i, sz in zip(bl.leaves, bl.sizes):
+                out[i] = full[off:off + sz].reshape(
+                    leaves[i].shape).astype(leaves[i].dtype)
+                off += sz
+        new_params = jax.tree.unflatten(jax.tree.structure(params), out)
+
+        loss = jax.lax.pmean(loss, tuple(data_axes))
+        lead = lambda t: jax.tree.map(lambda s: s[None], t)
+        return (new_params, lead({"master": masters, "opt": inner}),
+                lead(sync_state), loss)
+
+    def step_fn(params, opt_rows, sync_state, batch, step, rng):
+        f = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), state_spec, state_spec, batch_spec, P(), P()),
+            out_specs=(P(), state_spec, state_spec, P()),
+            axis_names=set(data_axes), check_vma=False)
+        return f(params, opt_rows, sync_state, batch, step, rng)
+
+    def init_opt_rows(params):
+        """Partitioned state: per-bucket f32 master rows (world, m) sliced
+        canonically from the current params, plus the sharded optimizer's
+        moments over them (zeros, same geometry)."""
+        masters = layout.shard_rows(params)
+        return {"master": masters, "opt": sharded_opt.init(masters)}
+
+    def init_sync_state(params):
+        return broadcast_worker_state(executor.init_state(params), world)
+
+    return step_fn, init_opt_rows, init_sync_state
+
+
+# ---------------------------------------------------------------------------
 # Strategy phase programs (SyncStrategy sessions — DESIGN.md §7)
 # ---------------------------------------------------------------------------
 

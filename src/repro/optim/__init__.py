@@ -1,5 +1,6 @@
 from repro.optim.base import (  # noqa: F401
     Optimizer, apply_updates, clip_by_global_norm, global_norm, make_optimizer)
 from repro.optim import sgd, adam, lars, lamb  # noqa: F401
+from repro.optim.sharded import make_sharded_optimizer  # noqa: F401
 from repro.optim.schedule import (  # noqa: F401
     constant, legw_warmup_steps, scale_lr_for_batch, warmup_cosine)

@@ -1,0 +1,163 @@
+"""Sharded (ZeRO-style) optimizer states: init/update over partitioned flat
+buckets (DESIGN.md §8).
+
+In sharded-DP mode the optimizer runs on per-bucket SHARDS — each rank
+updates only the (m,) slice of master params and moments it owns — so the
+state pytrees here are lists of flat buffers, one per plan bucket, not
+leaf-shaped trees.
+
+  * ``adam`` / ``sgd`` are elementwise: the registered replicated update
+    applied to shard leaves is bit-identical to the replicated update
+    restricted to the shard, so they delegate straight to
+    ``make_optimizer`` (this is what makes sharded mode bit-compatible
+    with replicated DP for dense fp32).
+  * ``lamb`` / ``lars`` are layerwise: the trust ratio needs per-LAYER
+    norms, which one shard only partially sees.  Their sharded variants
+    segment-sum partial squared norms per leaf (using the layout's static
+    leaf-segment ids; padding slots map to a dropped sentinel segment) and
+    ``psum`` the tiny (n_leaves,) vector over the data axes — one scalar
+    collective per step, the standard ZeRO-LAMB construction.  They must
+    run inside a shard_map whose manual axes are exactly ``axes``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.base import Optimizer, Schedule, make_optimizer, resolve_lr
+
+ELEMENTWISE = ("adam", "sgd")
+
+
+def make_sharded_optimizer(name: str, layout, axes: Sequence[str],
+                           **kwargs) -> Optimizer:
+    """Optimizer over per-bucket shard lists for ``layout``.  ``axes`` are
+    the manual data axes the caller's shard_map carries (used only by the
+    layerwise optimizers' norm reduction)."""
+    if name in ELEMENTWISE:
+        return make_optimizer(name, **kwargs)
+    if name == "lamb":
+        return _sharded_lamb(layout, tuple(axes), **kwargs)
+    if name == "lars":
+        return _sharded_lars(layout, tuple(axes), **kwargs)
+    raise KeyError(f"no sharded variant for optimizer {name!r}; known: "
+                   f"{ELEMENTWISE + ('lamb', 'lars')}")
+
+
+def _my_segments(layout, axes):
+    """Per-bucket (m,) leaf-segment ids of THIS rank's shard, DERIVED from
+    the static per-bucket leaf offsets — O(m) iota + a leaf-count-sized
+    table per bucket.  (Embedding ``layout.seg_rows`` as an on-device
+    constant would park a params-sized int32 array on EVERY device,
+    defeating the 1/p memory goal sharded mode exists for; ``seg_rows``
+    stays the host-side reference the tests compare against.)
+
+    Under nested chunking the canonical chunk at mesh position (i1, i2,
+    ...) covers a CONTIGUOUS flat range: global position of slot k is
+    Σ_l i_l·m_l + k, and the slot is real (not padding) iff its local
+    offset at every nesting level stays inside that level's parent length.
+    """
+    from repro.core.shard_state import nested_ms
+    axes = tuple(axes)
+    segs = []
+    for b in layout.buckets:
+        ms = nested_ms(b.n, layout.axis_sizes)
+        lens = [b.n] + ms[:-1]          # parent length per nesting level
+        pos = jnp.arange(ms[-1], dtype=jnp.int32)
+        if axes:
+            ok = jnp.ones((ms[-1],), bool)
+            for ax, m, ln in zip(reversed(axes), reversed(ms),
+                                 reversed(lens)):
+                pos = jax.lax.axis_index(ax).astype(jnp.int32) * m + pos
+                ok = ok & (pos < ln)
+        else:
+            ok = pos < b.n
+        starts = np.cumsum([0] + list(b.sizes))[:-1].astype(np.int32)
+        ids = jnp.asarray(np.asarray(b.leaves, np.int32))
+        at = jnp.searchsorted(jnp.asarray(starts),
+                              jnp.clip(pos, 0, b.n - 1), side="right") - 1
+        segs.append(jnp.where(ok, ids[at],
+                              jnp.int32(layout.n_leaves)).astype(jnp.int32))
+    return segs
+
+
+def _sharded_lamb(layout, axes, lr: Schedule = 1e-3, b1: float = 0.9,
+                  b2: float = 0.999, eps: float = 1e-6,
+                  weight_decay: float = 0.01) -> Optimizer:
+    L = layout.n_leaves
+
+    def init(shards):
+        z = lambda s: jnp.zeros(s.shape, jnp.float32)
+        return {"m": jax.tree.map(z, shards), "v": jax.tree.map(z, shards)}
+
+    def update(grads, state, params, step):
+        eta = resolve_lr(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        segs = _my_segments(layout, axes)
+        rs, ms, vs = [], [], []
+        w_sq = jnp.zeros((L,), jnp.float32)
+        r_sq = jnp.zeros((L,), jnp.float32)
+        for g, m, v, p, seg in zip(grads, state["m"], state["v"], params,
+                                   segs):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            r = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * pf
+            w_sq += jax.ops.segment_sum(jnp.square(pf), seg,
+                                        num_segments=L + 1)[:L]
+            r_sq += jax.ops.segment_sum(jnp.square(r), seg,
+                                        num_segments=L + 1)[:L]
+            rs.append(r), ms.append(m), vs.append(v)
+        if axes:
+            w_sq = jax.lax.psum(w_sq, axes)
+            r_sq = jax.lax.psum(r_sq, axes)
+        w_norm, r_norm = jnp.sqrt(w_sq), jnp.sqrt(r_sq)
+        trust = jnp.where((w_norm > 0) & (r_norm > 0), w_norm / r_norm, 1.0)
+        trust = jnp.concatenate([trust, jnp.ones((1,), jnp.float32)])
+        updates = [-eta * trust[seg] * r for seg, r in zip(segs, rs)]
+        return updates, {"m": ms, "v": vs}
+
+    return Optimizer("lamb", init, update)
+
+
+def _sharded_lars(layout, axes, lr: Schedule = 1.0, momentum: float = 0.9,
+                  weight_decay: float = 1e-4, trust_coef: float = 0.001,
+                  eps: float = 1e-9) -> Optimizer:
+    L = layout.n_leaves
+
+    def init(shards):
+        return {"mu": jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                                   shards)}
+
+    def update(grads, state, params, step):
+        eta = resolve_lr(lr, step)
+        segs = _my_segments(layout, axes)
+        gs = []
+        w_sq = jnp.zeros((L,), jnp.float32)
+        g_sq = jnp.zeros((L,), jnp.float32)
+        for g, p, seg in zip(grads, params, segs):
+            pf = p.astype(jnp.float32)
+            g = g.astype(jnp.float32) + weight_decay * pf
+            w_sq += jax.ops.segment_sum(jnp.square(pf), seg,
+                                        num_segments=L + 1)[:L]
+            g_sq += jax.ops.segment_sum(jnp.square(g), seg,
+                                        num_segments=L + 1)[:L]
+            gs.append(g)
+        if axes:
+            w_sq = jax.lax.psum(w_sq, axes)
+            g_sq = jax.lax.psum(g_sq, axes)
+        w_norm, g_norm = jnp.sqrt(w_sq), jnp.sqrt(g_sq)
+        trust = jnp.where((w_norm > 0) & (g_norm > 0),
+                          trust_coef * w_norm / (g_norm + eps), 1.0)
+        trust = jnp.concatenate([trust, jnp.ones((1,), jnp.float32)])
+        mu = [momentum * mu_j + eta * trust[seg] * g
+              for mu_j, seg, g in zip(state["mu"], segs, gs)]
+        return [-m for m in mu], {"mu": mu}
+
+    return Optimizer("lars", init, update)

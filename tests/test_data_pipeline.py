@@ -1,0 +1,70 @@
+"""Seeded-determinism regression tests for the synthetic data pipeline
+(ISSUE 3 satellite): the conformance suite compares two independently
+constructed training runs step by step, which is only meaningful if
+``SyntheticPipeline`` is a pure function of (seed, step, host) — same seed
+-> identical batches across fresh pipelines and fresh iterators, different
+seeds/steps/hosts -> different batches, and host shards partition the
+global batch deterministically.
+"""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticPipeline
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=128, seq_len=32, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_same_seed_identical_batches_across_fresh_pipelines():
+    a, b = SyntheticPipeline(_cfg()), SyntheticPipeline(_cfg())
+    for step in range(5):
+        ba, bb = a.batch(step), b.batch(step)
+        assert sorted(ba) == sorted(bb)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k])
+
+
+def test_same_seed_identical_batches_across_fresh_iterators():
+    pipe = SyntheticPipeline(_cfg())
+    first = [b["tokens"].copy() for _, b in zip(range(4), iter(pipe))]
+    second = [b["tokens"].copy() for _, b in zip(range(4), iter(pipe))]
+    for x, y in zip(first, second):
+        np.testing.assert_array_equal(x, y)
+    # and the iterator agrees with random access
+    for step, x in enumerate(first):
+        np.testing.assert_array_equal(x, pipe.batch(step)["tokens"])
+
+
+def test_different_seed_and_step_differ():
+    a = SyntheticPipeline(_cfg())
+    b = SyntheticPipeline(_cfg(seed=8))
+    assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+    assert not np.array_equal(a.batch(0)["tokens"], a.batch(1)["tokens"])
+
+
+def test_host_sharding_is_deterministic_and_seekable():
+    """Each host draws its own (seed, step, host_id) stream — resuming
+    mid-run on any host must reproduce exactly what that host would have
+    seen (the checkpoint-resume contract)."""
+    pipe = SyntheticPipeline(_cfg(global_batch=8))
+    for step in (0, 3):
+        shards = [pipe.batch(step, host_id=h, num_hosts=4) for h in range(4)]
+        for s in shards:
+            assert s["tokens"].shape == (2, 32)
+        again = [pipe.batch(step, host_id=h, num_hosts=4) for h in range(4)]
+        for s, t in zip(shards, again):
+            np.testing.assert_array_equal(s["tokens"], t["tokens"])
+        # hosts must not see each other's rows
+        for h in range(1, 4):
+            assert not np.array_equal(shards[0]["tokens"],
+                                      shards[h]["tokens"])
+
+
+def test_embedding_stream_is_deterministic():
+    cfg = _cfg(embedding_dim=16)
+    a, b = SyntheticPipeline(cfg), SyntheticPipeline(cfg)
+    for step in range(3):
+        np.testing.assert_array_equal(a.batch(step)["src"],
+                                      b.batch(step)["src"])

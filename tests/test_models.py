@@ -29,7 +29,15 @@ def batch_for(cfg, B=2, T=32):
     return b
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+# the heavyweight reduced archs (~20-30 s each on CPU) ride in the slow
+# CI tier; the rest stay in the default tier-1 selection
+_HEAVY = {"xlstm-125m", "deepseek-v2-lite-16b", "jamba-v0.1-52b",
+          "gemma2-9b"}
+
+
+@pytest.mark.parametrize(
+    "name", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY
+             else a for a in ALL_ARCHS])
 def test_train_step_smoke(name):
     cfg, model, params = make(name)
     batch = batch_for(cfg)
@@ -62,9 +70,11 @@ def test_decode_step_smoke(name):
     assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
 
 
-@pytest.mark.parametrize("name", ["gemma-2b", "deepseek-v2-lite-16b",
-                                  "xlstm-125m", "jamba-v0.1-52b",
-                                  "seamless-m4t-large-v2", "gemma3-4b"])
+@pytest.mark.parametrize(
+    "name", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY
+             else a for a in ("gemma-2b", "deepseek-v2-lite-16b",
+                              "xlstm-125m", "jamba-v0.1-52b",
+                              "seamless-m4t-large-v2", "gemma3-4b")])
 def test_prefill_decode_matches_full_forward(name):
     """logits(prefill P tokens, then decode one) == logits(prefill P+1).
     MoE capacity is raised so no tokens drop (drops differ between the two
@@ -86,6 +96,7 @@ def test_prefill_decode_matches_full_forward(name):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_cache():
     """Decode far past the window: ring buffer must evict correctly."""
     cfg = reduced(get_config("gemma3-4b"))   # window 32 after reduction

@@ -1,0 +1,238 @@
+"""Sharded-DP planner + shard-layout properties (ISSUE 3 satellites).
+
+Property-based (hypothesis, via the hyp_compat shim) coverage of:
+
+  * the canonical chunking layout: chunk_rows/rows_to_flat round-trip for
+    arbitrary sizes and (nested) axis shapes, and agreement with the
+    device-side ``pad_to_chunks`` twin;
+  * the cost model: reduce-scatter is the reduce half of the allreduce,
+    the params-gather tail is never free, so a sharded plan is never
+    MODELED FASTER than the replicated plan — sharding is a memory trade;
+  * the memory model: per-worker sharded state is (moments+1)/world of a
+    full f32 param set, monotone in world size;
+  * the planner decision: with a fixed per-worker budget the
+    replicated->sharded crossover is MONOTONE in param count and in world
+    size (once memory forces sharding, more params / the same params on
+    any world keep it forced);
+  * auto never modeled slower than either fixed mode (the bench_sharded
+    acceptance inequality, asserted across link regimes here).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hyp_compat import given, settings, st
+
+from repro.core.schedule import (LINK_PRESETS, LayerProfile, LinkParams,
+                                 allreduce_cost_s, fixed_config_plan,
+                                 opt_state_bytes_per_worker, plan,
+                                 plan_rounds, reduce_scatter_cost_s,
+                                 shard_gather_tail_s)
+from repro.core.shard_state import (ShardLayout, chunk_rows, nested_ms,
+                                    rows_to_flat)
+from repro.core.grad_sync import sharded_plan_from_config
+from repro.core import SyncConfig
+
+
+def _profs(n=12, mb=4.0, t_layer=2e-4):
+    return [LayerProfile(t_backward_s=t_layer, grad_bytes=mb * 2**20)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Layout properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4000),
+       st.lists(st.sampled_from([1, 2, 3, 4, 8]), min_size=1, max_size=3))
+@settings(max_examples=50, deadline=None)
+def test_chunk_rows_roundtrip(n, axis_sizes):
+    flat = np.arange(n, dtype=np.float32) + 1.0
+    rows = chunk_rows(flat, axis_sizes)
+    world = int(np.prod(axis_sizes))
+    assert rows.shape == (world, nested_ms(n, axis_sizes)[-1])
+    back = rows_to_flat(rows, n, axis_sizes)
+    np.testing.assert_array_equal(back, flat)
+    # padding is zeros and every original element appears exactly once
+    assert rows.sum() == flat.sum()
+
+
+@given(st.integers(1, 500),
+       st.lists(st.sampled_from([1, 2, 4]), min_size=1, max_size=2))
+@settings(max_examples=25, deadline=None)
+def test_chunk_rows_matches_device_pad_to_chunks(n, axis_sizes):
+    """Host-side chunking (state init / checkpoints) and the device-side
+    twin the collectives use must agree slot-for-slot — this equality is
+    what makes reduce-scattered gradient chunks land on the state shards
+    their owner holds."""
+    from repro.core.collectives import pad_to_chunks
+    flat = np.arange(n, dtype=np.float32) + 1.0
+    rows = chunk_rows(flat, axis_sizes)
+    dev = np.asarray(pad_to_chunks(jnp.asarray(flat), axis_sizes))
+    np.testing.assert_array_equal(rows.reshape(-1), dev)
+
+
+def test_layout_seg_ids_and_reshard():
+    params = {"a": jnp.ones((5, 3)), "b": jnp.ones((7,)),
+              "c": jnp.ones((2, 2))}
+    plan_ = sharded_plan_from_config(SyncConfig(bucket_bytes=48), params)
+    lay = ShardLayout.from_plan(plan_, params, (4,))
+    # segment ids: every real slot carries its leaf id, padding the sentinel
+    sizes = {i: int(np.prod(l.shape))
+             for i, l in enumerate(jax.tree.leaves(params))}
+    for j, b in enumerate(lay.buckets):
+        seg = lay.seg_rows(j)
+        assert seg.shape == (4, b.m)
+        counts = {i: int((seg == i).sum()) for i in b.leaves}
+        assert counts == {i: sizes[i] for i in b.leaves}
+        assert int((seg == lay.n_leaves).sum()) == 4 * b.m - b.n
+    # reshard to a different mesh shape preserves the full state bit-exactly
+    rows = lay.shard_rows(params)
+    for new_sizes in ((2,), (1,), (2, 2)):
+        new_lay, new_rows = lay.reshard(rows, new_sizes)
+        got = new_lay.tree_from_rows(new_rows, params)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Cost-model properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 512), st.floats(1e3, 1e9),
+       st.sampled_from(["ring", "psum", "tree", "hierarchical"]))
+@settings(max_examples=50, deadline=None)
+def test_reduce_scatter_is_half_the_ring_allreduce(p, n_bytes, algo):
+    """The scatter edge is priced as the ring reduce half REGARDLESS of
+    the bucket's algo, because that is what the executor runs (explicit
+    algos ring; psum delegates to XLA's ring-equivalent) — pricing the
+    named algo would open a modeled/executed gap."""
+    link = LINK_PRESETS["datacenter"]
+    rs = reduce_scatter_cost_s(algo, n_bytes, p, link)
+    ar_ring = allreduce_cost_s("ring", n_bytes, p, link)
+    assert rs == pytest.approx(ar_ring / 2)
+    assert rs > 0
+
+
+def test_sharded_plan_never_modeled_faster():
+    """The memory trade has a price: moving the gather half of the
+    allreduce out of the overlappable window (it must wait for the
+    optimizer) can only cost wall clock, never save it."""
+    for preset in ("fast_ici", "datacenter", "commodity"):
+        link = LINK_PRESETS[preset]
+        for world in (8, 64, 256):
+            for t_layer in (2e-5, 2e-4, 2e-3):
+                profs = _profs(t_layer=t_layer)
+                rep = plan(profs, link, world, shard_state=False)
+                sh = plan(profs, link, world, shard_state=True)
+                assert sh.shard_state and not rep.shard_state
+                assert sh.modeled_step_s >= rep.modeled_step_s - 1e-15, \
+                    (preset, world, t_layer)
+                assert shard_gather_tail_s(sh, link, world) > 0
+
+
+def test_measured_moments_override_name_default():
+    """sgd with momentum=0.0 carries NO moment buffers: the session
+    measures the actual count and the memory model must honour it (the
+    per-name default would charge 1x params of phantom state and could
+    flip budget decisions needlessly)."""
+    from repro.api import SessionConfig, TrainSession
+    pb = 64 * 2**20
+    assert opt_state_bytes_per_worker("sgd", pb, 8, False, moments=0.0) == 0
+    assert opt_state_bytes_per_worker("sgd", pb, 8, True, moments=0.0) == \
+        pytest.approx(pb / 8)   # master shard only
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True,
+                                      batch=2, seq=16, steps=2,
+                                      optimizer="sgd"))
+    assert sess.opt_moments == 0.0
+    sess2 = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True,
+                                       batch=2, seq=16, steps=2,
+                                       optimizer="adam"))
+    assert sess2.opt_moments == pytest.approx(2.0)
+
+
+@given(st.integers(2, 512), st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_sharded_memory_identity(world, n_mb):
+    pb = n_mb * 2**20
+    rep = opt_state_bytes_per_worker("adam", pb, world, False)
+    sh = opt_state_bytes_per_worker("adam", pb, world, True)
+    assert rep == 2 * pb                    # two Adam moments
+    assert sh == pytest.approx(3 * pb / world)   # + master, over 1/p
+    sh2 = opt_state_bytes_per_worker("adam", pb, world * 2, True)
+    assert sh2 < sh                          # monotone in world size
+
+
+# ---------------------------------------------------------------------------
+# Planner-decision properties
+# ---------------------------------------------------------------------------
+
+def _decision(n_layers, world, budget_bytes, mb=4.0):
+    best, _ = plan_rounds(_profs(n=n_layers, mb=mb),
+                          LINK_PRESETS["datacenter"], world,
+                          opt_name="adam", memory_budget_bytes=budget_bytes)
+    return best.shard_state
+
+
+def test_crossover_monotone_in_param_count():
+    """With a fixed per-worker budget, growing the model flips the
+    decision replicated -> sharded exactly once (replicated moments grow
+    past the budget and never come back)."""
+    budget = 100 * 2**20
+    decisions = [_decision(n_layers, world=64, budget_bytes=budget)
+                 for n_layers in (1, 2, 4, 8, 12, 16, 24, 32)]
+    assert decisions == sorted(decisions), decisions   # False... then True...
+    assert decisions[0] is False and decisions[-1] is True
+
+
+def test_crossover_monotone_in_world_size():
+    """A model whose replicated moments bust the budget needs sharding at
+    EVERY world size (replicated memory does not depend on p), and the
+    sharded footprint only shrinks with p — the decision cannot flip
+    back."""
+    budget = 40 * 2**20          # < 2 moments x 96 MiB params
+    for world in (2, 4, 8, 64, 256):
+        assert _decision(12, world, budget) is True, world
+    # generous budget: never shard (the tail is pure cost)
+    for world in (2, 8, 256):
+        assert _decision(12, world, 10 * 2**30) is False, world
+
+
+def test_budget_with_no_feasible_arm_picks_min_memory():
+    best, arms = plan_rounds(_profs(), LINK_PRESETS["datacenter"], 64,
+                             opt_name="adam", memory_budget_bytes=1)
+    assert best.shard_state
+    assert best.opt_mem_bytes == min(a.opt_mem_bytes for a in arms.values())
+
+
+def test_auto_never_modeled_slower_than_either_fixed_mode():
+    """The bench_sharded acceptance inequality: the unconstrained search
+    (which contains both execution modes as arms) is never modeled slower
+    than the fixed replicated dense mode, the fixed sharded dense mode, or
+    the compressed fixed baselines in either mode."""
+    for preset in ("fast_ici", "datacenter", "commodity"):
+        link = LINK_PRESETS[preset]
+        for world in (8, 64, 256):
+            profs = _profs()
+            best, arms = plan_rounds(profs, link, world, opt_name="adam")
+            assert "every_step_sharded" in arms
+            for shard in (False, True):
+                for comp, algo, cargs in (("none", "psum", ()),
+                                          ("none", "ring", ()),
+                                          ("int8", "ring", ())):
+                    fp = fixed_config_plan(profs, link, world, comp, algo,
+                                           compressor_args=cargs,
+                                           shard_state=shard)
+                    assert best.modeled_step_s <= fp.modeled_step_s + 1e-12, \
+                        (preset, world, shard, comp, algo)
+
+
+def test_sharded_arm_reports_memory_in_record():
+    best, arms = plan_rounds(_profs(), LINK_PRESETS["commodity"], 64,
+                             opt_name="adam",
+                             memory_budget_bytes=10 * 2**20)
+    assert best.shard_state
+    rec_arm = arms["every_step_sharded"]
+    assert rec_arm.opt_mem_bytes == pytest.approx(
+        opt_state_bytes_per_worker(
+            "adam", sum(p.grad_bytes for p in _profs()), 64, True))

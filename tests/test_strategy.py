@@ -118,6 +118,7 @@ def test_lag_commit_updates_g_last_and_rounds():
     dict(compressor="topk", algo="ring",
          compressor_args=(("ratio", 0.25),), bucket_bytes=8192),  # gather+EF
 ])
+@pytest.mark.slow
 def test_every_step_session_equals_legacy_path(sync_kw):
     """TrainSession with the degenerate every-step strategy must reproduce
     the legacy make_comm_optimized_train_step loop bit-for-bit: params,
@@ -178,6 +179,7 @@ def test_every_step_session_equals_legacy_path(sync_kw):
 # The dead --lag regression + honest rounds accounting, end-to-end
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_lag_session_skips_rounds_at_high_threshold():
     """--lag used to build state and never consult it (every step synced).
     Under the scheduler, a high threshold in LAG's regime (deterministic
@@ -199,6 +201,7 @@ def test_lag_session_skips_rounds_at_high_threshold():
                               np.asarray(jax.tree.leaves(sess.params)[0]))
 
 
+@pytest.mark.slow
 def test_local_sgd_session_rounds_accounting():
     """comm_rounds is the survey's Table 2 quantity: T/τ averaging rounds,
     not one per step (the legacy loop counted every step as a round)."""
@@ -213,6 +216,7 @@ def test_local_sgd_session_rounds_accounting():
     assert all(np.isfinite(losses))
 
 
+@pytest.mark.slow
 def test_push_pull_session_with_compressed_push():
     """Asymmetric push/pull composed with a compressing (EF) grad reducer:
     params/opt state diverge per worker between rounds, the EF residual is

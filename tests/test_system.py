@@ -1,10 +1,15 @@
 """End-to-end behaviour tests: the trainer drives loss down under every
 sync mode (vanilla / compressed / local SGD), serving generates finite
-tokens, checkpoints round-trip, and the data pipeline is deterministic."""
+tokens, checkpoints round-trip, and the data pipeline is deterministic.
+
+Marked ``slow`` (40-step CPU training runs, ~5 min total): excluded from
+the default tier-1 selection, run by the dedicated CI matrix job."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod

@@ -62,6 +62,7 @@ def test_chunkwise_equals_sequential(chunk):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_model_parallel_form_matches_sequential():
     """Full xlstm model: mlstm_parallel=True == sequential scan form."""
     cfg = reduced(get_config("xlstm-125m"))

@@ -1,0 +1,34 @@
+"""Tiny embedding+linear LM, duck-typed like ``repro.models.Model`` (has
+``loss(params, batch)`` over {'tokens': (B, T)}): the conformance suite's
+workhorse — big enough to fuse into multiple buckets, small enough that a
+strategy × wire × mode sweep trains in seconds.  Shared by
+test_conformance.py and the multi_device_checks.py subprocess.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class TinyLM:
+    def __init__(self, vocab: int = 64, d: int = 16):
+        self.vocab, self.d = vocab, d
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {"emb": jax.random.normal(k1, (self.vocab, self.d)) * 0.1,
+                "out": jax.random.normal(k2, (self.d, self.vocab)) * 0.1,
+                "b": jnp.zeros((self.vocab,))}
+
+    def loss(self, params, batch):
+        toks = batch["tokens"]
+        x = params["emb"][toks[:, :-1]]
+        logits = x @ params["out"] + params["b"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, toks[:, 1:][..., None], -1))
+
+
+def tiny_batch(step: int, batch: int = 8, seq: int = 16, vocab: int = 64):
+    return {"tokens": jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(42), step),
+        (batch, seq), 0, vocab)}
