@@ -42,7 +42,9 @@ def _modeled():
     for arch in ARCHS:
         cfg = get_config(arch)
         params = Model(cfg).abstract_params()
-        n_params = sum(int(jnp.prod(jnp.asarray(p.shape)))
+        # np.prod, not jnp: stacked MoE leaves exceed int32 and jnp.prod's
+        # default dtype silently wrapped negative (t_backward < 0)
+        n_params = sum(int(np.prod(p.shape))
                        for p in jax.tree.leaves(params))
         t_backward = 4.0 * n_params * TOKENS / PEAK_FLOPS
         profiles = profiles_from_grads(params, t_backward)

@@ -11,7 +11,8 @@ import traceback
 
 from benchmarks import (bench_collectives, bench_compression,
                         bench_large_batch, bench_overlap, bench_periodic,
-                        bench_planner, bench_protocols, bench_sharded)
+                        bench_pipeline, bench_planner, bench_protocols,
+                        bench_sharded)
 
 SUITES = {
     "table1": bench_large_batch,
@@ -22,6 +23,7 @@ SUITES = {
     "protocols": bench_protocols,
     "planner": bench_planner,
     "sharded": bench_sharded,
+    "pipeline": bench_pipeline,
 }
 
 

@@ -1,0 +1,213 @@
+"""CI benchmark-regression harness (ISSUE 4 satellite).
+
+Runs the MODELED planner benches — planner / sharded / pipeline — fully
+deterministically (abstract params + the α-β cost model; no wall-clock
+timing, so the numbers are bit-stable across machines), writes one
+``BENCH_<suite>.json`` per suite, and fails CI when any tracked number
+regresses more than ``--tolerance`` (default 10%) against the committed
+baselines in ``benchmarks/baselines/``.
+
+    PYTHONPATH=src python scripts/bench_ci.py                 # gate
+    PYTHONPATH=src python scripts/bench_ci.py --write-baselines
+    PYTHONPATH=src python scripts/bench_ci.py --perturb 0.2   # negative test
+
+The ``--perturb`` flag multiplies every computed number by (1 + p) before
+the comparison — the injected-regression negative test the CI workflow
+runs to prove the gate actually trips.
+
+Record schema (per suite file)::
+
+    {"<arch>/<link>/<point>": {"modeled_step_ms": 12.345, "arm": "..."},
+     ...}
+
+Tracked points are the acceptance quantities of each execution mode: the
+auto plan and the fixed baselines it must beat (planner), the
+replicated/sharded fixed modes and the budget flip (sharded), the fixed DP
+arms vs the best pipeline arm and the budget pick (pipeline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
+REGIMES = ("fast_ici", "commodity")
+PEAK_FLOPS = 197e12
+TOKENS = 4096
+WORLD = 256
+OPT = "adam"
+
+
+def _profiles():
+    import jax
+    import numpy as np
+
+    from repro.core.schedule import profiles_from_grads
+    from repro.configs import get_config
+    from repro.models import Model
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        params = Model(cfg).abstract_params()
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        t_backward = 4.0 * n * TOKENS / PEAK_FLOPS
+        out[arch] = (cfg, profiles_from_grads(params, t_backward))
+    return out
+
+
+def collect() -> dict:
+    """All tracked records, keyed by suite name."""
+    from repro.core.schedule import (LINK_PRESETS, PipelineAxis,
+                                     fixed_config_plan,
+                                     opt_state_bytes_per_worker, plan,
+                                     plan_rounds)
+    from repro.core.schedule.planner import FIXED_BASELINES
+
+    profs = _profiles()
+    planner: dict = {}
+    sharded: dict = {}
+    pipeline: dict = {}
+    for arch, (cfg, profiles) in profs.items():
+        pb = float(sum(p.grad_bytes for p in profiles))
+        pa = PipelineAxis(global_tokens=float(TOKENS * WORLD),
+                          bytes_per_token=float(cfg.d_model * 4))
+        for regime in REGIMES:
+            link = LINK_PRESETS[regime]
+            key = f"{arch}/{regime}"
+
+            # -- planner: overlap-planned auto vs the fixed baselines
+            auto = plan(profiles, link, WORLD)
+            planner[f"{key}/auto"] = {
+                "modeled_step_ms": auto.modeled_step_s * 1e3,
+                "arm": f"{auto.n_buckets} buckets"}
+            for name, (comp, algo, cargs) in FIXED_BASELINES.items():
+                fp = fixed_config_plan(profiles, link, WORLD, comp, algo,
+                                       compressor_args=cargs)
+                planner[f"{key}/fixed_{name}"] = {
+                    "modeled_step_ms": fp.modeled_step_s * 1e3, "arm": name}
+
+            # -- sharded: fixed modes + the budget flip
+            for shard in (False, True):
+                fp = fixed_config_plan(profiles, link, WORLD, "none",
+                                       "ring", shard_state=shard)
+                tag = "fixed_sharded" if shard else "fixed_replicated"
+                sharded[f"{key}/{tag}"] = {
+                    "modeled_step_ms": fp.modeled_step_s * 1e3, "arm": tag}
+            budget = opt_state_bytes_per_worker(OPT, pb, WORLD, False) / 2
+            tight, _ = plan_rounds(profiles, link, WORLD, opt_name=OPT,
+                                   memory_budget_bytes=budget)
+            sharded[f"{key}/auto_budget"] = {
+                "modeled_step_ms": tight.modeled_step_s * 1e3,
+                "arm": tight.key}
+
+            # -- pipeline: fixed DP arms vs pipeline arms (free + budget)
+            best, arms = plan_rounds(profiles, link, WORLD, opt_name=OPT,
+                                     pipeline=pa)
+            for k in ("every_step", "every_step_sharded"):
+                pipeline[f"{key}/{k}"] = {
+                    "modeled_step_ms": arms[k].modeled_step_s * 1e3,
+                    "arm": k}
+            pipes = [a for a in arms.values() if a.pipeline_stages > 1]
+            pbest = min(pipes, key=lambda a: a.modeled_step_s)
+            pipeline[f"{key}/pipeline_best"] = {
+                "modeled_step_ms": pbest.modeled_step_s * 1e3,
+                "arm": pbest.key}
+            pipeline[f"{key}/auto"] = {
+                "modeled_step_ms": best.modeled_step_s * 1e3,
+                "arm": best.key}
+            pbudget = arms["every_step"].opt_mem_bytes * 0.5
+            ptight, _ = plan_rounds(profiles, link, WORLD, opt_name=OPT,
+                                    pipeline=pa,
+                                    memory_budget_bytes=pbudget)
+            pipeline[f"{key}/auto_budget"] = {
+                "modeled_step_ms": ptight.modeled_step_s * 1e3,
+                "arm": ptight.key}
+    return {"planner": planner, "sharded": sharded, "pipeline": pipeline}
+
+
+def gate(records: dict, baseline_dir: str, tolerance: float) -> list:
+    """Compare against committed baselines; returns failure strings."""
+    failures = []
+    for suite, recs in records.items():
+        path = os.path.join(baseline_dir, f"BENCH_{suite}.json")
+        if not os.path.exists(path):
+            failures.append(f"{suite}: no baseline at {path} "
+                            f"(run --write-baselines and commit)")
+            continue
+        with open(path) as f:
+            base = json.load(f)
+        for name, old in base.items():
+            if name not in recs:
+                failures.append(f"{suite}/{name}: tracked number vanished")
+                continue
+            new_ms = recs[name]["modeled_step_ms"]
+            old_ms = old["modeled_step_ms"]
+            if new_ms > old_ms * (1.0 + tolerance):
+                failures.append(
+                    f"{suite}/{name}: {new_ms:.3f} ms vs baseline "
+                    f"{old_ms:.3f} ms (+{(new_ms / old_ms - 1) * 100:.1f}% "
+                    f"> {tolerance * 100:.0f}%)")
+        for name in recs:
+            if name not in base:
+                print(f"note: {suite}/{name} is new (not in baseline); "
+                      f"refresh baselines to track it")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(REPO, "benchmarks", "baselines"))
+    ap.add_argument("--out-dir",
+                    default=os.path.join(REPO, "artifacts", "bench"),
+                    help="where BENCH_<suite>.json land (CI uploads them)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative regression that fails the gate")
+    ap.add_argument("--perturb", type=float, default=0.0,
+                    help="inflate every number by this fraction before the "
+                         "comparison (negative test: the gate must trip)")
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="write the computed records AS the baselines")
+    args = ap.parse_args(argv)
+
+    records = collect()
+    if args.perturb:
+        for recs in records.values():
+            for r in recs.values():
+                r["modeled_step_ms"] *= (1.0 + args.perturb)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for suite, recs in records.items():
+        out = os.path.join(args.out_dir, f"BENCH_{suite}.json")
+        with open(out, "w") as f:
+            json.dump(recs, f, indent=1, sort_keys=True)
+        print(f"wrote {out} ({len(recs)} tracked numbers)")
+
+    if args.write_baselines:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for suite, recs in records.items():
+            path = os.path.join(args.baseline_dir, f"BENCH_{suite}.json")
+            with open(path, "w") as f:
+                json.dump(recs, f, indent=1, sort_keys=True)
+            print(f"baseline written: {path}")
+        return 0
+
+    failures = gate(records, args.baseline_dir, args.tolerance)
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    n = sum(len(r) for r in records.values())
+    print(f"bench gate OK: {n} tracked numbers within "
+          f"{args.tolerance * 100:.0f}% of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

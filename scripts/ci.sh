@@ -1,25 +1,41 @@
 #!/usr/bin/env bash
 # Smoke suite: tier-1 tests (fast selection — pytest.ini excludes the
 # `slow` marker, which runs as its own CI matrix job) + quickstart example
-# + a 5-step `--sync auto` train + a 3-step `--shard-state` train on the
-# reduced xlstm-125m config.  Run from the repo root:
+# + a 5-step `--sync auto` train + a 3-step `--shard-state` train + a
+# 3-step micro-batched pipeline train on reduced configs.  Run from the
+# repo root:
 #
 #     bash scripts/ci.sh [--fast]
 #
-# --fast skips the (slow on CPU) xlstm trains.
+# --fast skips the (slow on CPU) e2e trains.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1: pytest (fast selection) ==="
+# Name every step and echo the one that died: when a python process is
+# killed (OOM, timeout) the log otherwise ends mid-stream with no hint of
+# which check was running.
+CURRENT_STEP="startup"
+step() { CURRENT_STEP="$1"; echo "=== $1 ==="; }
+trap 'code=$?; if [[ $code -ne 0 ]]; then
+        echo "ci.sh: FAILED during: ${CURRENT_STEP} (exit ${code})" >&2
+      fi' EXIT
+
+# Device-count detection: multi-device-only smokes (pipeline S>=2, the
+# measured sharded comparison at world>1) self-gate on what exists here
+# instead of assuming a fixed mesh.
+DEVICES=$(python -c "import jax; print(len(jax.devices()))")
+echo "detected ${DEVICES} jax device(s)"
+
+step "tier-1: pytest (fast selection)"
 python -m pytest -x -q
 
-echo "=== smoke: examples/quickstart.py ==="
+step "smoke: examples/quickstart.py"
 python examples/quickstart.py
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "=== smoke: 5-step --sync auto train (reduced xlstm-125m) ==="
+  step "smoke: 5-step --sync auto train (reduced xlstm-125m)"
   # --plan-backward-ms models a TPU backward so the rounds axis is live on
   # CPU (the measured CPU backward would dwarf modeled comm and pin the
   # planner to every_step); expected pick: local_sgd τ + compressed rounds.
@@ -27,13 +43,32 @@ if [[ "${1:-}" != "--fast" ]]; then
       --steps 5 --batch 2 --seq 32 --sync auto \
       --plan-world 256 --link commodity --plan-backward-ms 20 --log-every 1
 
-  echo "=== smoke: 3-step sharded-DP train (--shard-state) ==="
+  step "smoke: 3-step sharded-DP train (--shard-state)"
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 3 --batch 2 --seq 32 --shard-state --log-every 1
+
+  if (( DEVICES % 2 == 0 && DEVICES >= 2 )); then
+    step "smoke: 3-step pipeline train (S=2, M=2, reduced gemma-2b)"
+    python -m repro.launch.train --arch gemma-2b --reduced \
+        --steps 3 --batch $(( 2 * DEVICES )) --seq 32 \
+        --pipeline-stages 2 --micro-batches 2 --log-every 1
+  else
+    step "smoke: 3-step micro-batched pipeline path (S=1, M=2)"
+    # one device: the 1F1B executor still runs (degenerate pipe), covering
+    # micro-batching, the per-row DP edge and the stage reports; S>=2 is
+    # exercised by the multi-device CI job (tests/multi_device_checks.py)
+    python -m repro.launch.train --arch gemma-2b --reduced \
+        --steps 3 --batch 2 --seq 32 \
+        --pipeline-stages 1 --micro-batches 2 --log-every 1
+  fi
 fi
 
-echo "=== smoke: planner + sharded benchmarks (modeled tables) ==="
+step "smoke: planner + sharded + pipeline benchmarks (modeled tables)"
 python -m benchmarks.run --only planner
 python -m benchmarks.run --only sharded
+python -m benchmarks.run --only pipeline
+
+step "smoke: bench regression gate (scripts/bench_ci.py)"
+python scripts/bench_ci.py --out-dir artifacts/bench
 
 echo "ALL SMOKE CHECKS PASSED"

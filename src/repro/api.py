@@ -46,19 +46,22 @@ from repro.configs import get_config, reduced
 from repro.core import (GradientSynchronizer, PlanExecutor, ShardLayout,
                         SyncConfig, SyncStrategy, get_scheduler)
 from repro.core.grad_sync import sharded_plan_from_config
-from repro.core.schedule import (LINK_PRESETS, LinkParams, RoundSchedule,
-                                 StrategyPlan, fixed_config_plan, plan,
+from repro.core.pipeline import StagedModel
+from repro.core.schedule import (LINK_PRESETS, LinkParams, PipelineAxis,
+                                 RoundSchedule, StrategyPlan,
+                                 fixed_config_plan, pipeline_arm, plan,
                                  plan_rounds, profiles_from_grads,
                                  serial_round_plan)
 from repro.core.schedule.planner import FIXED_BASELINES, local_sgd_arm
 from repro.core.strategy import LocalSGDScheduler
 from repro.data import DataConfig, SyntheticPipeline
-from repro.launch.mesh import data_axes, make_host_mesh
+from repro.launch.mesh import data_axes, make_host_mesh, make_pipe_mesh
 from repro.launch.steps import (_make_synced_train_step, _world_of,
                                 broadcast_worker_state, make_lag_programs,
                                 make_local_train_step, make_param_round_step,
+                                make_pipeline_train_step,
                                 make_sharded_train_step, make_train_step,
-                                worker_view)
+                                merge_opt_rows, worker_view)
 from repro.models import Model
 from repro.models.sharding_ctx import set_mesh_ctx
 from repro.optim import make_optimizer, make_sharded_optimizer, warmup_cosine
@@ -87,6 +90,20 @@ def strategy_from_plan(sp: StrategyPlan,
         return SyncStrategy(
             scheduler=get_scheduler("local_sgd", period=sp.schedule.period),
             param_reducer=PlanExecutor(sp.comm, tuple(axes)))
+    if sp.pipeline_stages > 1:
+        # the arm's comm plan describes the DP edge of the modeled heavy
+        # stage; execution re-derives a per-row plan on the live stage
+        # pytree from the arm's dominant (compressor, algo) choice — the
+        # reference executor's granularity contract (DESIGN.md §9)
+        dom = max(sp.comm.buckets, key=lambda b: b.bucket_bytes)
+        return SyncStrategy(
+            scheduler=get_scheduler("every_step"),
+            grad_reducer=GradientSynchronizer(
+                SyncConfig(compressor=dom.compressor,
+                           compressor_args=dom.compressor_args,
+                           algo=dom.algo, bucket_bytes=0), tuple(axes)),
+            pipeline_stages=sp.pipeline_stages,
+            micro_batches=sp.micro_batches)
     return SyncStrategy(scheduler=get_scheduler("every_step"),
                         grad_reducer=PlanExecutor(sp.comm, tuple(axes)),
                         shard_state=sp.shard_state)
@@ -144,6 +161,7 @@ class TrainSession:
         self.control_rounds = 0
         self.planned: Optional[Dict[str, Any]] = None
         self.layout: Optional[ShardLayout] = None   # set by sharded builds
+        self.staged: Optional[StagedModel] = None   # set by pipeline builds
         self._built = False
 
     # -- state views ---------------------------------------------------------
@@ -160,6 +178,9 @@ class TrainSession:
 
     @property
     def params(self):
+        if self.staged is not None:
+            return self.staged.merge(self._params["shared"],
+                                     self._params["rows"])
         return worker_view(self._params) if (self._built and self._diverging) \
             else self._params
 
@@ -201,20 +222,42 @@ class TrainSession:
         jax.block_until_ready(grad_fn(self._params, batch))
         return (time.time() - t0) * (2.0 / 3.0)
 
+    def _pipeline_executable(self, S: int, M: int) -> bool:
+        """Can pipeline(S, M) actually run on THIS host's devices/batch?
+        (The modeled plan may target a pod via ``plan_world``.)"""
+        n_dev = len(jax.devices())
+        if S < 2 or n_dev % S:
+            return False
+        dp = self.cfg.data_parallel or n_dev // S
+        if dp * S != n_dev or self.cfg.batch % dp:
+            return False
+        if (self.cfg.batch // dp) % M:
+            return False
+        try:
+            StagedModel(self.model, S)
+        except ValueError:
+            return False
+        return True
+
     def plan_auto(self, link="fast_ici", *, alpha=None, beta_gbps=None,
                   plan_world: int = 0, tau_grid=None, candidates=None,
                   scheduler=None, t_backward_s: Optional[float] = None,
                   shard_state: Optional[bool] = None,
-                  memory_budget_gb: Optional[float] = None) -> StrategyPlan:
+                  memory_budget_gb: Optional[float] = None,
+                  pipeline_stages: Optional[int] = None,
+                  micro_batches: Optional[int] = None) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
-        per-bucket strategy × shard axis), install the winning composite as
-        this session's strategy.  ``scheduler`` pins the rounds axis (an
-        explicit ``--local-sgd``/``--lag``/``--push-pull`` choice) and only
-        the per-bucket plan is searched.  ``shard_state`` pins the shard
-        axis (None = searched: sharded wins only when
-        ``memory_budget_gb`` rules replicated optimizer state out — the
-        gather tail never wins on wall clock alone).  Stashes the full
-        decision record in ``self.planned`` for reporting."""
+        per-bucket strategy × shard axis × parallelism axis), install the
+        winning composite as this session's strategy.  ``scheduler`` pins
+        the rounds axis (an explicit ``--local-sgd``/``--lag``/
+        ``--push-pull`` choice) and only the per-bucket plan is searched.
+        ``shard_state`` pins the shard axis (None = searched: sharded wins
+        only when ``memory_budget_gb`` rules replicated optimizer state out
+        — the gather tail never wins on wall clock alone).
+        ``pipeline_stages``/``micro_batches`` pin the parallelism axis to
+        pipeline(S, M); left None the free search prices pipeline arms too
+        (DESIGN.md §9).  Stashes the full decision record in
+        ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
         if scheduler is not None and shard_state:
@@ -225,6 +268,10 @@ class TrainSession:
                 "memory_budget_gb constrains the planner's FREE search "
                 "over arms; a pinned rounds scheduler fixes the memory "
                 "footprint, so the budget cannot be enforced — drop one")
+        if pipeline_stages is not None and pipeline_stages > 1:
+            if scheduler is not None or shard_state:
+                raise ValueError("pipeline_stages composes with every-step "
+                                 "replicated DP only (DESIGN.md §9)")
         lp = self.resolve_link(link, alpha, beta_gbps)
         world = plan_world or self.world
         if t_backward_s is None:
@@ -234,9 +281,28 @@ class TrainSession:
         if candidates is not None:
             kw["candidates"] = candidates
         t_bwd = sum(p.t_backward_s for p in profiles)
+        pipe_axis = PipelineAxis(
+            global_tokens=float(self.cfg.batch * self.cfg.seq),
+            bytes_per_token=float(self.model_cfg.d_model * 4))
 
         arms: Dict[str, StrategyPlan]
-        if scheduler is None:
+        if pipeline_stages is not None and pipeline_stages > 1:
+            # pinned pipeline(S, M): price that arm, plan only its DP edge
+            S = pipeline_stages
+            M = micro_batches or 8
+            # price at the requested world when it factors into pipe(S) x
+            # data(>=2); otherwise at the smallest such world (a 1-device
+            # demo still gets an honest modeled record)
+            plan_w = world if (world % S == 0 and world // S >= 2) else 2 * S
+            act = (pipe_axis.global_tokens / (plan_w // S) / M
+                   * pipe_axis.bytes_per_token)
+            best = pipeline_arm(
+                profiles, lp, plan_w, S, M, act,
+                opt_name=self.cfg.optimizer,
+                opt_moments=self.opt_moments, **kw)
+            arms = {best.key: best}
+            self.strategy = strategy_from_plan(best, self.axes)
+        elif scheduler is None:
             shard_grid = ((False, True) if shard_state is None
                           else (bool(shard_state),))
             best, arms = plan_rounds(
@@ -246,9 +312,23 @@ class TrainSession:
                 memory_budget_bytes=(memory_budget_gb * 2**30
                                      if memory_budget_gb is not None
                                      else None),
+                pipeline=pipe_axis,
                 **dict(kw, **({"tau_grid": tau_grid}
                               if tau_grid is not None else {})))
-            self.strategy = strategy_from_plan(best, self.axes)
+            exec_best = best
+            if best.pipeline_stages > 1 and not self._pipeline_executable(
+                    best.pipeline_stages, best.micro_batches):
+                # the modeled winner targets a pod this host cannot stage;
+                # run the best arm that CAN execute here, keep the record
+                fits = [a for a in arms.values()
+                        if a.pipeline_stages <= 1
+                        or self._pipeline_executable(a.pipeline_stages,
+                                                     a.micro_batches)]
+                exec_best = min(fits, key=lambda a: a.modeled_step_s)
+                print(f"note: modeled winner {best.key} needs a "
+                      f"pipe({best.pipeline_stages}) mesh this host cannot "
+                      f"build; executing {exec_best.key} instead", flush=True)
+            self.strategy = strategy_from_plan(exec_best, self.axes)
         elif isinstance(scheduler, LocalSGDScheduler):
             rp = serial_round_plan(profiles, lp, world, **kw)
             best = local_sgd_arm(rp, t_bwd, scheduler.cfg.period)
@@ -281,6 +361,43 @@ class TrainSession:
                         "t_backward_s": t_backward_s}
         return best
 
+    def apply_micro_batching(self, micro_batches: int) -> bool:
+        """Attach S=1 micro-batched accumulation (the degenerate pipe) to
+        the installed strategy — the ``--sync auto --micro-batches M``
+        composition.  Composes with every-step replicated arms only; for
+        other winners (local SGD, sharded, an already-pipelined arm) the
+        request is declined with a printed reason rather than silently
+        dropped.  Returns True when micro-batching will run."""
+        if self._built:
+            raise RuntimeError("apply_micro_batching must run before the "
+                               "first step")
+        M = int(micro_batches)
+        st = self.strategy
+        if M <= 1 or st is None:
+            return M <= 1 and st is None
+        if st.pipeline_stages > 1 or st.micro_batches > 1:
+            return True                      # already micro-batched
+        sched = st.scheduler
+        if (sched.computes != frozenset({"sync"}) or sched.has_param_rounds
+                or sched.needs_grad_probe or st.shard_state):
+            print(f"note: micro-batching composes with every-step "
+                  f"replicated sync only; chosen arm "
+                  f"({st.describe()}) runs without it", flush=True)
+            return False
+        reducer = st.grad_reducer
+        if isinstance(reducer, PlanExecutor):
+            # re-derive a per-row config reducer (plans are tied to the
+            # full-model pytree) from the plan's dominant bucket
+            dom = max(reducer.plan.buckets, key=lambda b: b.bucket_bytes)
+            reducer = GradientSynchronizer(
+                SyncConfig(compressor=dom.compressor,
+                           compressor_args=dom.compressor_args,
+                           algo=dom.algo, bucket_bytes=0),
+                tuple(self.axes))
+        self.strategy = SyncStrategy(scheduler=sched, grad_reducer=reducer,
+                                     micro_batches=M)
+        return True
+
     # -- program construction ------------------------------------------------
 
     def _build(self) -> None:
@@ -293,6 +410,14 @@ class TrainSession:
             self._base = jax.jit(
                 make_train_step(self.model, self.optimizer),
                 donate_argnums=(0, 1))
+            self._built = True
+            return
+
+        if self.strategy.pipeline_stages > 1 or \
+                self.strategy.micro_batches > 1:
+            # S=1 with micro-batches is the degenerate pipe: same 1F1B
+            # executor, no boundary sends — plain gradient accumulation
+            self._build_pipeline(self.strategy)
             self._built = True
             return
 
@@ -345,6 +470,64 @@ class TrainSession:
                                                      self.world)
         self._built = True
 
+    def _build_pipeline(self, st: SyncStrategy) -> None:
+        """Pipeline-parallel programs (DESIGN.md §9): rebuild the mesh as
+        ``pipe(S) × data``, split params into shared + per-stage layer rows,
+        and compile the 1F1B step.  ``self._params`` becomes
+        ``{"shared": ..., "rows": (S, R/S, ...)}`` (the ``params`` property
+        merges it back); the DP gradient edge runs per LAYER ROW so
+        compression granularity is stage-count invariant."""
+        sched = st.scheduler
+        if (sched.computes != frozenset({"sync"}) or sched.has_param_rounds
+                or sched.needs_grad_probe or sched.diverges_params):
+            raise ValueError(
+                f"pipeline_stages requires an every-step gradient-sync "
+                f"scheduler, got {sched.name!r}: local phases and gradient "
+                f"reuse assume each worker holds the WHOLE model")
+        S, M = st.pipeline_stages, st.micro_batches
+        n_dev = len(jax.devices())
+        if n_dev % S != 0:
+            raise ValueError(f"{n_dev} devices do not factor into "
+                             f"pipe({S}) x data")
+        dp = self.cfg.data_parallel or n_dev // S
+        if dp * S != n_dev:
+            raise ValueError(f"data_parallel={dp} x pipeline_stages={S} "
+                             f"!= {n_dev} devices")
+        if self.cfg.batch % dp or (self.cfg.batch // dp) % M:
+            raise ValueError(
+                f"global batch {self.cfg.batch} must split into "
+                f"{dp} DP shards x {M} micro-batches")
+        self.mesh = make_pipe_mesh(S, dp)
+        set_mesh_ctx(self.mesh, ("data",))
+        self.axes = data_axes(self.mesh)
+        self.world = dp
+        self._sched_state = sched.init_state(self._params)
+        self.staged = StagedModel(self.model, S)
+        shared, rows = self.staged.split(self._params)
+        self._params = {"shared": shared, "rows": rows}
+
+        engine = st.grad_reducer
+        if engine is None:
+            engine = GradientSynchronizer(SyncConfig(), tuple(self.axes))
+        elif isinstance(engine, GradientSynchronizer):
+            # per-leaf buckets: the DP edge syncs per layer row, keeping
+            # compression granularity identical for every stage count
+            engine = GradientSynchronizer(
+                dataclasses.replace(engine.cfg, bucket_bytes=0),
+                tuple(self.axes))
+        else:
+            raise ValueError(
+                "pipeline mode takes a SyncConfig-backed reducer (a "
+                "CommPlan is tied to the full-model pytree; the stage "
+                "pytree is per-row)")
+        step_fn, init_opt_state, init_sync_state = make_pipeline_train_step(
+            self.staged, self.optimizer, engine, self.mesh, M, self.axes)
+        self._sync = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        self._opt_state = init_opt_state(self._params)
+        self._sync_state = init_sync_state(self._params)
+        self._anchor = None
+        self._red_state = None
+
     def _build_sharded(self, st: SyncStrategy) -> None:
         """Sharded-DP programs (DESIGN.md §8): the every-step sync program
         is replaced by ``make_sharded_train_step`` and ``self._opt_state``
@@ -384,7 +567,11 @@ class TrainSession:
         """Leaf-shaped view of the optimizer state: the replicated state
         as-is, or — in sharded mode — moments and the f32 master params
         reconstructed from the canonical shard rows (checkpoint
-        portability / conformance testing)."""
+        portability / conformance testing).  In pipeline mode the per-stage
+        (S, R/S, ...) moment rows are merged back to the stack's (R, ...)
+        leaves, so the checkpoint does not pin the stage count."""
+        if self._built and self.staged is not None:
+            return merge_opt_rows(self._opt_state, self.staged.layout.rows)
         if not (self._built and self.strategy is not None
                 and self.strategy.shard_state):
             return self.opt_state

@@ -53,6 +53,31 @@ def allreduce(x, algo: str, axes: Sequence[str]):
 
 
 # ---------------------------------------------------------------------------
+# Pipeline edge: neighbour send/recv along the pipe axis (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def send_recv(tree, axis: str, shift: int = 1):
+    """Point-to-point edge of pipeline parallelism: every rank's payload
+    moves to rank ``r + shift`` along the manual ``axis`` (``+1`` carries
+    boundary activations forward, ``-1`` carries grad-activations
+    backward).  The pipeline does NOT wrap: the edge ranks with no sender
+    receive zeros (jax ppermute semantics), which is exactly the masked
+    warmup/drain payload the 1F1B executor wants.  jit-only, like every
+    shard_map collective in this repo."""
+    p = jax.lax.axis_size(axis)
+    if shift not in (1, -1):
+        raise ValueError(f"send_recv moves one hop, got shift={shift}")
+    perm = [(i, i + shift) for i in range(p) if 0 <= i + shift < p]
+
+    def one(x):
+        if not perm:                        # single-stage degenerate pipe
+            return jnp.zeros_like(x)
+        return jax.lax.ppermute(x, axis, perm)
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
 # Sharded-DP edges: reduce_scatter / all_gather (survey §3.1.3, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 #

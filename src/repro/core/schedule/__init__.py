@@ -8,7 +8,12 @@ from repro.core.schedule.perf_model import (  # noqa: F401
     iteration_time_tac, wfbp_case)
 from repro.core.schedule.planner import (  # noqa: F401
     BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
-    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, OPT_MOMENTS, RoundSchedule,
-    StrategyPlan, TAU_GRID, fixed_config_plan, opt_state_bytes_per_worker,
-    plan, plan_cost_s, plan_rounds, profiles_from_grads, profiles_from_sizes,
+    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, MICRO_GRID, OPT_MOMENTS,
+    PIPE_GRID, PipelineAxis, RoundSchedule, StrategyPlan, TAU_GRID,
+    fixed_config_plan, opt_state_bytes_per_worker, pipeline_arm, plan,
+    plan_cost_s, plan_rounds, profiles_from_grads, profiles_from_sizes,
     serial_round_plan, shard_gather_tail_s)
+from repro.core.pipeline import (  # noqa: F401
+    PIPE_FWD_FRACTION, StagedModel, aligned_order, aligned_ticks,
+    balanced_cuts, bubble_fraction, schedule_1f1b, simulate_1f1b,
+    stage_costs)

@@ -97,6 +97,13 @@ def shard_gather_cost_s(algo: str, n_bytes: float, p: int,
     return allreduce_cost_s("ring", n_bytes, p, link) / 2.0
 
 
+def p2p_cost_s(n_bytes: float, link: LinkParams) -> float:
+    """One point-to-point transfer of ``n_bytes`` (α + nβ) — the pipeline
+    boundary edge: one micro-batch of activations (forward) or
+    grad-activations (backward) crossing one stage cut (DESIGN.md §9)."""
+    return link.alpha_s + n_bytes * link.beta_s_per_byte
+
+
 def allgather_cost_s(n_bytes: float, p: int, link: LinkParams) -> float:
     """Ring all-gather where every rank contributes ``n_bytes``: (p-1) steps
     each moving one rank's payload (the gather-based compressor wire

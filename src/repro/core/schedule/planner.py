@@ -357,7 +357,13 @@ class StrategyPlan:
     serial cost of one averaging round.  ``shard_state`` mirrors
     ``comm.shard_state`` (the memory axis of the search);
     ``opt_mem_bytes`` is the modeled per-worker optimizer-state footprint
-    under that choice."""
+    under that choice.
+
+    The PARALLELISM axis (DESIGN.md §9): ``pipeline_stages > 1`` marks a
+    pipeline(S, M) arm — ``comm`` then describes the DP edge of ONE stage
+    (1/S of the leaves over world/S replicas), ``bubble`` carries
+    (S-1)/(S-1+M), and ``pipe_p2p_s`` the per-device boundary-activation
+    traffic per step."""
     schedule: RoundSchedule
     comm: CommPlan
     modeled_step_s: float
@@ -365,10 +371,26 @@ class StrategyPlan:
     t_backward_s: float
     shard_state: bool = False
     opt_mem_bytes: float = float("nan")
+    pipeline_stages: int = 1
+    micro_batches: int = 0
+    bubble: float = 0.0
+    pipe_p2p_s: float = 0.0
+
+    @property
+    def key(self) -> str:
+        """Arm key in ``plan_rounds``'s arms dict (and the report table)."""
+        if self.pipeline_stages > 1:
+            return (f"pipeline(S={self.pipeline_stages},"
+                    f"M={self.micro_batches})")
+        return self.schedule.key + ("_sharded" if self.shard_state else "")
 
     def describe(self) -> str:
         shard = " [shard_state 1/p]" if self.shard_state else ""
-        return (f"{self.schedule.key}{shard}: "
+        pipe = ""
+        if self.pipeline_stages > 1:
+            pipe = (f" [bubble {self.bubble:.1%}, "
+                    f"p2p {self.pipe_p2p_s * 1e3:.3f} ms]")
+        return (f"{self.key}{shard}{pipe}: "
                 f"{self.modeled_step_s * 1e3:.3f} ms/step"
                 f" (round {self.round_cost_s * 1e3:.3f} ms, "
                 f"{self.comm.n_buckets} buckets)")
@@ -463,6 +485,134 @@ def local_sgd_arm(round_plan: CommPlan, t_backward_s: float, tau: int,
         t_backward_s=t_backward_s)
 
 
+# ---------------------------------------------------------------------------
+# The parallelism axis (survey §3.1.3/§3.3: pipeline × data, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# Stage counts and micro-batch counts searched by ``plan_rounds`` when a
+# ``PipelineAxis`` is supplied.  S must divide the world (the 2-D pipe×data
+# mesh) and leave at least 2 DP replicas per stage.
+PIPE_GRID = (2, 4, 8)
+MICRO_GRID = (4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineAxis:
+    """What the planner needs to price pipeline(S, M) arms: the boundary
+    activation traffic.  ``global_tokens`` is batch × seq per step;
+    ``bytes_per_token`` the boundary activation row (d_model × 4 for the
+    f32 reference wire).  One micro-batch crossing one stage cut moves
+    ``global_tokens / (world/S) / M × bytes_per_token`` bytes."""
+    global_tokens: float
+    bytes_per_token: float
+    pipe_grid: Tuple[int, ...] = PIPE_GRID
+    micro_grid: Tuple[int, ...] = MICRO_GRID
+
+
+def pipeline_dp_plan(layer_profiles: Sequence[LayerProfile],
+                     link: LinkParams, world: int, n_stages: int,
+                     candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                     bucket_grid: Sequence[int] = BUCKET_GRID,
+                     dense_small_bytes: float = DENSE_SMALL_BYTES,
+                     mean: bool = True) -> Tuple[CommPlan, List[float]]:
+    """The M-independent half of a pipeline arm: balanced stage cuts plus
+    the overlap-planned DP edge of the HEAVIEST stage (its leaves over
+    world/S replicas).  Returns ``(dp_plan, per_stage_bytes)`` so
+    :func:`plan_rounds` computes it once per S, not once per (S, M)."""
+    from repro.core.pipeline import balanced_cuts, stage_costs
+
+    S = int(n_stages)
+    if S < 2:
+        raise ValueError(f"pipeline arm needs n_stages >= 2, got {S}")
+    if world % S != 0 or world // S < 2:
+        raise ValueError(f"world {world} does not factor into pipe({S}) x "
+                         f"data(>=2)")
+    if len(layer_profiles) < S:
+        raise ValueError(f"cannot cut {len(layer_profiles)} leaves into "
+                         f"{S} stages")
+    t_bwd = sum(l.t_backward_s for l in layer_profiles)
+    bytes_ = [l.grad_bytes for l in layer_profiles]
+    cuts = balanced_cuts(bytes_, S)
+    per_stage = stage_costs(bytes_, cuts)
+    heavy = int(max(range(S), key=lambda s: per_stage[s]))
+    sub = list(layer_profiles[cuts[heavy]:cuts[heavy + 1]])
+    # each device still computes the full t_bwd per step (its 1/S of the
+    # layers over S× micro-batches) — rescale the slice's backward times so
+    # the overlap window the DP-edge plan sees stays t_bwd
+    sub_t = sum(l.t_backward_s for l in sub) or 1.0
+    scale = t_bwd / sub_t
+    sub = [LayerProfile(t_backward_s=l.t_backward_s * scale,
+                        grad_bytes=l.grad_bytes) for l in sub]
+    cp = plan(sub, link, world // S, candidates=candidates,
+              bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
+              mean=mean)
+    return cp, per_stage
+
+
+def pipeline_arm(layer_profiles: Sequence[LayerProfile], link: LinkParams,
+                 world: int, n_stages: int, micro_batches: int,
+                 act_bytes_mb: float,
+                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                 bucket_grid: Sequence[int] = BUCKET_GRID,
+                 dense_small_bytes: float = DENSE_SMALL_BYTES,
+                 mean: bool = True, opt_name: str = "adam",
+                 opt_moments: Optional[float] = None,
+                 dp_plan: Optional[Tuple[CommPlan, List[float]]] = None
+                 ) -> StrategyPlan:
+    """Price one pipeline(S, M) composite on a pipe(S) × data(world/S) mesh.
+
+    Per-device compute is unchanged (1/S of the layers × S× the per-replica
+    batch), so the arm pays three things on top of the DP arm's backward:
+
+      * the DP edge shrinks: each pipe rank syncs only its stage's leaves
+        (the HEAVIEST stage under the balanced cut — the critical path)
+        over world/S replicas, overlap-planned by the same :func:`plan`
+        search, so per-bucket compression composes on the DP dimension;
+      * the 1F1B bubble: the timeline stretches to (M+S-1)/M of the
+        compute, so the idle charged ON TOP of the backward is
+        ``(S-1)/M`` of (forward + backward) — i.e. ``bubble/(1-bubble)``
+        of compute, where ``bubble = (S-1)/(S-1+M)`` is the reported
+        timeline fraction (forward priced at ``PIPE_FWD_FRACTION`` ×
+        backward);
+      * boundary p2p: 2M transfers of one micro-batch of activations per
+        device per step (M forward sends + M grad-activation sends),
+        α + bytes·β each — nothing hides them in the lockstep executor.
+
+    Memory: moments × the heaviest stage's param bytes (replicated over
+    the stage's DP group) — the pipeline arm is also a memory lever, and
+    can win through ``memory_budget_bytes`` like the shard arm.
+
+    ``dp_plan`` takes a precomputed :func:`pipeline_dp_plan` result (the
+    M-independent half) so grid sweeps don't redo the bucket search.
+    """
+    from repro.core.pipeline import PIPE_FWD_FRACTION, bubble_fraction
+    from repro.core.schedule.cost import p2p_cost_s
+
+    S, M = int(n_stages), int(micro_batches)
+    if dp_plan is None:
+        dp_plan = pipeline_dp_plan(
+            layer_profiles, link, world, S, candidates=candidates,
+            bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
+            mean=mean)
+    cp, per_stage = dp_plan
+    t_bwd = sum(l.t_backward_s for l in layer_profiles)
+    bub = bubble_fraction(S, M)
+    # idle relative to compute = bubble/(1-bubble) = (S-1)/M — charging
+    # bubble·compute instead would under-price small-M arms by M/(M+S-1)
+    idle = (S - 1) / M * (1.0 + PIPE_FWD_FRACTION) * t_bwd
+    p2p = 2.0 * M * p2p_cost_s(act_bytes_mb, link)
+    modeled = cp.modeled_step_s + idle + p2p
+    mom = OPT_MOMENTS.get(opt_name, 2) if opt_moments is None \
+        else opt_moments
+    return StrategyPlan(
+        schedule=RoundSchedule(), comm=cp, modeled_step_s=modeled,
+        round_cost_s=sum(_bucket_cost_s(b, world // S, link)
+                         for b in cp.buckets),
+        t_backward_s=t_bwd, pipeline_stages=S, micro_batches=M, bubble=bub,
+        pipe_p2p_s=p2p,
+        opt_mem_bytes=float(mom) * max(per_stage))
+
+
 def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
                 world: int,
                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
@@ -474,7 +624,8 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
                 opt_name: str = "adam",
                 shard_grid: Sequence[bool] = (False, True),
                 memory_budget_bytes: Optional[float] = None,
-                opt_moments: Optional[float] = None
+                opt_moments: Optional[float] = None,
+                pipeline: Optional[PipelineAxis] = None
                 ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
     """Search the rounds axis × the bits axis × the shard axis: every
     candidate composite is a (RoundSchedule, CommPlan) pair; returns
@@ -494,6 +645,14 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
     params — local SGD — inherently carry replicated-size state and drop
     with them).  If nothing fits, the minimum-memory arm is returned
     anyway (the budget is advisory, the decision record is honest).
+
+    The PARALLELISM axis (``pipeline(S,M)``, priced when a
+    :class:`PipelineAxis` is supplied): S-stage pipelining shrinks the DP
+    edge S× (each pipe rank syncs 1/S of the leaves over world/S replicas)
+    at the cost of the 1F1B bubble plus boundary activation p2p — it wins
+    on wall clock exactly when gradient communication still dominates the
+    overlapped backward AFTER the bits axis did its best, which is the
+    big-model / slow-link corner both surveys call out (DESIGN.md §9).
     """
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
     pb = float(sum(l.grad_bytes for l in layer_profiles))   # f32 param bytes
@@ -526,6 +685,25 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
             arm = local_sgd_arm(rp, t_bwd, tau, inflation)
             arms[arm.schedule.key] = dataclasses.replace(
                 arm, opt_mem_bytes=mem)
+    if pipeline is not None and world > 1:
+        for S in pipeline.pipe_grid:
+            if S < 2 or world % S != 0 or world // S < 2 \
+                    or len(layer_profiles) < S:
+                continue
+            # the stage cuts + DP-edge bucket search depend only on S;
+            # only bubble/p2p vary with M
+            dp = pipeline_dp_plan(
+                layer_profiles, link, world, S, candidates=candidates,
+                bucket_grid=bucket_grid,
+                dense_small_bytes=dense_small_bytes, mean=mean)
+            for M in pipeline.micro_grid:
+                act = (pipeline.global_tokens / (world // S) / M
+                       * pipeline.bytes_per_token)
+                arm = pipeline_arm(
+                    layer_profiles, link, world, S, M, act,
+                    opt_name=opt_name, opt_moments=opt_moments,
+                    dp_plan=dp)
+                arms[arm.key] = arm
     pool = list(arms.values())
     if memory_budget_bytes is not None:
         fits = [a for a in pool if a.opt_mem_bytes <= memory_budget_bytes]

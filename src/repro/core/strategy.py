@@ -251,16 +251,45 @@ class SyncStrategy:
     params all-gather back on the forward edge.  Only every-step gradient
     sync composes with it — schedulers with local phases or gradient reuse
     need full per-worker optimizer state by construction.
+
+    ``pipeline_stages > 1`` selects the pipeline-parallel execution mode
+    (DESIGN.md §9): the model is cut into S stages on a ``pipe × data``
+    mesh, ``micro_batches`` micro-batches flow through a 1F1B schedule,
+    and the grad reducer runs on the DP dimension only (per layer row).
+    Composes with every-step gradient sync exclusively, and not with
+    ``shard_state`` (each is its own answer to the optimizer-memory axis).
     """
     scheduler: RoundScheduler
     grad_reducer: Any = None
     param_reducer: Any = None
     param_algo: str = "psum"
     shard_state: bool = False
+    pipeline_stages: int = 1
+    micro_batches: int = 1
+
+    def __post_init__(self):
+        if self.pipeline_stages < 1 or self.micro_batches < 1:
+            raise ValueError(f"pipeline_stages/micro_batches must be >= 1, "
+                             f"got {self.pipeline_stages}/"
+                             f"{self.micro_batches}")
+        if self.pipeline_stages > 1 and self.shard_state:
+            raise ValueError(
+                "pipeline_stages composes with replicated DP only: the "
+                "sharded forward-edge all-gather and the pipeline's "
+                "boundary sends are competing answers to the same memory "
+                "axis — pick one (DESIGN.md §9)")
 
     def describe(self) -> str:
+        if self.pipeline_stages > 1:
+            mode = (f" [pipeline S={self.pipeline_stages} "
+                    f"M={self.micro_batches}]")
+        elif self.micro_batches > 1:
+            mode = f" [micro-batches M={self.micro_batches}]"
+        else:
+            mode = ""
         parts = [self.scheduler.describe()
-                 + (" [shard_state 1/p]" if self.shard_state else "")]
+                 + (" [shard_state 1/p]" if self.shard_state else "")
+                 + mode]
         if "sync" in self.scheduler.computes:
             parts.append("grads via "
                          + _describe_reducer(self.grad_reducer, "dense psum"))
@@ -291,6 +320,8 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
                   param_plan: Optional[CommPlan] = None,
                   param_algo: str = "psum",
                   shard_state: bool = False,
+                  pipeline_stages: int = 1,
+                  micro_batches: int = 1,
                   **scheduler_kwargs) -> SyncStrategy:
     """Convenience constructor: resolve the scheduler by registry name and
     build reducers from either a global ``SyncConfig`` or a planned
@@ -315,4 +346,6 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
             param_reducer, grad_reducer = grad_reducer, None
     return SyncStrategy(scheduler=scheduler, grad_reducer=grad_reducer,
                         param_reducer=param_reducer, param_algo=param_algo,
-                        shard_state=shard_state)
+                        shard_state=shard_state,
+                        pipeline_stages=pipeline_stages,
+                        micro_batches=micro_batches)

@@ -29,5 +29,14 @@ def make_host_mesh(data: int = 1, model: int = 1):
                          axis_types=(AxisType.Auto,) * 2)
 
 
+def make_pipe_mesh(pipe: int = 1, data: int = 1):
+    """2-D pipeline × data mesh (DESIGN.md §9): stage s of a pipelined
+    model lives on mesh row ``pipe=s``, replicated ``data`` ways for the
+    DP gradient edge.  The ``pipe`` axis is deliberately NOT in
+    :func:`data_axes` — gradient collectives never cross stage cuts."""
+    return jax.make_mesh((pipe, data), ("pipe", "data"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
 def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

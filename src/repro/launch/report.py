@@ -7,6 +7,7 @@ from __future__ import annotations
 import json
 import os
 import re
+from typing import Optional
 
 from repro.configs import SHAPES, get_config
 from repro.launch.paths import ARTIFACTS, EXPERIMENTS
@@ -136,10 +137,19 @@ def render_strategy_plan(sp, arms=None, baselines=None,
               if round_like else "")
     shard = " + shard_state (optimizer state 1/p)" if sp.shard_state else ""
     lines = ["### Sync strategy (auto-tuned: rounds × bits × overlap"
-             " × shard)", "",
-             f"chosen rounds schedule: **{sp.schedule.key}{shard}** — "
+             " × shard × parallelism)", "",
+             f"chosen arm: **{sp.key}{shard}** — "
              f"modeled {sp.modeled_step_s * 1e3:.3f} ms/step "
              f"({detail}backward {sp.t_backward_s * 1e3:.3f} ms)"]
+    if sp.pipeline_stages > 1:
+        lines.append(
+            f"pipeline: {sp.pipeline_stages} stages × {sp.micro_batches} "
+            f"micro-batches — bubble {sp.bubble:.1%} "
+            f"((S−1)/(S−1+M)), boundary p2p "
+            f"{sp.pipe_p2p_s * 1e3:.3f} ms/step, per-stage opt state "
+            f"{sp.opt_mem_bytes / 2**20:.1f} MiB/worker; the comm plan "
+            f"below is the DP edge of the heaviest stage over world/S "
+            f"replicas")
     if sp.shard_state and sp.opt_mem_bytes == sp.opt_mem_bytes:
         repl = (arms or {}).get("every_step")
         vs = (f" (replicated would be {repl.opt_mem_bytes / 2**20:.1f} MiB)"
@@ -153,12 +163,11 @@ def render_strategy_plan(sp, arms=None, baselines=None,
                 if a.opt_mem_bytes == a.opt_mem_bytes else "—")
 
     if arms and len(arms) > 1:
-        lines += ["", "| rounds schedule | round cost | modeled /step | "
+        lines += ["", "| arm | round cost | modeled /step | "
                   "opt state/worker |", "|---|---|---|---|"]
         for key, a in sorted(arms.items(),
                              key=lambda kv: kv[1].modeled_step_s):
-            mark = " ←" if (key == sp.schedule.key
-                            + ("_sharded" if sp.shard_state else "")) else ""
+            mark = " ←" if key == sp.key else ""
             lines.append(f"| {key}{mark} | {a.round_cost_s * 1e3:.3f} ms | "
                          f"{a.modeled_step_s * 1e3:.3f} ms | {_mem(a)} |")
     lines += ["", render_comm_plan(
@@ -193,6 +202,11 @@ def save_strategy_plan(sp, arch: str) -> str:
     rec["round_cost_s"] = sp.round_cost_s
     rec["t_backward_s"] = sp.t_backward_s
     rec["shard_state"] = sp.shard_state
+    if sp.pipeline_stages > 1:
+        rec["pipeline"] = {"stages": sp.pipeline_stages,
+                           "micro_batches": sp.micro_batches,
+                           "bubble_fraction": sp.bubble,
+                           "p2p_cost_s": sp.pipe_p2p_s}
     if sp.opt_mem_bytes == sp.opt_mem_bytes:   # not NaN
         rec["opt_mem_bytes_per_worker"] = sp.opt_mem_bytes
     return _write_plan_record(rec, arch)
@@ -224,6 +238,39 @@ def render_sharded_memory(layout, opt_name: str, moments=None) -> str:
             f"(master+moments over world={layout.world}) vs "
             f"{rep / 2**20:.2f} MiB replicated — {verdict}; params "
             f"{layout.param_bytes() / 2**20:.2f} MiB f32")
+
+
+def render_pipeline_stages(staged, params_split, micro_batches: int,
+                           moments: Optional[float] = None) -> str:
+    """Per-stage rows for an EXECUTED pipeline run (DESIGN.md §9): stage
+    param/optimizer bytes (homogeneous stages — every stage holds R/S
+    identical rows plus the replicated shared cells) and the 1F1B bubble
+    of the configured (S, M)."""
+    import jax
+    import numpy as np
+
+    from repro.core.pipeline import bubble_fraction
+    lay = staged.layout
+    S, M = lay.n_stages, int(micro_batches)
+    mom = 2.0 if moments is None else float(moments)
+    shared_b = sum(np.asarray(x).nbytes
+                   for x in jax.tree.leaves(params_split["shared"]))
+    rows_b = sum(np.asarray(x).nbytes
+                 for x in jax.tree.leaves(params_split["rows"]))
+    per_stage = rows_b / S + shared_b
+    lines = [f"pipeline: {S} stages × {lay.rows_per_stage} layer rows, "
+             f"{M} micro-batches — bubble {bubble_fraction(S, M):.1%} "
+             f"((S−1)/(S−1+M))",
+             "| stage | layer rows | params MiB | opt state MiB |",
+             "|---|---|---|---|"]
+    for s in range(S):
+        lines.append(f"| {s} | {lay.rows_per_stage} | "
+                     f"{per_stage / 2**20:.2f} | "
+                     f"{mom * per_stage / 2**20:.2f} |")
+    lines.append(f"(each stage replicates the shared cells — "
+                 f"{shared_b / 2**20:.2f} MiB of embed/norm/head — and "
+                 f"holds {rows_b / S / 2**20:.2f} MiB of its own rows)")
+    return "\n".join(lines)
 
 
 def comm_plan_record(plan) -> dict:

@@ -281,6 +281,288 @@ def make_sharded_train_step(model: Model, executor, layout, sharded_opt,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline parallelism (1F1B micro-batching over a pipe axis, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def pipe_spec_tree(template, pipe_axis: str = "pipe"):
+    """Per-leaf PartitionSpec tree for pipeline-mode state: any leaf under a
+    ``"rows"`` key (per-stage layer rows, or optimizer moments over them)
+    carries the leading stage axis sharded over ``pipe``; everything else
+    (embed / final norm / lm head and their moments) is replicated."""
+    def spec(path, _):
+        if any(getattr(e, "key", None) == "rows" for e in path):
+            return P(pipe_axis)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, template)
+
+
+def unstack_rows(rows_local, rows_per_stage: int):
+    """Stage rows (R/S, ...) -> list of R/S per-row trees: the DP gradient
+    edge syncs PER LAYER ROW so compression granularity (int8 scales, top-k
+    masks, EF residuals) is identical for every stage count — the
+    bit-compatibility contract of the conformance suite (DESIGN.md §9)."""
+    return [jax.tree.map(lambda x, i=i: x[i], rows_local)
+            for i in range(rows_per_stage)]
+
+
+def restack_rows(row_trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *row_trees)
+
+
+def merge_opt_rows(state, rows: int):
+    """Leaf-shaped view of pipeline optimizer state: wherever the state
+    mirrors the stage tree (``{"shared": ..., "rows": [per-row trees,
+    leaves (S, ...)]}``), stack the per-row entries back into the stack's
+    ``(R, ...)`` leaves (row r lives at stage r // (R/S), slot r % (R/S)
+    — the same stage-major order ``StagedModel.split`` cuts).  Shared by
+    ``TrainSession.full_opt_state`` and the conformance checks, so the
+    checkpoint merge and the bit-exactness comparison cannot drift."""
+    def merge(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "rows" and isinstance(v, list):
+                    st = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *v)
+                    out[k] = jax.tree.map(
+                        lambda x: x.reshape((rows,) + x.shape[2:]), st)
+                else:
+                    out[k] = merge(v)
+            return out
+        if isinstance(node, list):
+            return [merge(x) for x in node]
+        return node
+
+    return merge(state)
+
+
+def make_pipeline_train_step(staged, optimizer, engine, mesh,
+                             micro_batches: int,
+                             data_axes: Sequence[str] = ("data",),
+                             pipe_axis: str = "pipe"):
+    """1F1B pipeline-parallel train step on a ``pipe × data`` mesh.
+
+    ``staged`` is a :class:`repro.core.pipeline.StagedModel` (or any object
+    with the same ``layout`` / ``split`` / ``embed_mb`` / ``stage_apply`` /
+    ``loss_tail`` / ``aux_coef`` surface).  Params travel as
+    ``{"shared": ..., "rows": ...}`` — shared replicated, rows with a
+    leading (S,) stage axis sharded over ``pipe``.
+
+    The body runs the 1F1B dataflow on an aligned slot grid of
+    ``T = M + 2(S-1)`` ticks (``pipeline.aligned_ticks``): every tick each
+    pipe rank executes one masked forward slot and one masked backward
+    slot, then boundary payloads move one hop by ``send_recv`` (activations
+    forward, grad-activations backward).  The ppermute is a rendezvous, so
+    the slots are globally aligned — per-stage op order matches the
+    canonical ``schedule_1f1b`` (warmup, steady 1F/1B, drain) with at most
+    ``2(S-1-s)+1`` micro-batches in flight; backward slots rematerialize
+    the stage forward from the buffered boundary input, exactly the remat
+    policy the stack already uses per period (DESIGN.md §9).
+
+    Gradients accumulate over micro-batches in ascending order (bit-equal
+    to scan accumulation), shared-cell grads are combined across stages by
+    one masked psum (adding exact zeros), and the DP edge syncs the
+    per-row-unstacked pytree through ``engine`` over ``data_axes`` only —
+    so per-bucket compression composes on the DP dimension of the 2-D
+    mesh.  The optimizer then updates stage-locally (elementwise
+    optimizers are bit-identical to the single-stage update restricted to
+    the stage; layerwise norms see per-row leaves).
+    """
+    from repro.core.collectives import send_recv
+
+    S = staged.layout.n_stages
+    if mesh.shape[pipe_axis] != S:
+        raise ValueError(f"mesh pipe axis {mesh.shape[pipe_axis]} != "
+                         f"staged n_stages {S}")
+    M = int(micro_batches)
+    if M < 1:
+        raise ValueError(f"micro_batches must be >= 1, got {M}")
+    T = M + 2 * (S - 1)
+    W = 2 * S - 1                        # live window of buffered F inputs
+    axes = tuple(data_axes)
+    rps = staged.layout.rows_per_stage
+    world = _world_of(mesh, axes) * S    # sync/EF state is per (pipe, data)
+
+    def body(params, opt_state, sync_state, batch, step, rng):
+        from repro.models.sharding_ctx import manual_region
+        with manual_region():
+            return _body(params, opt_state, sync_state, batch, step, rng)
+
+    def _body(params, opt_state, sync_state, batch, step, rng):
+        shared = params["shared"]
+        rows = jax.tree.map(lambda s: s[0], params["rows"])     # (R/S, ...)
+        opt = jax.tree_util.tree_map_with_path(
+            lambda p, s: s[0] if any(getattr(e, "key", None) == "rows"
+                                     for e in p) else s, opt_state)
+        sync_state_l = jax.tree.map(lambda s: s[0], sync_state)
+
+        s_idx = jax.lax.axis_index(pipe_axis)
+        is_first = s_idx == 0
+        is_last = s_idx == S - 1
+        tokens = batch["tokens"]                    # per-DP-shard slice
+        b_dp, seq = tokens.shape
+        assert b_dp % M == 0, (b_dp, M)
+        toks_mb = tokens.reshape(M, b_dp // M, seq)
+
+        def sel_mb(m):
+            return jax.lax.dynamic_index_in_dim(
+                toks_mb, jnp.clip(m, 0, M - 1), 0, keepdims=False)
+
+        def stage_fwd(rows_, payload):
+            h, aux = staged.stage_apply(rows_, payload["h"])
+            return {"h": h, "aux": payload["aux"] + aux}
+
+        def fwd_and_loss(rows_, shared_, payload, toks):
+            out = stage_fwd(rows_, payload)
+            l = (staged.loss_tail(shared_, out["h"], toks)
+                 + staged.aux_coef * out["aux"])
+            return out, l
+
+        f32 = jnp.float32
+        zero_payload = {
+            "h": jnp.zeros_like(staged.embed_mb(shared, sel_mb(
+                jnp.zeros((), jnp.int32)))),
+            "aux": jnp.zeros((), f32)}
+        buf = jax.tree.map(
+            lambda x: jnp.zeros((W,) + x.shape, x.dtype), zero_payload)
+        recv_f = zero_payload
+        recv_b = zero_payload
+        g_shared = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), shared)
+        g_rows = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), rows)
+        loss_sum = jnp.zeros((), f32)
+
+        def masked_add(acc, g, m):
+            return jax.tree.map(
+                lambda a, d: a + jnp.where(m, d.astype(f32), 0.0), acc, g)
+
+        for k in range(T):
+            # ---- forward slot: F(k - s) ----
+            m_f = k - s_idx
+            x_first = {"h": staged.embed_mb(shared, sel_mb(m_f)),
+                       "aux": jnp.zeros((), f32)}
+            x_in = jax.tree.map(lambda a, b: jnp.where(is_first, a, b),
+                                x_first, recv_f)
+            # stage-interface barrier (paired with the per-row barriers in
+            # stage_apply): the embed/recv select must not fuse into the
+            # stage body, or the S=1 and S>1 backward graphs diverge in
+            # the last ulp (DESIGN.md §9)
+            x_in = jax.lax.optimization_barrier(x_in)
+            out = stage_fwd(rows, x_in)
+            buf = jax.tree.map(lambda b_, x: b_.at[k % W].set(x), buf, x_in)
+
+            # ---- backward slot: B(k - 2(S-1) + s) on the F input buffered
+            # at tick k - 2(S-1) + 2s (rematerialized forward) ----
+            m_b = k - 2 * (S - 1) + s_idx
+            valid_b = (m_b >= 0) & (m_b < M)
+            k_f = k - 2 * (S - 1) + 2 * s_idx
+            x_b = jax.tree.map(
+                lambda b_: jax.lax.dynamic_index_in_dim(
+                    b_, jnp.mod(k_f, W), 0, keepdims=False), buf)
+            toks_b = sel_mb(m_b)
+            (out_b, l_b), vjp = jax.vjp(
+                lambda r_, s_, x_: fwd_and_loss(r_, s_, x_, toks_b),
+                rows, shared, x_b)
+            # incoming grad-activation (zeros for the last stage, whose
+            # backward is seeded by the loss cotangent instead)
+            ct_out = jax.tree.map(
+                lambda t: jnp.where(valid_b & ~is_last, t,
+                                    jnp.zeros((), t.dtype)), recv_b)
+            ct_l = jnp.where(valid_b & is_last, jnp.ones((), l_b.dtype),
+                             jnp.zeros((), l_b.dtype))
+            d_rows, d_shared, d_x = vjp((ct_out, ct_l))
+            g_rows = masked_add(g_rows, d_rows, valid_b)
+            g_shared = masked_add(g_shared, d_shared, valid_b)
+            # chain the input cotangent into the embedding (stage 0 owns it)
+            ct_emb = jax.tree.map(
+                lambda t: jnp.where(valid_b & is_first, t,
+                                    jnp.zeros((), t.dtype)), d_x["h"])
+            _, vjp_e = jax.vjp(
+                lambda s_: staged.embed_mb(s_, toks_b), shared)
+            (d_emb,) = vjp_e(ct_emb)
+            g_shared = masked_add(g_shared, d_emb, valid_b & is_first)
+            loss_sum = loss_sum + jnp.where(valid_b & is_last, l_b, 0.0)
+
+            # ---- boundary exchange: one hop each way ----
+            if S > 1:
+                recv_f = send_recv(out, pipe_axis, +1)
+                recv_b = send_recv(d_x, pipe_axis, -1)
+
+        # shared cells: stage 0 holds the embed grads, stage S-1 the
+        # loss-tail grads, everyone else exact zeros — one psum combines
+        g_shared = jax.tree.map(lambda g: jax.lax.psum(g, pipe_axis),
+                                g_shared)
+        inv_m = 1.0 / M
+        g_shared = jax.tree.map(lambda g: g * inv_m, g_shared)
+        g_rows = jax.tree.map(lambda g: g * inv_m, g_rows)
+
+        # DP edge: per-row granularity, data axes only (stage-count
+        # invariant compression — DESIGN.md §9)
+        gtree = {"shared": g_shared, "rows": unstack_rows(g_rows, rps)}
+        synced, sync_state_l = engine(gtree, sync_state_l, rng)
+        # barrier: stop XLA fusing optimizer math into the gradient /
+        # collective chain, which would let per-graph fusion choices leak
+        # into the update arithmetic (same idiom as transformer._boundary)
+        synced = jax.lax.optimization_barrier(synced)
+
+        # the optimizer ALSO runs on the per-row-unstacked tree: every
+        # row's update subgraph then has the same shapes at every stage
+        # count, which (with the explicit-wire sync) makes params and
+        # moments bit-exact across stage counts — updating the fused
+        # (R/S, ...) stack instead lets XLA compile the elementwise chain
+        # differently per shape (DESIGN.md §9)
+        p_un = {"shared": shared, "rows": unstack_rows(rows, rps)}
+        updates, opt = optimizer.update(synced, opt, p_un, step)
+        p_un = apply_updates(p_un, updates)
+
+        loss = jax.lax.psum(loss_sum, pipe_axis) * inv_m
+        loss = jax.lax.pmean(loss, axes)
+
+        lead_rows = jax.tree_util.tree_map_with_path(
+            lambda p, s: s[None] if any(getattr(e, "key", None) == "rows"
+                                        for e in p) else s, opt)
+        return ({"shared": p_un["shared"],
+                 "rows": jax.tree.map(lambda s: s[None],
+                                      restack_rows(p_un["rows"]))},
+                lead_rows,
+                jax.tree.map(lambda s: s[None], sync_state_l), loss)
+
+    batch_spec = {"tokens": P(axes, None)}
+    state_spec = P((pipe_axis,) + axes)
+    params_spec = {"shared": P(), "rows": P(pipe_axis)}
+
+    def step_fn(params, opt_state, sync_state, batch, step, rng):
+        opt_spec = pipe_spec_tree(opt_state, pipe_axis)
+        f = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(params_spec, opt_spec, state_spec, batch_spec, P(),
+                      P()),
+            out_specs=(params_spec, opt_spec, state_spec, P()),
+            axis_names={pipe_axis} | set(axes), check_vma=False)
+        return f(params, opt_state, sync_state, batch, step, rng)
+
+    def init_opt_state(split_params):
+        """Optimizer state over the per-row-unstacked stage tree, rows
+        leaves carrying the leading (S,) stage axis (sharded over pipe):
+        ``{"shared": ..., "rows": [row_0, ..., row_{R/S-1}]}`` where row i
+        holds stage-s's i-th layer row at index s."""
+        rows = split_params["rows"]          # (S, R/S, ...)
+        template = {
+            "shared": split_params["shared"],
+            "rows": [jax.tree.map(lambda x, i=i: x[:, i], rows)
+                     for i in range(rps)]}
+        return optimizer.init(template)
+
+    def init_sync_state(split_params):
+        """Per-(pipe, data)-rank reducer state over the UNSTACKED gradient
+        pytree (shared + one entry per layer row)."""
+        rows_local = jax.tree.map(lambda s: s[0], split_params["rows"])
+        template = {"shared": split_params["shared"],
+                    "rows": unstack_rows(rows_local, rps)}
+        return broadcast_worker_state(engine.init_state(template), world)
+
+    return step_fn, init_opt_state, init_sync_state
+
+
+# ---------------------------------------------------------------------------
 # Strategy phase programs (SyncStrategy sessions — DESIGN.md §7)
 # ---------------------------------------------------------------------------
 

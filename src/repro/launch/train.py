@@ -77,6 +77,20 @@ def parse_args(argv=None):
                     help="per-worker optimizer-state budget for --sync auto"
                          ": arms that do not fit are dropped, which is how "
                          "the shard axis wins (it never wins on wall clock)")
+    ap.add_argument("--pipeline-stages", type=int, default=1, metavar="S",
+                    help="pipeline parallelism (DESIGN.md §9): cut the "
+                         "model into S stages on a pipe x data mesh and "
+                         "run 1F1B micro-batching; the gradient sync "
+                         "(--compressor/--algo, or the planner's pick "
+                         "under --sync auto) runs on the DP dimension "
+                         "only, per layer row")
+    ap.add_argument("--micro-batches", type=int, default=0, metavar="M",
+                    help="micro-batches per step (default: 8 in pipeline "
+                         "mode, 1 otherwise; bubble fraction "
+                         "(S-1)/(S-1+M); the global batch must split into "
+                         "DP shards x M).  M>1 with --pipeline-stages 1 "
+                         "runs micro-batched gradient accumulation "
+                         "through the same executor")
     ap.add_argument("--local-sgd", type=int, default=0, metavar="TAU")
     ap.add_argument("--post-local", type=int, default=0)
     ap.add_argument("--lag", type=float, default=0.0, metavar="THRESH")
@@ -120,6 +134,19 @@ def main(argv=None):
         raise SystemExit("--shard-state partitions optimizer state, which "
                          "requires every-step gradient sync; drop "
                          "--local-sgd/--lag/--push-pull")
+    pipe = args.pipeline_stages
+    if pipe < 1:
+        raise SystemExit(f"--pipeline-stages must be >= 1, got {pipe}")
+    micro = args.micro_batches or (8 if pipe > 1 else 1)
+    pipe_mode = pipe > 1 or micro > 1
+    if pipe_mode and scheduler is not None:
+        raise SystemExit("--pipeline-stages/--micro-batches require "
+                         "every-step gradient sync; drop "
+                         "--local-sgd/--lag/--push-pull")
+    if pipe_mode and args.shard_state:
+        raise SystemExit("--pipeline-stages and --shard-state are "
+                         "competing answers to the optimizer-memory axis; "
+                         "pick one (DESIGN.md §9)")
     session = TrainSession(scfg)
 
     if args.sync == "auto":
@@ -141,7 +168,12 @@ def main(argv=None):
             t_backward_s=(args.plan_backward_ms / 1e3
                           if args.plan_backward_ms > 0 else None),
             shard_state=(True if args.shard_state else None),
-            memory_budget_gb=args.memory_budget_gb)
+            memory_budget_gb=args.memory_budget_gb,
+            pipeline_stages=(pipe if pipe > 1 else None),
+            micro_batches=(micro if pipe > 1 else None))
+        if pipe <= 1 and micro > 1:
+            # S=1 accumulation rides the winning arm when it composes
+            session.apply_micro_batching(micro)
         print(render_strategy_plan(
             sp, arms=session.planned["arms"],
             baselines=session.planned["baselines"],
@@ -151,7 +183,7 @@ def main(argv=None):
         best_fixed = min(p.modeled_step_s
                          for p in session.planned["baselines"].values())
         unconstrained = (scheduler is None and not args.shard_state
-                         and args.memory_budget_gb is None)
+                         and args.memory_budget_gb is None and pipe <= 1)
         if unconstrained and sp.modeled_step_s > best_fixed + 1e-12:
             # a memory budget / pinned shard axis may legitimately force an
             # arm that is modeled slower than the replicated baselines —
@@ -168,7 +200,14 @@ def main(argv=None):
         session.strategy = make_strategy(
             scheduler if scheduler is not None else "every_step",
             axes=session.axes, sync=sync_cfg,
-            shard_state=args.shard_state)
+            shard_state=args.shard_state,
+            pipeline_stages=pipe, micro_batches=micro)
+    elif pipe_mode:
+        # vanilla + --pipeline-stages/--micro-batches: dense psum wires on
+        # the DP edge
+        session.strategy = make_strategy(
+            "every_step", axes=session.axes,
+            pipeline_stages=pipe, micro_batches=micro)
     elif args.shard_state:
         # vanilla + --shard-state: dense psum wires, partitioned state
         session.strategy = make_strategy("every_step", axes=session.axes,
@@ -186,6 +225,12 @@ def main(argv=None):
         print(render_sharded_memory(session.layout, args.optimizer,
                                     moments=session.opt_moments),
               flush=True)
+    if getattr(session, "staged", None) is not None:
+        from repro.launch.report import render_pipeline_stages
+        print(render_pipeline_stages(
+            session.staged, session._params,
+            session.strategy.micro_batches, moments=session.opt_moments),
+            flush=True)
 
     if args.checkpoint:
         session.save_checkpoint(args.checkpoint)

@@ -198,6 +198,130 @@ def check_param_round_strategy():
 
 
 from tiny_lm import TinyLM as _TinyLM, tiny_batch as _tiny_batch  # noqa: E402
+from tiny_lm import TinyStackLM as _TinyStackLM  # noqa: E402
+
+
+def check_pipeline_bit_exact():
+    """ISSUE 4's tentpole acceptance criterion: the pipeline(S=2, M=4)
+    1F1B train step on the 8-device pipe(2) x data(4) mesh must match the
+    single-stage DP step (pipe(1) x data(4), same global batch, same M
+    micro-batches) BIT-EXACTLY — params and optimizer state over 3 steps,
+    adam + sgd — including under int8/top-k DP-edge compression (the
+    per-row sync granularity makes the compressed wire stage-count
+    invariant; matching params+moments over 3 steps implies the EF
+    residual trajectories agree, since residuals feed every later step).
+
+    What makes this exact (DESIGN.md §9): row-boundary optimization
+    barriers keep XLA fusion from crossing potential cut points (so a
+    row's forward/backward compiles identically at every stage count), and
+    the optimizer updates the per-row-unstacked tree (same leaf shapes at
+    every S).  Should the XLA-owned psum wire ever reorder its reduction
+    between the two programs, the documented fallback is the §8 ulp
+    tolerance — flip ``exact`` for that row.
+    """
+    from repro.core import GradientSynchronizer, SyncConfig
+    from repro.launch.mesh import make_pipe_mesh
+    from repro.launch.steps import make_pipeline_train_step
+    from repro.optim import make_optimizer
+
+    M = 4
+
+    def run(S, opt_name, comp, algo):
+        model = _TinyStackLM(blocks=2, n_stages=S)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh = make_pipe_mesh(S, 4)
+        opt = make_optimizer(opt_name, lr=0.05)
+        engine = GradientSynchronizer(
+            SyncConfig(compressor=comp, algo=algo, bucket_bytes=0),
+            ("data",))
+        step_fn, init_opt, init_ss = make_pipeline_train_step(
+            model, opt, engine, mesh, M)
+        shared, rows = model.split(params)
+        p = {"shared": shared, "rows": rows}
+        o, ss = init_opt(p), init_ss(p)
+        jit = jax.jit(step_fn)
+        rng = jax.random.PRNGKey(1)
+        for s in range(3):
+            p, o, ss, loss = jit(p, o, ss, _tiny_batch(s, batch=16, seq=12),
+                                 jnp.asarray(s, jnp.int32),
+                                 jax.random.fold_in(rng, s))
+        from repro.launch.steps import merge_opt_rows
+        merged = model.merge(p["shared"], p["rows"])
+        return merged, merge_opt_rows(o, model.layout.rows), float(loss)
+
+    for opt_name, comp, algo, exact in (
+            ("adam", "none", "psum", True),
+            ("adam", "none", "ring", True),
+            ("adam", "int8", "ring", True),
+            ("adam", "topk", "ring", True),
+            ("sgd", "none", "ring", True),
+            ("sgd", "none", "psum", True)):
+        p1, o1, l1 = run(1, opt_name, comp, algo)
+        p2, o2, l2 = run(2, opt_name, comp, algo)
+        for (path, a), (_, b) in list(zip(
+                jax.tree_util.tree_leaves_with_path(p1),
+                jax.tree_util.tree_leaves_with_path(p2))) + list(zip(
+                jax.tree_util.tree_leaves_with_path(o1),
+                jax.tree_util.tree_leaves_with_path(o2))):
+            a, b = np.asarray(a), np.asarray(b)
+            what = (opt_name, comp, algo, jax.tree_util.keystr(path))
+            if exact:
+                assert np.array_equal(a, b), \
+                    (what, np.abs(a - b).max())
+            else:
+                np.testing.assert_allclose(a, b, rtol=3e-5, atol=1e-7,
+                                           err_msg=str(what))
+        assert abs(l1 - l2) < 1e-5, (opt_name, comp, algo, l1, l2)
+    print("pipeline S=2 bit-exact vs single-stage DP ok (adam/sgd x "
+          "psum/ring/int8/topk, params + opt state, 3 steps)")
+
+
+def check_pipeline_matches_classic_dp_step():
+    """Anchor for the S=1 reference itself: the degenerate pipeline step
+    (S=1, M=1, dense psum) against the classic replicated DP step
+    (_make_synced_train_step) — same loss and ulp-tight params (the two
+    programs differ only in vjp composition and XLA contraction)."""
+    from repro.core import PlanExecutor, SyncConfig, plan_from_config
+    from repro.core import GradientSynchronizer
+    from repro.launch.mesh import make_pipe_mesh
+    from repro.launch.steps import (_make_synced_train_step,
+                                    make_pipeline_train_step)
+    from repro.optim import make_optimizer
+
+    model = _TinyStackLM(blocks=2, n_stages=1)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adam", lr=0.05)
+    batch = _tiny_batch(0, batch=16, seq=12)
+    step_i = jnp.zeros((), jnp.int32)
+    rng = jax.random.PRNGKey(1)
+
+    mesh_c = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+    exec_c = PlanExecutor(plan_from_config(SyncConfig(), params), ("data",))
+    cstep, _, init_cs = _make_synced_train_step(model, opt, exec_c, mesh_c,
+                                                ("data",))
+    pc, oc, sc = params, opt.init(params), init_cs(params)
+    pc, oc, _, lc = jax.jit(cstep)(pc, oc, sc, batch, step_i, rng)
+
+    mesh_p = make_pipe_mesh(1, 4)
+    engine = GradientSynchronizer(SyncConfig(bucket_bytes=0), ("data",))
+    pstep, init_po, init_ps = make_pipeline_train_step(model, opt, engine,
+                                                       mesh_p, 1)
+    shared, rows = model.split(params)
+    pp = {"shared": shared, "rows": rows}
+    op, sp = init_po(pp), init_ps(pp)
+    pp, op, _, lp = jax.jit(pstep)(pp, op, sp, batch, step_i, rng)
+    merged = model.merge(pp["shared"], pp["rows"])
+
+    assert abs(float(lc) - float(lp)) < 1e-6, (float(lc), float(lp))
+    for k in ("emb", "out", "b"):
+        np.testing.assert_allclose(np.asarray(merged[k]),
+                                   np.asarray(pc[k]),
+                                   rtol=3e-5, atol=1e-7, err_msg=k)
+    for k in ("w1", "b1", "w2"):
+        np.testing.assert_allclose(np.asarray(merged["blocks"][k]),
+                                   np.asarray(pc["blocks"][k]),
+                                   rtol=3e-5, atol=1e-7, err_msg=k)
+    print("pipeline S=1/M=1 matches the classic DP step ok (ulp-tight)")
 
 
 def check_sharded_dp_bit_exact():
@@ -404,6 +528,8 @@ if __name__ == "__main__":
     check_local_sgd()
     check_param_round_strategy()
     check_sharded_dp_bit_exact()
+    check_pipeline_bit_exact()
+    check_pipeline_matches_classic_dp_step()
     check_sharded_checkpoint_reshard()
     check_reduce_scatter_all_gather_roundtrip()
     check_sharded_segment_ids_multi_axis()
