@@ -1,0 +1,116 @@
+"""Tiered-topology planner table (ISSUE 5 tentpole acceptance).
+
+Emits ``topology/modeled/...`` rows and ASSERTS the two halves of the
+acceptance criterion:
+
+  * on the two-tier acceptance network (``node:4@datacenter`` over
+    ``device:8@fast_ici``), ``plan_rounds`` selects a TIER-AWARE arm —
+    hierarchical/2D buckets, or a pipeline arm with an explicit pipe-axis
+    tier placement — that is modeled STRICTLY faster than the best
+    flat-ring arm (the best plan restricted to ring/psum collectives,
+    i.e. the best any non-tier-aware traversal can do: a flat ring is
+    gated by the slow inter-node fabric every step, Zhang et al. 2020);
+
+  * on a HOMOGENEOUS network the tiered model changes nothing: the
+    fixed ring plan priced on a two-tier topology whose tiers share one
+    link is BIT-IDENTICAL to the same plan on ``Topology.flat`` (the
+    bottleneck tier is the link), and the free search lands within 2%
+    (hierarchical's default k differs: sqrt(p) flat vs the tier size).
+
+The rounds axis is pinned to every-step (``tau_grid=(1,)``) so the
+comparison isolates the NETWORK axis — local-SGD amortization would win
+some corners for reasons orthogonal to tiering.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
+                                 fixed_config_plan, plan, plan_rounds,
+                                 profiles_from_grads)
+from repro.core.schedule.planner import FLAT_RING_CANDIDATES
+
+ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
+TIERED_SPEC = "node:4@datacenter,device:8@fast_ici"   # acceptance network
+HOMO_SPEC = "node:4@fast_ici,device:8@fast_ici"
+PEAK_FLOPS = 197e12
+TOKENS = 4096           # per-chip tokens per step for the modeled backward
+
+
+
+def _tier_aware(arm) -> bool:
+    if arm.pipeline_stages > 1:
+        return bool(arm.pipe_tier)
+    return any(b.algo in ("hierarchical", "mesh2d", "mesh2d_split")
+               for b in arm.comm.buckets)
+
+
+def _profiles(arch):
+    from repro.models import Model
+    cfg = get_config(arch)
+    params = Model(cfg).abstract_params()
+    # np.prod (int64), NOT jnp.prod: chameleon-34b's 34e9 params overflow
+    # int32 and a negative t_backward silently flips every plan
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    t_backward = 4.0 * n * TOKENS / PEAK_FLOPS
+    return cfg, profiles_from_grads(params, t_backward)
+
+
+def run():
+    tiered = Topology.from_spec(TIERED_SPEC)
+    homo = Topology.from_spec(HOMO_SPEC)
+    flat = Topology.flat(homo.world, LINK_PRESETS["fast_ici"])
+    world = tiered.world
+
+    for arch in ARCHS:
+        cfg, profiles = _profiles(arch)
+        pa = PipelineAxis(global_tokens=float(TOKENS * world),
+                          bytes_per_token=float(cfg.d_model * 4))
+
+        # the best any flat (non-tier-aware) traversal can do on the
+        # tiered network: full search, collectives restricted to ring/psum
+        flat_ring = plan(profiles, tiered, world,
+                         candidates=FLAT_RING_CANDIDATES)
+        emit(f"topology/modeled/{arch}/two_tier/best_flat_ring",
+             flat_ring.modeled_step_s * 1e6, "ring/psum-restricted")
+
+        best, arms = plan_rounds(profiles, tiered, world, tau_grid=(1,),
+                                 pipeline=pa)
+        es = arms["every_step"]
+        emit(f"topology/modeled/{arch}/two_tier/every_step",
+             es.modeled_step_s * 1e6,
+             "algos=" + "+".join(sorted({b.algo for b in es.comm.buckets})))
+        emit(f"topology/modeled/{arch}/two_tier/auto",
+             best.modeled_step_s * 1e6,
+             f"arm={best.key} "
+             f"speedup_vs_flat_ring="
+             f"{flat_ring.modeled_step_s / best.modeled_step_s:.2f}x")
+
+        assert best.modeled_step_s < flat_ring.modeled_step_s, (
+            arch, best.key, best.modeled_step_s, flat_ring.modeled_step_s)
+        assert _tier_aware(best), (arch, best.key)
+        # the every-step arm alone must already be tier-aware here: the
+        # per-bucket search discovers hierarchical once the inner ring is
+        # priced on the fast tier
+        assert _tier_aware(es), (arch, {b.algo for b in es.comm.buckets})
+
+        # homogeneous two-tier network == flat network
+        for comp, algo, cargs in (("none", "ring", ()), ("none", "psum", ()),
+                                  ("int8", "ring", ())):
+            fh = fixed_config_plan(profiles, homo, homo.world, comp, algo,
+                                   compressor_args=cargs)
+            ff = fixed_config_plan(profiles, flat, flat.world, comp, algo,
+                                   compressor_args=cargs)
+            assert fh.modeled_step_s == ff.modeled_step_s, (
+                arch, comp, algo, fh.modeled_step_s, ff.modeled_step_s)
+        ah = plan(profiles, homo, homo.world)
+        af = plan(profiles, flat, flat.world)
+        rel = abs(ah.modeled_step_s - af.modeled_step_s) \
+            / max(af.modeled_step_s, 1e-12)
+        assert rel < 0.02, (arch, ah.modeled_step_s, af.modeled_step_s)
+        emit(f"topology/modeled/{arch}/homogeneous/auto_vs_flat",
+             ah.modeled_step_s * 1e6,
+             f"flat={af.modeled_step_s * 1e6:.1f}us rel_diff={rel:.4f}")

@@ -12,7 +12,7 @@ import traceback
 from benchmarks import (bench_collectives, bench_compression,
                         bench_large_batch, bench_overlap, bench_periodic,
                         bench_pipeline, bench_planner, bench_protocols,
-                        bench_sharded)
+                        bench_sharded, bench_topology)
 
 SUITES = {
     "table1": bench_large_batch,
@@ -24,6 +24,7 @@ SUITES = {
     "planner": bench_planner,
     "sharded": bench_sharded,
     "pipeline": bench_pipeline,
+    "topology": bench_topology,
 }
 
 

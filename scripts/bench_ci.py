@@ -23,7 +23,9 @@ Record schema (per suite file)::
 Tracked points are the acceptance quantities of each execution mode: the
 auto plan and the fixed baselines it must beat (planner), the
 replicated/sharded fixed modes and the budget flip (sharded), the fixed DP
-arms vs the best pipeline arm and the budget pick (pipeline).
+arms vs the best pipeline arm and the budget pick (pipeline), and — on the
+tiered networks (ISSUE 5) — the flat-ring bound vs the hierarchical fixed
+plan vs the tier-aware auto pick per topology (topology).
 """
 from __future__ import annotations
 
@@ -37,6 +39,8 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 
 ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
 REGIMES = ("fast_ici", "commodity")
+# tiered networks tracked by the topology suite (TOPOLOGY_PRESETS names)
+TOPOLOGIES = ("two_tier_pod", "commodity_cluster")
 PEAK_FLOPS = 197e12
 TOKENS = 4096
 WORLD = 256
@@ -62,16 +66,18 @@ def _profiles():
 
 def collect() -> dict:
     """All tracked records, keyed by suite name."""
-    from repro.core.schedule import (LINK_PRESETS, PipelineAxis,
+    from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
                                      fixed_config_plan,
                                      opt_state_bytes_per_worker, plan,
                                      plan_rounds)
-    from repro.core.schedule.planner import FIXED_BASELINES
+    from repro.core.schedule.planner import (FIXED_BASELINES,
+                                             FLAT_RING_CANDIDATES)
 
     profs = _profiles()
     planner: dict = {}
     sharded: dict = {}
     pipeline: dict = {}
+    topology: dict = {}
     for arch, (cfg, profiles) in profs.items():
         pb = float(sum(p.grad_bytes for p in profiles))
         pa = PipelineAxis(global_tokens=float(TOKENS * WORLD),
@@ -127,7 +133,37 @@ def collect() -> dict:
             pipeline[f"{key}/auto_budget"] = {
                 "modeled_step_ms": ptight.modeled_step_s * 1e3,
                 "arm": ptight.key}
-    return {"planner": planner, "sharded": sharded, "pipeline": pipeline}
+
+        # -- topology: tiered networks — flat-ring bound, hierarchical
+        # fixed plan, and the tier-aware auto pick (rounds axis pinned to
+        # every-step so the tracked numbers isolate the network axis)
+        for preset in TOPOLOGIES:
+            topo = Topology.from_spec(preset)
+            tw = topo.world
+            tkey = f"{arch}/{preset}"
+            tpa = PipelineAxis(global_tokens=float(TOKENS * tw),
+                               bytes_per_token=float(cfg.d_model * 4))
+            ring_bound = plan(profiles, topo, tw,
+                              candidates=FLAT_RING_CANDIDATES)
+            topology[f"{tkey}/best_flat_ring"] = {
+                "modeled_step_ms": ring_bound.modeled_step_s * 1e3,
+                "arm": "ring/psum-restricted"}
+            fh = fixed_config_plan(profiles, topo, tw, "none",
+                                   "hierarchical")
+            topology[f"{tkey}/fixed_hierarchical"] = {
+                "modeled_step_ms": fh.modeled_step_s * 1e3,
+                "arm": "hierarchical/dense"}
+            tbest, tarms = plan_rounds(profiles, topo, tw, opt_name=OPT,
+                                       tau_grid=(1,), pipeline=tpa)
+            topology[f"{tkey}/every_step"] = {
+                "modeled_step_ms": tarms["every_step"].modeled_step_s * 1e3,
+                "arm": "+".join(sorted({
+                    b.algo for b in tarms["every_step"].comm.buckets}))}
+            topology[f"{tkey}/auto"] = {
+                "modeled_step_ms": tbest.modeled_step_s * 1e3,
+                "arm": tbest.key}
+    return {"planner": planner, "sharded": sharded, "pipeline": pipeline,
+            "topology": topology}
 
 
 def gate(records: dict, baseline_dir: str, tolerance: float) -> list:

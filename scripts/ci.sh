@@ -47,6 +47,16 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 3 --batch 2 --seq 32 --shard-state --log-every 1
 
+  step "smoke: 3-step two-tier --topology --sync auto train"
+  # the tiered network model (DESIGN.md §10): the planner prices every
+  # phase per tier and must pick a tier-aware arm (hierarchical buckets
+  # or a placed pipeline); on a 1-device host the topology is a planning
+  # model and the winner executes on the flat mesh
+  python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 3 --batch 2 --seq 32 --sync auto \
+      --topology node:4@datacenter,device:8@fast_ici \
+      --plan-backward-ms 20 --log-every 1
+
   if (( DEVICES % 2 == 0 && DEVICES >= 2 )); then
     step "smoke: 3-step pipeline train (S=2, M=2, reduced gemma-2b)"
     python -m repro.launch.train --arch gemma-2b --reduced \

@@ -47,15 +47,17 @@ from repro.core import (GradientSynchronizer, PlanExecutor, ShardLayout,
                         SyncConfig, SyncStrategy, get_scheduler)
 from repro.core.grad_sync import sharded_plan_from_config
 from repro.core.pipeline import StagedModel
+from repro.core.collectives import axes_for_topology
 from repro.core.schedule import (LINK_PRESETS, LinkParams, PipelineAxis,
-                                 RoundSchedule, StrategyPlan,
-                                 fixed_config_plan, pipeline_arm, plan,
-                                 plan_rounds, profiles_from_grads,
-                                 serial_round_plan)
+                                 RoundSchedule, StrategyPlan, Topology,
+                                 fixed_config_plan, pipeline_arm,
+                                 pipeline_placements, plan, plan_rounds,
+                                 profiles_from_grads, serial_round_plan)
 from repro.core.schedule.planner import FIXED_BASELINES, local_sgd_arm
 from repro.core.strategy import LocalSGDScheduler
 from repro.data import DataConfig, SyntheticPipeline
-from repro.launch.mesh import data_axes, make_host_mesh, make_pipe_mesh
+from repro.launch.mesh import (data_axes, make_host_mesh, make_pipe_mesh,
+                               make_topology_mesh)
 from repro.launch.steps import (_make_synced_train_step, _world_of,
                                 broadcast_worker_state, make_lag_programs,
                                 make_local_train_step, make_param_round_step,
@@ -162,6 +164,8 @@ class TrainSession:
         self.planned: Optional[Dict[str, Any]] = None
         self.layout: Optional[ShardLayout] = None   # set by sharded builds
         self.staged: Optional[StagedModel] = None   # set by pipeline builds
+        self.topology: Optional[Topology] = None    # set by apply_topology
+        self.tiered_mesh = False     # True when the mesh IS one-axis-per-tier
         self._built = False
 
     # -- state views ---------------------------------------------------------
@@ -206,6 +210,35 @@ class TrainSession:
             else 1.0 / (beta_gbps * 1e9)
         return LinkParams(alpha_s=a, beta_s_per_byte=b)
 
+    def apply_topology(self, topology) -> Topology:
+        """Install a tiered network model (``--topology``, DESIGN.md §10).
+
+        ``topology`` is a :class:`Topology`, a spec string
+        (``"node:4@datacenter,device:8@fast_ici"``), or a
+        ``TOPOLOGY_PRESETS`` name.  The planner then prices every arm on
+        it (its world REPLACES ``plan_world``).  When the topology's
+        world matches this host's devices (pure DP — no model axis), the
+        session mesh is rebuilt with one axis per tier so collectives
+        actually dispatch axis→tier — hierarchical's inner ring runs on
+        the fast-tier axis (``collectives.axes_for_topology``); otherwise
+        the topology stays a planning model (a pod modeled from a
+        laptop) and execution keeps the flat host mesh."""
+        if self._built:
+            raise RuntimeError("apply_topology must run before the first "
+                               "step")
+        topo = Topology.from_spec(topology) if isinstance(topology, str) \
+            else topology
+        self.topology = topo
+        n_dev = len(jax.devices())
+        self.tiered_mesh = (topo.n_tiers > 1 and topo.world == n_dev
+                            and self.cfg.data_parallel in (0, n_dev))
+        if self.tiered_mesh:
+            self.mesh = make_topology_mesh(topo)
+            set_mesh_ctx(self.mesh, tuple(t.name for t in topo.tiers))
+            self.axes = axes_for_topology(topo)
+            self.world = topo.world
+        return topo
+
     def profile_backward(self) -> float:
         """Wall time of the PER-DEVICE backward (compile excluded): the
         planned shard_map step computes global_batch / world per device, so
@@ -245,7 +278,8 @@ class TrainSession:
                   shard_state: Optional[bool] = None,
                   memory_budget_gb: Optional[float] = None,
                   pipeline_stages: Optional[int] = None,
-                  micro_batches: Optional[int] = None) -> StrategyPlan:
+                  micro_batches: Optional[int] = None,
+                  topology=None) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
         per-bucket strategy × shard axis × parallelism axis), install the
         winning composite as this session's strategy.  ``scheduler`` pins
@@ -256,10 +290,16 @@ class TrainSession:
         — the gather tail never wins on wall clock alone).
         ``pipeline_stages``/``micro_batches`` pin the parallelism axis to
         pipeline(S, M); left None the free search prices pipeline arms too
-        (DESIGN.md §9).  Stashes the full decision record in
-        ``self.planned`` for reporting."""
+        (DESIGN.md §9).  ``topology`` (or a prior :meth:`apply_topology`)
+        replaces the flat link model with a tiered network — every arm is
+        then priced per tier, the pipeline arms search axis placements,
+        and the topology's world supersedes the deprecated ``plan_world``
+        (a disagreement warns and prefers the topology).  Stashes the
+        full decision record in ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
+        if topology is not None:
+            self.apply_topology(topology)
         if scheduler is not None and shard_state:
             raise ValueError("shard_state composes only with the planner's "
                              "every-step arm, not a pinned rounds scheduler")
@@ -272,8 +312,17 @@ class TrainSession:
             if scheduler is not None or shard_state:
                 raise ValueError("pipeline_stages composes with every-step "
                                  "replicated DP only (DESIGN.md §9)")
-        lp = self.resolve_link(link, alpha, beta_gbps)
-        world = plan_world or self.world
+        if self.topology is not None:
+            lp = self.topology
+            world = lp.world
+            if plan_world and plan_world != world:
+                print(f"warning: --plan-world {plan_world} disagrees with "
+                      f"the topology ({lp.spec()} = world {world}); "
+                      f"planning for the topology — --plan-world is "
+                      f"deprecated, the tier-size product wins", flush=True)
+        else:
+            lp = self.resolve_link(link, alpha, beta_gbps)
+            world = plan_world or self.world
         if t_backward_s is None:
             t_backward_s = self.profile_backward()
         profiles = profiles_from_grads(self._params, t_backward_s)
@@ -296,8 +345,18 @@ class TrainSession:
             plan_w = world if (world % S == 0 and world // S >= 2) else 2 * S
             act = (pipe_axis.global_tokens / (plan_w // S) / M
                    * pipe_axis.bytes_per_token)
+            net_p = lp
+            if isinstance(lp, Topology) and (
+                    plan_w != lp.world
+                    or not pipeline_placements(lp, plan_w, S)):
+                # the pinned S fits no tier (or the fallback world left
+                # the topology behind): price flat on the outermost link
+                print(f"note: pinned pipeline(S={S}) fits no tier of "
+                      f"{lp.spec()}; pricing it flat on the outermost "
+                      f"link", flush=True)
+                net_p = lp.outermost.link
             best = pipeline_arm(
-                profiles, lp, plan_w, S, M, act,
+                profiles, net_p, plan_w, S, M, act,
                 opt_name=self.cfg.optimizer,
                 opt_moments=self.opt_moments, **kw)
             arms = {best.key: best}

@@ -1,7 +1,7 @@
 from repro.core.collectives.api import (  # noqa: F401
     ALGOS, LinkParams, all_gather_shards, allreduce, allreduce_cost_s,
-    local_chunk, my_chunk_index, nested_shard_len, pad_to_chunks,
-    reduce_scatter, send_recv)
+    axes_for_topology, local_chunk, my_chunk_index, nested_shard_len,
+    pad_to_chunks, reduce_scatter, send_recv)
 from repro.core.collectives.ring import (  # noqa: F401
     ring_all_gather_canonical, ring_allreduce, ring_reduce_scatter,
     ring_all_gather_chunks, ring_reduce_scatter_canonical)

@@ -26,8 +26,25 @@ from repro.core.schedule.cost import (  # noqa: F401  (compat re-export)
 ALGOS = ("psum", "ring", "tree", "hierarchical", "mesh2d", "mesh2d_split")
 
 
+def axes_for_topology(topo) -> tuple:
+    """THE axis→tier mapping of topology-dispatched collectives
+    (DESIGN.md §10): shard_map axis names are the tier names, listed
+    INNERMOST FIRST.  :func:`allreduce`'s two-axis algorithms take
+    ``(inner, outer)`` — hierarchical runs its ring reduce-scatter /
+    all-gather on ``axes[0]`` and the shard ring on ``axes[1]`` — so
+    with this ordering the bandwidth-heavy inner phases run on the fast
+    intra-node tier exactly as ``schedule.cost`` prices them.  Build the
+    matching mesh with ``launch.mesh.make_topology_mesh`` (one axis per
+    tier, outermost first, named by tier names)."""
+    return tuple(t.name for t in reversed(topo.tiers))
+
+
 def allreduce(x, algo: str, axes: Sequence[str]):
-    """Allreduce ``x`` over one or two *manual* shard_map axes."""
+    """Allreduce ``x`` over one or two *manual* shard_map axes.
+
+    For a tiered network the axes come from :func:`axes_for_topology`
+    (innermost tier first); on a flat mesh they are the data axes as
+    before."""
     axes = tuple(axes)
     if algo == "psum":
         return jax.lax.psum(x, axes)
@@ -44,10 +61,19 @@ def allreduce(x, algo: str, axes: Sequence[str]):
     if algo == "hierarchical":
         if len(axes) == 1:
             return ring_allreduce(x, axes[0])
-        return hierarchical_allreduce(x, inner_axis=axes[0], outer_axis=axes[1])
+        # 3+ axes (a 3+-tier topology): the scattered shard rings over
+        # every outer axis, so the reduction covers the full world
+        return hierarchical_allreduce(x, inner_axis=axes[0],
+                                      outer_axis=axes[1:])
     if algo in ("mesh2d", "mesh2d_split"):
         if len(axes) == 1:
             return ring_allreduce(x, axes[0])
+        if len(axes) > 2:
+            # silently reducing over two of N axes would leave worker
+            # groups diverged — mesh2d is 2-D by construction (the
+            # planner filters it on such topologies: _algo_usable)
+            raise ValueError(f"mesh2d is a two-axis collective, got "
+                             f"axes {tuple(axes)}")
         return mesh2d_allreduce(x, axes[0], axes[1], split=algo == "mesh2d_split")
     raise ValueError(f"unknown collective algo {algo!r}; known: {ALGOS}")
 

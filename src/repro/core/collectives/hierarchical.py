@@ -17,13 +17,22 @@ from repro.core.collectives.ring import (ring_all_gather_chunks,
                                          ring_allreduce, ring_reduce_scatter)
 
 
-def hierarchical_allreduce(x, inner_axis: str, outer_axis: str):
+def hierarchical_allreduce(x, inner_axis: str, outer_axis):
     """Ring RS over ``inner_axis``; ring allreduce of the shard over
-    ``outer_axis``; ring AG over ``inner_axis``."""
+    ``outer_axis`` — a single axis name or a sequence of them (a 3+-tier
+    topology: the scattered shard rings over each outer axis in turn,
+    innermost outer tier first, which sums over all of them); ring AG
+    over ``inner_axis``."""
+    outer_axes = (outer_axis,) if isinstance(outer_axis, str) else \
+        tuple(outer_axis)
     p_in = jax.lax.axis_size(inner_axis)
     if p_in == 1:
-        return ring_allreduce(x, outer_axis)
+        out = x
+        for ax in outer_axes:
+            out = ring_allreduce(out, ax)
+        return out
     mine, my_idx, n = ring_reduce_scatter(x, inner_axis)
-    mine = ring_allreduce(mine, outer_axis)
+    for ax in outer_axes:
+        mine = ring_allreduce(mine, ax)
     gathered = ring_all_gather_chunks(mine, my_idx, p_in, inner_axis)
     return gathered.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)

@@ -24,7 +24,13 @@ def _shift_perm(p, d):
 def tree_reduce_to_root(x, axis: str):
     """After log2(p) rounds rank 0 holds the sum; other ranks hold garbage."""
     p = jax.lax.axis_size(axis)
-    assert p & (p - 1) == 0, "tree collective requires power-of-two axis"
+    if p & (p - 1) != 0:
+        # a real error, not an assert: `python -O` strips asserts and the
+        # doubling loop would then silently drop ranks' contributions.
+        # The planner self-filters tree candidates on such worlds
+        # (schedule.planner._algo_usable) so auto plans never hit this.
+        raise ValueError(f"tree collective requires a power-of-two axis "
+                         f"size, got {axis!r} of {p}")
     r = jax.lax.axis_index(axis)
     acc = x
     d = 1

@@ -6,6 +6,27 @@ it, and the communication planner (``schedule/planner.py``) uses it as the
 objective when choosing a per-bucket sync strategy.  It used to live inside
 ``collectives/api.py``; the dispatch module re-exports it for compatibility.
 
+Every cost function takes a *network* argument ``net`` that is either a
+bare :class:`LinkParams` (one flat link — the historical model) or a
+:class:`~repro.core.schedule.topology.Topology` (ordered tiers, outermost
+first).  Each algorithm phase is priced on the tier it actually traverses
+(DESIGN.md §10):
+
+  * ring / psum / gather — lockstep flat traversals: every synchronous
+    step is gated by the slowest link the embedded ring crosses, i.e. the
+    topology's bottleneck tier (Zhang et al. 2020);
+  * tree — log2(size) doubling rounds per tier, full payload each;
+  * hierarchical — inner ring on the innermost (fast) tier, the shard
+    ring on the outermost (slow) tier (Jia et al. 2018);
+  * mesh2d — one ring phase per perpendicular axis: the first on the
+    inner tier, the second on the outer (Ying et al. 2018);
+  * p2p — the tier the pipe axis lands on (outermost by default).
+
+On ``Topology.flat`` (or a bare ``LinkParams``) every formula reduces to
+the pre-topology expression BIT-FOR-BIT — ``tests/test_topology.py`` pins
+this, and it is what keeps the committed ``benchmarks/baselines/*.json``
+green.
+
 Message libraries and protocols (§4.2/§4.3) appear only through their α
 (per-message latency) and β (inverse bandwidth) parameters — on TPU the
 "protocol" layer is ICI and lives below XLA (DESIGN.md §5).
@@ -18,9 +39,11 @@ pattern.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
+
+from repro.core.schedule.topology import Tier, Topology, as_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,40 +61,83 @@ LINK_PRESETS: Dict[str, LinkParams] = {
     "commodity": LinkParams(alpha_s=50e-6, beta_s_per_byte=1 / 1.25e9),
 }
 
+Net = Union[LinkParams, Topology]
 
-def allreduce_cost_s(algo: str, n_bytes: float, p: int, link: LinkParams,
-                     k: Optional[int] = None) -> float:
-    """Predicted wall time of one allreduce of n_bytes over p ranks.
 
-    ring:          2(p-1) steps of n/p bytes
-    tree (PS):     2 log2(p) steps of n bytes
-    hierarchical:  intra ring over k + inter ring over p/k on n/k shards
-                   (Jia et al.: 4(k-1) + 2(p/k - 1) steps)
-    mesh2d:        two perpendicular ring phases on sqrt(p) ranks
-    """
-    a, b = link.alpha_s, link.beta_s_per_byte
+def allreduce_phases(algo: str, n_bytes: float, p: int, net: Net,
+                     k: Optional[int] = None) -> List[Tuple[str, float]]:
+    """Per-phase costs of one allreduce: ``[(tier_name, seconds), ...]``,
+    each phase on the tier it traverses.  The totals below are the
+    left-fold sum of these phases, so breakdown and total always agree."""
     if p <= 1:
-        return 0.0
+        return []
+    topo = as_topology(net, p)
     if algo == "ring" or algo == "psum":
-        return 2 * (p - 1) * (a + (n_bytes / p) * b)
+        t = topo.bottleneck(n_bytes / p)
+        a, b = t.link.alpha_s, t.link.beta_s_per_byte
+        return [(t.name, 2 * (p - 1) * (a + (n_bytes / p) * b))]
     if algo == "tree":
-        return 2 * np.log2(p) * (a + n_bytes * b)
+        return [(t.name, 2 * np.log2(t.size)
+                 * (t.link.alpha_s + n_bytes * t.link.beta_s_per_byte))
+                for t in topo.tiers if t.size > 1]
     if algo == "hierarchical":
-        k = k or int(np.sqrt(p))
-        inner = 2 * (k - 1) * (a + (n_bytes / k) * b)
-        outer = 2 * (p // k - 1) * (a + (n_bytes / k / (p // k)) * b)
-        return inner + outer + 2 * (k - 1) * a  # broadcast-phase latency
+        inner_t = topo.innermost
+        # k defaults to the innermost tier (the executed inner ring runs
+        # on exactly that axis); an explicit k is a flat-network knob
+        k = k or (int(np.sqrt(p)) if topo.is_flat else inner_t.size)
+        ai, bi = inner_t.link.alpha_s, inner_t.link.beta_s_per_byte
+        phases = [(inner_t.name, 2 * (k - 1) * (ai + (n_bytes / k) * bi))]
+        if topo.is_flat:
+            ao, bo = ai, bi
+            phases.append((inner_t.name, 2 * (p // k - 1)
+                           * (ao + (n_bytes / k / (p // k)) * bo)))
+        else:
+            # the n/k shard rings over EVERY outer tier in turn (matching
+            # hierarchical_allreduce's outer loop), innermost outer first
+            # — pricing only the outermost would hide middle tiers
+            for t in reversed(topo.tiers[:-1]):
+                at, bt = t.link.alpha_s, t.link.beta_s_per_byte
+                phases.append((t.name, 2 * (t.size - 1)
+                               * (at + (n_bytes / k / t.size) * bt)))
+        phases.append((inner_t.name, 2 * (k - 1) * ai))  # broadcast latency
+        return phases
     if algo in ("mesh2d", "mesh2d_split"):
-        px = int(np.sqrt(p))
+        if topo.n_tiers > 2:
+            # mesh2d is 2-D by construction (execution raises too); the
+            # planner filters these candidates out (_algo_usable)
+            raise ValueError(f"mesh2d is a two-axis collective; topology "
+                             f"{topo.spec()} has {topo.n_tiers} tiers")
+        inner_t, outer_t = topo.innermost, topo.outermost
+        px = int(np.sqrt(p)) if topo.is_flat else topo.inner_size
         py = p // px
-        t = (2 * (px - 1) * (a + (n_bytes / px) * b)
-             + 2 * (py - 1) * (a + (n_bytes / px / py) * b))
-        return t / (2 if algo == "mesh2d_split" else 1)
+        ai, bi = inner_t.link.alpha_s, inner_t.link.beta_s_per_byte
+        ao, bo = outer_t.link.alpha_s, outer_t.link.beta_s_per_byte
+        div = 2 if algo == "mesh2d_split" else 1
+        return [(inner_t.name,
+                 2 * (px - 1) * (ai + (n_bytes / px) * bi) / div),
+                (outer_t.name,
+                 2 * (py - 1) * (ao + (n_bytes / px / py) * bo) / div)]
     raise ValueError(algo)
 
 
+def allreduce_cost_s(algo: str, n_bytes: float, p: int, net: Net,
+                     k: Optional[int] = None) -> float:
+    """Predicted wall time of one allreduce of n_bytes over p ranks.
+
+    ring:          2(p-1) steps of n/p bytes (on the bottleneck tier)
+    tree (PS):     2 log2(size) steps of n bytes per tier
+    hierarchical:  intra ring over k on the inner tier + inter ring over
+                   p/k on n/k shards on the outer tier
+                   (Jia et al.: 4(k-1) + 2(p/k - 1) steps)
+    mesh2d:        two perpendicular ring phases (inner axis on the inner
+                   tier, outer axis on the outer tier)
+    """
+    return sum((c for _, c in allreduce_phases(algo, n_bytes, p, net, k)),
+               0.0)
+
+
 def reduce_scatter_cost_s(algo: str, n_bytes: float, p: int,
-                          link: LinkParams) -> float:
+                          net: Net) -> float:
     """One reduce-scatter of ``n_bytes`` (each rank keeps 1/p): (p-1)
     steps of n/p — the bandwidth-optimal (p-1)/p·n edge that ZeRO-style
     sharded DP pays instead of the allreduce's 2(p-1)/p·n.
@@ -84,32 +150,53 @@ def reduce_scatter_cost_s(algo: str, n_bytes: float, p: int,
     bucket whose sharded execution is actually a (p-1)-hop ring — the
     modeled/executed gap the conformance work exists to prevent."""
     del algo
-    return allreduce_cost_s("ring", n_bytes, p, link) / 2.0
+    return allreduce_cost_s("ring", n_bytes, p, net) / 2.0
 
 
 def shard_gather_cost_s(algo: str, n_bytes: float, p: int,
-                        link: LinkParams) -> float:
+                        net: Net) -> float:
     """All-gather of partitioned state totalling ``n_bytes`` (each rank
     contributes n/p) — the forward-edge params gather of sharded DP.
     Ring-priced for every algo, mirroring :func:`reduce_scatter_cost_s`
     (the executed gather is a ring / XLA's ring-equivalent)."""
     del algo
-    return allreduce_cost_s("ring", n_bytes, p, link) / 2.0
+    return allreduce_cost_s("ring", n_bytes, p, net) / 2.0
 
 
-def p2p_cost_s(n_bytes: float, link: LinkParams) -> float:
+def p2p_cost_s(n_bytes: float, net: Net,
+               tier: Optional[Union[int, str]] = None) -> float:
     """One point-to-point transfer of ``n_bytes`` (α + nβ) — the pipeline
     boundary edge: one micro-batch of activations (forward) or
-    grad-activations (backward) crossing one stage cut (DESIGN.md §9)."""
+    grad-activations (backward) crossing one stage cut (DESIGN.md §9).
+    On a tiered network the edge is priced on the tier the ``pipe`` axis
+    lands on — ``tier`` by index or name, defaulting to the OUTERMOST
+    (pipeline across nodes, the placement that keeps the dense gradient
+    ring on the fast tier)."""
+    if isinstance(net, Topology):
+        t = net.outermost
+        if tier is not None:
+            if isinstance(tier, str):
+                match = [x for x in net.tiers if x.name == tier]
+                if not match:
+                    raise ValueError(f"no tier named {tier!r} in "
+                                     f"{net.spec()}")
+                t = match[0]
+            else:
+                t = net.tiers[tier]
+        link = t.link
+    else:
+        link = net
     return link.alpha_s + n_bytes * link.beta_s_per_byte
 
 
-def allgather_cost_s(n_bytes: float, p: int, link: LinkParams) -> float:
+def allgather_cost_s(n_bytes: float, p: int, net: Net) -> float:
     """Ring all-gather where every rank contributes ``n_bytes``: (p-1) steps
     each moving one rank's payload (the gather-based compressor wire
-    pattern of 1-bit SGD / DGC, DESIGN.md §5)."""
+    pattern of 1-bit SGD / DGC, DESIGN.md §5) — a lockstep flat traversal,
+    gated by the bottleneck tier like the ring."""
     if p <= 1:
         return 0.0
+    link = as_topology(net, p).bottleneck(n_bytes).link
     return (p - 1) * (link.alpha_s + n_bytes * link.beta_s_per_byte)
 
 
@@ -129,9 +216,13 @@ def compressed_wire_bytes(compressor: str, compressor_args: Tuple[Tuple[str, Any
 # extra passes) and compression on slow ones — the survey's Fig. 7/8 story.
 COMPRESS_PROC_BW = 30e9
 
+# Phase label for compress/decompress time in per-tier breakdowns: it is
+# device compute, not wire time on any tier.
+COMPUTE_PHASE = "compute"
+
 
 def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
-                       algo: str, n_bytes: float, p: int, link: LinkParams,
+                       algo: str, n_bytes: float, p: int, net: Net,
                        proc_bw: float = COMPRESS_PROC_BW,
                        shard_state: bool = False) -> float:
     """Predicted wall time to synchronise ONE fused gradient bucket of
@@ -152,19 +243,41 @@ def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], 
     aggregatable factorizations must be fully visible on every rank to
     rebuild the approximation — sharding only changes which slice a rank
     keeps).  The params all-gather on the forward edge is priced separately
-    (``shard_gather_cost_s``) because it cannot overlap the backward."""
+    (``shard_gather_cost_s``) because it cannot overlap the backward.
+
+    Defined as the sum of :func:`bucket_sync_phases` — ONE copy of the
+    wire-pattern branching, so the per-tier breakdown rows in the plan
+    report always reconcile with the modeled totals exactly."""
+    return sum((s for _, s in bucket_sync_phases(
+        compressor, compressor_args, algo, n_bytes, p, net,
+        proc_bw=proc_bw, shard_state=shard_state)), 0.0)
+
+
+def bucket_sync_phases(compressor: str,
+                       compressor_args: Tuple[Tuple[str, Any], ...],
+                       algo: str, n_bytes: float, p: int, net: Net,
+                       proc_bw: float = COMPRESS_PROC_BW,
+                       shard_state: bool = False
+                       ) -> List[Tuple[str, float]]:
+    """Per-tier breakdown of :func:`bucket_sync_cost_s` — one
+    ``(tier_name, seconds)`` entry per wire phase plus a ``"compute"``
+    entry for compress/decompress time.  Feeds the per-tier rows of the
+    plan report and the plan record (DESIGN.md §10)."""
     if p <= 1:
-        return 0.0
+        return []
+    topo = as_topology(net, p)
     if compressor == "none":
         if shard_state:
-            return reduce_scatter_cost_s(algo, n_bytes, p, link)
-        return allreduce_cost_s(algo, n_bytes, p, link)
+            # reduce-scatter = the ring reduce half, on the ring's tier
+            return [(name, c / 2.0) for name, c
+                    in allreduce_phases("ring", n_bytes, p, net)]
+        return allreduce_phases(algo, n_bytes, p, net)
     from repro.core.compression import get_compressor
     comp = get_compressor(compressor, **dict(compressor_args))
     n_elems = int(n_bytes // 4)
     c_bytes = comp.payload_bits((max(n_elems, 1),)) / 8.0
     if comp.aggregatable:
-        return (allreduce_cost_s(algo, c_bytes, p, link)
-                + 2 * n_bytes / proc_bw)
-    return (allgather_cost_s(c_bytes, p, link)
-            + (n_bytes + p * c_bytes) / proc_bw)
+        return (allreduce_phases(algo, c_bytes, p, net)
+                + [(COMPUTE_PHASE, 2 * n_bytes / proc_bw)])
+    return [(topo.bottleneck(c_bytes).name, allgather_cost_s(c_bytes, p, net)),
+            (COMPUTE_PHASE, (n_bytes + p * c_bytes) / proc_bw)]

@@ -24,6 +24,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.core.schedule.cost import (LinkParams, bucket_sync_cost_s,
                                       shard_gather_cost_s)
 from repro.core.schedule.perf_model import LayerProfile
+from repro.core.schedule.topology import Topology, as_topology
+
+# Every ``link`` parameter below accepts either a bare LinkParams (flat
+# network, the historical model) or a Topology (tiered network, DESIGN.md
+# §10) — the cost layer prices each algorithm phase on the tier it
+# traverses, so the same search discovers hierarchical/2D arms exactly
+# when the network is tiered.
 
 # Buckets smaller than this stay dense: at these sizes the exchange is
 # latency-bound, so compression saves nothing and only adds bias (the
@@ -72,6 +79,14 @@ DEFAULT_CANDIDATES: Tuple[Candidate, ...] = (
     Candidate("sign", (), "ring"),
 )
 
+# The NON-tier-aware traversals: what a flat ring / XLA allreduce can do
+# on any network.  The tiered-network benches and the CI topology suite
+# both assert the tier-aware pick against a plan restricted to this pool
+# — defined once here so the asserted bound and the tracked baseline
+# cannot drift apart.
+FLAT_RING_CANDIDATES: Tuple[Candidate, ...] = tuple(
+    c for c in DEFAULT_CANDIDATES if c.algo in ("ring", "psum"))
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
@@ -105,7 +120,7 @@ class CommPlan:
     mean: bool = True              # divide by world size after reduce
     modeled_step_s: float = float("nan")   # simulated iteration time
     world: int = 1
-    link: Optional[LinkParams] = None
+    link: Optional[Any] = None     # LinkParams | Topology (the net priced)
     shard_state: bool = False
 
     @property
@@ -150,14 +165,14 @@ def profiles_from_grads(grads, t_backward_s: float) -> List[LayerProfile]:
 # Plan simulation (generalised MG-WFBP with per-bucket strategies)
 # ---------------------------------------------------------------------------
 
-def _bucket_cost_s(b: BucketPlan, world: int, link: LinkParams,
+def _bucket_cost_s(b: BucketPlan, world: int, link,
                    shard_state: bool = False) -> float:
     return bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
                               b.bucket_bytes, world, link,
                               shard_state=shard_state)
 
 
-def shard_gather_tail_s(plan: CommPlan, link: LinkParams,
+def shard_gather_tail_s(plan: CommPlan, link,
                         world: int) -> float:
     """Serial cost of the params all-gather a sharded plan pays after the
     optimizer step: the updated 1/p master shards must be whole on every
@@ -169,7 +184,7 @@ def shard_gather_tail_s(plan: CommPlan, link: LinkParams,
 
 
 def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
-                link: LinkParams, world: int) -> float:
+                link, world: int) -> float:
     """Simulated iteration time of ``plan`` on one shared link.
 
     Backward produces leaf gradients last-layer-first (WFBP); a bucket is
@@ -232,7 +247,31 @@ def _form_buckets(layers: Sequence[LayerProfile],
     return form_bucket_indices([l.grad_bytes for l in layers], bucket_bytes)
 
 
-def _pick_candidate(n_bytes: float, world: int, link: LinkParams,
+def _algo_usable(algo: str, world: int, net) -> bool:
+    """Can ``algo`` actually execute at this world/topology?  The tree
+    collective's distance doubling needs a power-of-two size on every
+    axis (``tree.py`` raises ValueError at trace time), and mesh2d is a
+    two-axis collective (both pricing and execution reject 3+-tier
+    topologies) — the planner self-filters such candidates up front
+    instead of returning a plan that errors at execution."""
+    if algo == "tree":
+        return as_topology(net, world).all_pow2
+    if algo in ("mesh2d", "mesh2d_split"):
+        return as_topology(net, world).n_tiers <= 2
+    return True
+
+
+def _usable_candidates(candidates: Sequence[Candidate], world: int,
+                       net) -> List[Candidate]:
+    out = [c for c in candidates if _algo_usable(c.algo, world, net)]
+    if not out:
+        raise ValueError(
+            f"no candidate strategy can execute at world={world} "
+            f"(of {[c.key for c in candidates]})")
+    return out
+
+
+def _pick_candidate(n_bytes: float, world: int, link,
                     candidates: Sequence[Candidate],
                     dense_small_bytes: float) -> Tuple[Candidate, float]:
     """Cheapest strategy for one bucket; small/latency-bound buckets fall
@@ -251,7 +290,7 @@ def _pick_candidate(n_bytes: float, world: int, link: LinkParams,
     return best, best_cost
 
 
-def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
+def plan(layer_profiles: Sequence[LayerProfile], link, world: int,
          candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
          bucket_grid: Sequence[int] = BUCKET_GRID,
          dense_small_bytes: float = DENSE_SMALL_BYTES,
@@ -263,6 +302,8 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
     the plan with the smallest simulated iteration time; ``modeled_step_s``
     carries that time so callers can compare against fixed configurations.
     ``shard_state`` prices (and marks) the sharded-DP execution mode.
+    ``link`` may be a tiered :class:`Topology`; candidates that cannot
+    execute on it (tree on non-power-of-two axes) are filtered up front.
     """
     if world <= 1:
         # Degenerate world: communication is free; one dense bucket.
@@ -274,6 +315,7 @@ def plan(layer_profiles: Sequence[LayerProfile], link: LinkParams, world: int,
         return CommPlan(buckets=buckets, mean=mean, modeled_step_s=t,
                         world=world, link=link, shard_state=shard_state)
 
+    candidates = _usable_candidates(candidates, world, link)
     best_plan: Optional[CommPlan] = None
 
     def consider(p: CommPlan):
@@ -363,7 +405,10 @@ class StrategyPlan:
     pipeline(S, M) arm — ``comm`` then describes the DP edge of ONE stage
     (1/S of the leaves over world/S replicas), ``bubble`` carries
     (S-1)/(S-1+M), and ``pipe_p2p_s`` the per-device boundary-activation
-    traffic per step."""
+    traffic per step.  On a tiered topology ``pipe_tier`` records the
+    AXIS PLACEMENT the planner chose — which tier the pipe axis consumes
+    (DESIGN.md §10): ``@node`` means "pipeline across nodes, gradient
+    ring inside them"; empty means a flat network (the historical arm)."""
     schedule: RoundSchedule
     comm: CommPlan
     modeled_step_s: float
@@ -375,21 +420,25 @@ class StrategyPlan:
     micro_batches: int = 0
     bubble: float = 0.0
     pipe_p2p_s: float = 0.0
+    pipe_tier: str = ""
 
     @property
     def key(self) -> str:
         """Arm key in ``plan_rounds``'s arms dict (and the report table)."""
         if self.pipeline_stages > 1:
+            at = f"@{self.pipe_tier}" if self.pipe_tier else ""
             return (f"pipeline(S={self.pipeline_stages},"
-                    f"M={self.micro_batches})")
+                    f"M={self.micro_batches}){at}")
         return self.schedule.key + ("_sharded" if self.shard_state else "")
 
     def describe(self) -> str:
         shard = " [shard_state 1/p]" if self.shard_state else ""
         pipe = ""
         if self.pipeline_stages > 1:
+            placed = (f", pipe axis on tier {self.pipe_tier!r}"
+                      if self.pipe_tier else "")
             pipe = (f" [bubble {self.bubble:.1%}, "
-                    f"p2p {self.pipe_p2p_s * 1e3:.3f} ms]")
+                    f"p2p {self.pipe_p2p_s * 1e3:.3f} ms{placed}]")
         return (f"{self.key}{shard}{pipe}: "
                 f"{self.modeled_step_s * 1e3:.3f} ms/step"
                 f" (round {self.round_cost_s * 1e3:.3f} ms, "
@@ -419,7 +468,7 @@ def opt_state_bytes_per_worker(opt_name: str, param_bytes: float, world: int,
 
 
 def serial_round_plan(layer_profiles: Sequence[LayerProfile],
-                      link: LinkParams, world: int,
+                      link, world: int,
                       candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                       bucket_grid: Sequence[int] = BUCKET_GRID,
                       dense_small_bytes: float = DENSE_SMALL_BYTES,
@@ -437,6 +486,7 @@ def serial_round_plan(layer_profiles: Sequence[LayerProfile],
         return CommPlan(buckets=buckets, mean=mean, modeled_step_s=0.0,
                         world=world, link=link)
 
+    candidates = _usable_candidates(candidates, world, link)
     best: Optional[CommPlan] = None
 
     def consider(bps) -> None:
@@ -509,16 +559,48 @@ class PipelineAxis:
     micro_grid: Tuple[int, ...] = MICRO_GRID
 
 
+def pipeline_placements(net, world: int, n_stages: int
+                        ) -> List[Tuple[str, Any, Any]]:
+    """The AXIS-PLACEMENT alternatives for a pipeline(S) arm: which tier
+    the pipe axis consumes (DESIGN.md §10).  Returns
+    ``[(pipe_tier_name, dp_net, p2p_net), ...]`` — ``dp_net`` is the
+    network the DP edge (world/S replicas) sees after the pipe axis took
+    its ranks, ``p2p_net`` the link the boundary activations cross.
+
+    On a flat network (bare LinkParams, or a one-tier Topology) there is
+    exactly one placement and the name is "" — the historical arm.  On a
+    tiered topology every tier whose size S divides is a placement:
+    "pipeline across nodes, dense ring inside" is S on the outer tier;
+    pipelining inside the node keeps p2p on the fast tier but forces the
+    gradient ring across the slow one.  May return [] when S divides no
+    tier (that S is simply not expressible on this topology)."""
+    S = int(n_stages)
+    if not isinstance(net, Topology):
+        return [("", net, net)]
+    if net.world != world:
+        raise ValueError(f"topology world {net.world} != world {world}")
+    out = []
+    for ti, tier in enumerate(net.tiers):
+        if tier.size % S != 0:
+            continue
+        placed, rest = net.place(S, ti)
+        out.append(("" if net.is_flat else tier.name, rest, placed.link))
+    return out
+
+
 def pipeline_dp_plan(layer_profiles: Sequence[LayerProfile],
-                     link: LinkParams, world: int, n_stages: int,
+                     link, world: int, n_stages: int,
                      candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                      bucket_grid: Sequence[int] = BUCKET_GRID,
                      dense_small_bytes: float = DENSE_SMALL_BYTES,
-                     mean: bool = True) -> Tuple[CommPlan, List[float]]:
+                     mean: bool = True,
+                     dp_net=None) -> Tuple[CommPlan, List[float]]:
     """The M-independent half of a pipeline arm: balanced stage cuts plus
     the overlap-planned DP edge of the HEAVIEST stage (its leaves over
     world/S replicas).  Returns ``(dp_plan, per_stage_bytes)`` so
-    :func:`plan_rounds` computes it once per S, not once per (S, M)."""
+    :func:`plan_rounds` computes it once per S, not once per (S, M).
+    ``dp_net`` is the network the DP edge sees (a placement's remaining
+    topology); default: ``link`` itself (the flat arm)."""
     from repro.core.pipeline import balanced_cuts, stage_costs
 
     S = int(n_stages)
@@ -543,13 +625,13 @@ def pipeline_dp_plan(layer_profiles: Sequence[LayerProfile],
     scale = t_bwd / sub_t
     sub = [LayerProfile(t_backward_s=l.t_backward_s * scale,
                         grad_bytes=l.grad_bytes) for l in sub]
-    cp = plan(sub, link, world // S, candidates=candidates,
-              bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
-              mean=mean)
+    cp = plan(sub, dp_net if dp_net is not None else link, world // S,
+              candidates=candidates, bucket_grid=bucket_grid,
+              dense_small_bytes=dense_small_bytes, mean=mean)
     return cp, per_stage
 
 
-def pipeline_arm(layer_profiles: Sequence[LayerProfile], link: LinkParams,
+def pipeline_arm(layer_profiles: Sequence[LayerProfile], link,
                  world: int, n_stages: int, micro_batches: int,
                  act_bytes_mb: float,
                  candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
@@ -557,7 +639,8 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link: LinkParams,
                  dense_small_bytes: float = DENSE_SMALL_BYTES,
                  mean: bool = True, opt_name: str = "adam",
                  opt_moments: Optional[float] = None,
-                 dp_plan: Optional[Tuple[CommPlan, List[float]]] = None
+                 dp_plan: Optional[Tuple[CommPlan, List[float]]] = None,
+                 placement: Optional[Tuple[str, Any, Any]] = None
                  ) -> StrategyPlan:
     """Price one pipeline(S, M) composite on a pipe(S) × data(world/S) mesh.
 
@@ -584,36 +667,47 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link: LinkParams,
 
     ``dp_plan`` takes a precomputed :func:`pipeline_dp_plan` result (the
     M-independent half) so grid sweeps don't redo the bucket search.
+    ``placement`` is one :func:`pipeline_placements` entry — the axis→tier
+    assignment of the pipe dimension on a tiered topology; default: the
+    outermost-tier placement (pipeline across nodes), or the flat arm on
+    a flat network.
     """
     from repro.core.pipeline import PIPE_FWD_FRACTION, bubble_fraction
     from repro.core.schedule.cost import p2p_cost_s
 
     S, M = int(n_stages), int(micro_batches)
+    if placement is None:
+        options = pipeline_placements(link, world, S)
+        if not options:
+            raise ValueError(f"pipeline(S={S}) fits no tier of "
+                             f"{link.spec()}")
+        placement = options[0]
+    pipe_tier, dp_net, p2p_net = placement
     if dp_plan is None:
         dp_plan = pipeline_dp_plan(
             layer_profiles, link, world, S, candidates=candidates,
             bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
-            mean=mean)
+            mean=mean, dp_net=dp_net)
     cp, per_stage = dp_plan
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
     bub = bubble_fraction(S, M)
     # idle relative to compute = bubble/(1-bubble) = (S-1)/M — charging
     # bubble·compute instead would under-price small-M arms by M/(M+S-1)
     idle = (S - 1) / M * (1.0 + PIPE_FWD_FRACTION) * t_bwd
-    p2p = 2.0 * M * p2p_cost_s(act_bytes_mb, link)
+    p2p = 2.0 * M * p2p_cost_s(act_bytes_mb, p2p_net)
     modeled = cp.modeled_step_s + idle + p2p
     mom = OPT_MOMENTS.get(opt_name, 2) if opt_moments is None \
         else opt_moments
     return StrategyPlan(
         schedule=RoundSchedule(), comm=cp, modeled_step_s=modeled,
-        round_cost_s=sum(_bucket_cost_s(b, world // S, link)
+        round_cost_s=sum(_bucket_cost_s(b, world // S, dp_net)
                          for b in cp.buckets),
         t_backward_s=t_bwd, pipeline_stages=S, micro_batches=M, bubble=bub,
-        pipe_p2p_s=p2p,
+        pipe_p2p_s=p2p, pipe_tier=pipe_tier,
         opt_mem_bytes=float(mom) * max(per_stage))
 
 
-def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
+def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                 world: int,
                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                 bucket_grid: Sequence[int] = BUCKET_GRID,
@@ -653,7 +747,17 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
     on wall clock exactly when gradient communication still dominates the
     overlapped backward AFTER the bits axis did its best, which is the
     big-model / slow-link corner both surveys call out (DESIGN.md §9).
+
+    On a tiered :class:`Topology` the pipeline arms additionally search
+    the AXIS PLACEMENT (DESIGN.md §10): one arm per (S, M, tier) with the
+    pipe axis consuming that tier — p2p priced on its link, the DP edge
+    planned on the remaining topology — so "pipeline across nodes, dense
+    ring inside" competes directly with "hierarchical allreduce across
+    both" and with pipelining inside the node.
     """
+    if isinstance(link, Topology) and link.world != world:
+        raise ValueError(f"topology world {link.world} ({link.spec()}) != "
+                         f"world {world}; derive world from the topology")
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
     pb = float(sum(l.grad_bytes for l in layer_profiles))   # f32 param bytes
     arms: Dict[str, StrategyPlan] = {}
@@ -690,20 +794,22 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
             if S < 2 or world % S != 0 or world // S < 2 \
                     or len(layer_profiles) < S:
                 continue
-            # the stage cuts + DP-edge bucket search depend only on S;
-            # only bubble/p2p vary with M
-            dp = pipeline_dp_plan(
-                layer_profiles, link, world, S, candidates=candidates,
-                bucket_grid=bucket_grid,
-                dense_small_bytes=dense_small_bytes, mean=mean)
-            for M in pipeline.micro_grid:
-                act = (pipeline.global_tokens / (world // S) / M
-                       * pipeline.bytes_per_token)
-                arm = pipeline_arm(
-                    layer_profiles, link, world, S, M, act,
-                    opt_name=opt_name, opt_moments=opt_moments,
-                    dp_plan=dp)
-                arms[arm.key] = arm
+            for placement in pipeline_placements(link, world, S):
+                # the stage cuts + DP-edge bucket search depend only on
+                # (S, placement); only bubble/p2p vary with M
+                dp = pipeline_dp_plan(
+                    layer_profiles, link, world, S, candidates=candidates,
+                    bucket_grid=bucket_grid,
+                    dense_small_bytes=dense_small_bytes, mean=mean,
+                    dp_net=placement[1])
+                for M in pipeline.micro_grid:
+                    act = (pipeline.global_tokens / (world // S) / M
+                           * pipeline.bytes_per_token)
+                    arm = pipeline_arm(
+                        layer_profiles, link, world, S, M, act,
+                        opt_name=opt_name, opt_moments=opt_moments,
+                        dp_plan=dp, placement=placement)
+                    arms[arm.key] = arm
     pool = list(arms.values())
     if memory_budget_bytes is not None:
         fits = [a for a in pool if a.opt_mem_bytes <= memory_budget_bytes]
@@ -713,7 +819,7 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link: LinkParams,
 
 
 def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
-                      link: LinkParams, world: int, compressor: str,
+                      link, world: int, compressor: str,
                       algo: str,
                       compressor_args: Tuple[Tuple[str, Any], ...] = (),
                       bucket_bytes: int = 32 * 2**20,

@@ -29,6 +29,19 @@ def make_host_mesh(data: int = 1, model: int = 1):
                          axis_types=(AxisType.Auto,) * 2)
 
 
+def make_topology_mesh(topo):
+    """The executable twin of a ``schedule.topology.Topology``: one mesh
+    axis per tier, OUTERMOST first, each named after its tier — so an
+    8-device host realises ``node:2@datacenter,device:4@fast_ici`` as a
+    (2, 4) mesh with axes ("node", "device").  Collectives dispatch over
+    ``collectives.axes_for_topology(topo)`` (the same names, innermost
+    first), which is what maps hierarchical's inner ring onto the fast
+    tier (DESIGN.md §10).  Tiered execution is pure DP: no model axis."""
+    return jax.make_mesh(tuple(t.size for t in topo.tiers),
+                         tuple(t.name for t in topo.tiers),
+                         axis_types=(AxisType.Auto,) * len(topo.tiers))
+
+
 def make_pipe_mesh(pipe: int = 1, data: int = 1):
     """2-D pipeline × data mesh (DESIGN.md §9): stage s of a pipelined
     model lives on mesh row ``pipe=s``, replicated ``data`` ways for the

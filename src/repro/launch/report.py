@@ -72,6 +72,27 @@ def variants_table() -> str:
     return "\n".join(lines)
 
 
+def tier_cost_breakdown(plan) -> dict:
+    """Serial per-tier cost of a plan's buckets: sum each bucket's phase
+    costs (``cost.bucket_sync_phases``) grouped by the tier the phase
+    traverses, plus the ``"compute"`` compress/decompress time — the
+    per-tier rows of the plan table and the plan record (DESIGN.md §10).
+    Keys follow tier order (outermost first), then compute."""
+    from repro.core.schedule import Topology
+    from repro.core.schedule.cost import bucket_sync_phases
+
+    out: dict = {}
+    if isinstance(plan.link, Topology):
+        for t in plan.link.tiers:
+            out[t.name] = 0.0
+    for b in plan.buckets:
+        for name, secs in bucket_sync_phases(
+                b.compressor, b.compressor_args, b.algo, b.bucket_bytes,
+                plan.world, plan.link, shard_state=plan.shard_state):
+            out[name] = out.get(name, 0.0) + secs
+    return out
+
+
 def render_comm_plan(plan, baselines=None, t_backward_s=None,
                      total_label="modeled iteration",
                      auto_step_s=None) -> str:
@@ -82,12 +103,31 @@ def render_comm_plan(plan, baselines=None, t_backward_s=None,
     reduce round for τ>1 round plans); ``auto_step_s`` overrides the
     denominator of the speedup column (the composite's AMORTIZED per-step
     time — dividing iteration baselines by a single round cost would
-    overstate the win)."""
+    overstate the win).
+
+    On a tiered topology (DESIGN.md §10) the header lists every tier's
+    (α, β) and the table grows PER-TIER BREAKDOWN rows: the serial sum
+    of each bucket phase's cost, grouped by the tier it traverses (plus
+    the compress/decompress compute) — the survey's "which link is the
+    bottleneck" question answered per plan."""
+    from repro.core.schedule import Topology
     from repro.core.schedule.cost import bucket_sync_cost_s
 
     world, link = plan.world, plan.link
+    tiered = isinstance(link, Topology) and not link.is_flat
     lines = ["### Communication plan (auto-tuned)", ""]
-    if link is not None:
+    if tiered:
+        tier_txt = " → ".join(
+            f"{t.name}:{t.size} (α={t.link.alpha_s:.2e} s, "
+            f"β⁻¹={1 / t.link.beta_s_per_byte / 1e9:.2f} GB/s)"
+            for t in link.tiers)
+        lines.append(f"world={world}, topology {tier_txt}"
+                     + (f", measured backward {t_backward_s * 1e3:.1f} ms"
+                        if t_backward_s else ""))
+        lines.append("")
+    elif link is not None:
+        if isinstance(link, Topology):
+            link = link.tiers[0].link      # flat topology: one tier's link
         lines.append(f"world={world}, α={link.alpha_s:.2e} s, "
                      f"β⁻¹={1 / link.beta_s_per_byte / 1e9:.2f} GB/s"
                      + (f", measured backward {t_backward_s * 1e3:.1f} ms"
@@ -107,6 +147,10 @@ def render_comm_plan(plan, baselines=None, t_backward_s=None,
         lines.append(f"| {j} | {len(b.leaves)} | "
                      f"{b.bucket_bytes / 2**20:.2f} | "
                      f"{b.algo}/{b.compressor} | {cost} |")
+    if tiered:
+        for name, secs in tier_cost_breakdown(plan).items():
+            lines.append(f"| — | — | — | tier {name} (all buckets, serial) "
+                         f"| {secs * 1e6:.1f} µs |")
     if plan.shard_state and link is not None:
         from repro.core.schedule.planner import shard_gather_tail_s
         tail = shard_gather_tail_s(plan, link, world)
@@ -142,14 +186,16 @@ def render_strategy_plan(sp, arms=None, baselines=None,
              f"modeled {sp.modeled_step_s * 1e3:.3f} ms/step "
              f"({detail}backward {sp.t_backward_s * 1e3:.3f} ms)"]
     if sp.pipeline_stages > 1:
+        placed = (f" (pipe axis placed on tier {sp.pipe_tier!r}, DP edge "
+                  f"on the remaining tiers)" if sp.pipe_tier else "")
         lines.append(
             f"pipeline: {sp.pipeline_stages} stages × {sp.micro_batches} "
             f"micro-batches — bubble {sp.bubble:.1%} "
             f"((S−1)/(S−1+M)), boundary p2p "
-            f"{sp.pipe_p2p_s * 1e3:.3f} ms/step, per-stage opt state "
-            f"{sp.opt_mem_bytes / 2**20:.1f} MiB/worker; the comm plan "
-            f"below is the DP edge of the heaviest stage over world/S "
-            f"replicas")
+            f"{sp.pipe_p2p_s * 1e3:.3f} ms/step{placed}, per-stage opt "
+            f"state {sp.opt_mem_bytes / 2**20:.1f} MiB/worker; the comm "
+            f"plan below is the DP edge of the heaviest stage over "
+            f"world/S replicas")
     if sp.shard_state and sp.opt_mem_bytes == sp.opt_mem_bytes:
         repl = (arms or {}).get("every_step")
         vs = (f" (replicated would be {repl.opt_mem_bytes / 2**20:.1f} MiB)"
@@ -207,6 +253,8 @@ def save_strategy_plan(sp, arch: str) -> str:
                            "micro_batches": sp.micro_batches,
                            "bubble_fraction": sp.bubble,
                            "p2p_cost_s": sp.pipe_p2p_s}
+        if sp.pipe_tier:
+            rec["pipeline"]["pipe_tier"] = sp.pipe_tier
     if sp.opt_mem_bytes == sp.opt_mem_bytes:   # not NaN
         rec["opt_mem_bytes_per_worker"] = sp.opt_mem_bytes
     return _write_plan_record(rec, arch)
@@ -274,8 +322,12 @@ def render_pipeline_stages(staged, params_split, micro_batches: int,
 
 
 def comm_plan_record(plan) -> dict:
-    """JSON-serialisable record of a plan (written by ``save_comm_plan``)."""
-    return {
+    """JSON-serialisable record of a plan (written by ``save_comm_plan``).
+    Tiered plans additionally record the topology and the per-tier cost
+    breakdown; flat plans keep the exact pre-topology schema."""
+    from repro.core.schedule import Topology
+
+    rec = {
         "world": plan.world,
         "modeled_step_s": plan.modeled_step_s,
         "shard_state": plan.shard_state,
@@ -289,6 +341,16 @@ def comm_plan_record(plan) -> dict:
             "pack": b.pack,
         } for b in plan.buckets],
     }
+    if isinstance(plan.link, Topology) and not plan.link.is_flat:
+        rec["topology"] = {
+            "spec": plan.link.spec(),
+            "tiers": [{"name": t.name, "size": t.size,
+                       "alpha_s": t.link.alpha_s,
+                       "beta_s_per_byte": t.link.beta_s_per_byte}
+                      for t in plan.link.tiers],
+            "tier_cost_s": tier_cost_breakdown(plan),
+        }
+    return rec
 
 
 def inject(markdown: str, marker: str, content: str) -> str:

@@ -55,15 +55,33 @@ def parse_args(argv=None):
     ap.add_argument("--algo", default="psum")
     ap.add_argument("--bucket-mb", type=float, default=32.0)
     ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--topology", default="",
+                    help="tiered network model (DESIGN.md §10): a spec "
+                         "'node:4@datacenter,device:8@fast_ici' (outermost "
+                         "tier first, @link names a --link preset) or a "
+                         "TOPOLOGY_PRESETS name.  The planner prices every "
+                         "collective phase on the tier it traverses and "
+                         "searches pipe-axis placements; its world (the "
+                         "tier-size product) supersedes --plan-world.  "
+                         "When it matches this host's device count the "
+                         "mesh is rebuilt one-axis-per-tier so collectives "
+                         "dispatch axis→tier")
     ap.add_argument("--link", default="fast_ici", choices=sorted(LINK_PRESETS),
-                    help="α-β regime the planner optimizes for (--sync auto)")
+                    help="α-β regime the planner optimizes for (--sync "
+                         "auto).  Legacy FLAT network shim: builds "
+                         "Topology.flat; superseded by --topology")
     ap.add_argument("--alpha", type=float, default=None,
-                    help="override link latency α in seconds (--sync auto)")
+                    help="override link latency α in seconds (--sync auto; "
+                         "flat shim, ignored under --topology)")
     ap.add_argument("--beta-gbps", type=float, default=None,
-                    help="override link bandwidth in GB/s (--sync auto)")
+                    help="override link bandwidth in GB/s (--sync auto; "
+                         "flat shim, ignored under --topology)")
     ap.add_argument("--plan-world", type=int, default=0,
-                    help="plan for this world size instead of the mesh's "
-                         "(model a pod from a laptop)")
+                    help="DEPRECATED: plan for this world size instead of "
+                         "the mesh's (model a pod from a laptop).  Prefer "
+                         "--topology, whose tier-size product defines the "
+                         "world; on disagreement the topology wins (with a "
+                         "warning)")
     ap.add_argument("--plan-backward-ms", type=float, default=0.0,
                     help="plan for this per-step backward time instead of "
                          "measuring (model a TPU's backward from a laptop; "
@@ -148,6 +166,23 @@ def main(argv=None):
                          "competing answers to the optimizer-memory axis; "
                          "pick one (DESIGN.md §9)")
     session = TrainSession(scfg)
+    if args.topology:
+        superseded = [f for f, on in (("--link", args.link != "fast_ici"),
+                                      ("--alpha", args.alpha is not None),
+                                      ("--beta-gbps",
+                                       args.beta_gbps is not None))
+                      if on]
+        if superseded:
+            print(f"warning: --topology models the network per tier; "
+                  f"ignoring flat link flags {', '.join(superseded)}",
+                  flush=True)
+        topo = session.apply_topology(args.topology)
+        if session.tiered_mesh:
+            print(f"topology: {topo.spec()} (tiered mesh, axes "
+                  f"{'x'.join(t.name for t in topo.tiers)})", flush=True)
+        else:
+            print(f"topology: {topo.spec()} (planning model; executing on "
+                  f"the flat {session.world}-worker host mesh)", flush=True)
 
     if args.sync == "auto":
         ignored = []

@@ -506,6 +506,100 @@ def check_sharded_segment_ids_multi_axis():
     print("sharded segment-id derivation ok (4x2 mesh, vs host reference)")
 
 
+def check_topology_dispatched_collectives():
+    """ISSUE 5 satellite: collectives under the axis→tier dispatch.  An
+    8-device host realises ``node:2@datacenter,device:4@fast_ici`` as a
+    (2, 4) tiered mesh (``make_topology_mesh``); ``axes_for_topology``
+    lists the shard_map axes innermost-first, so ``hierarchical_allreduce``
+    runs its ring phases on the ``device`` (fast) axis and the shard ring
+    on ``node`` — and must match ``psum`` within ulp tolerance (the
+    reductions contract in different orders).  ring/mesh2d/tree are held
+    to the same bound under the same dispatch."""
+    from repro.core.collectives import allreduce, axes_for_topology
+    from repro.core.schedule.topology import Topology
+    from repro.launch.mesh import make_topology_mesh
+
+    topo = Topology.from_spec("node:2@datacenter,device:4@fast_ici")
+    mesh = make_topology_mesh(topo)
+    assert mesh.axis_names == ("node", "device") and mesh.shape["node"] == 2
+    axes = axes_for_topology(topo)
+    assert axes == ("device", "node")   # inner ring on the fast tier
+    x = jax.random.normal(jax.random.PRNGKey(21), (8, 1031))
+
+    def run(algo):
+        f = jax.shard_map(lambda v: allreduce(v, algo, axes),
+                          mesh=mesh, in_specs=P(("node", "device"), None),
+                          out_specs=P(None, None),
+                          axis_names=set(axes), check_vma=False)
+        return np.asarray(jax.jit(f)(x))[0]
+
+    want = run("psum")
+    for algo in ("hierarchical", "ring", "mesh2d", "tree"):
+        got = run(algo)
+        denom = np.abs(want).max() + 1e-9
+        rel = np.abs(got - want).max() / denom
+        assert rel < 1e-5, (algo, rel)
+        # the manual algorithms must really dispatch over both tier axes
+        f = jax.shard_map(lambda v: allreduce(v, algo, axes),
+                          mesh=mesh, in_specs=P(("node", "device"), None),
+                          out_specs=P(None, None),
+                          axis_names=set(axes), check_vma=False)
+        txt = jax.jit(f).lower(x).compile().as_text()
+        assert "collective-permute" in txt, algo
+
+    # 3-tier topology (2x2x2): hierarchical's shard must ring over EVERY
+    # outer axis (dropping one would silently leave pod groups diverged —
+    # the bug class this check exists for); mesh2d must REFUSE 3 axes.
+    topo3 = Topology.from_spec("pod:2@datacenter,node:2@commodity,"
+                               "device:2@fast_ici")
+    mesh3 = make_topology_mesh(topo3)
+    axes3 = axes_for_topology(topo3)
+    assert axes3 == ("device", "node", "pod")
+    spec3 = P(("pod", "node", "device"), None)
+
+    def run3(algo):
+        f = jax.shard_map(lambda v: allreduce(v, algo, axes3),
+                          mesh=mesh3, in_specs=spec3,
+                          out_specs=P(None, None),
+                          axis_names=set(axes3), check_vma=False)
+        return np.asarray(jax.jit(f)(x))[0]
+
+    want3 = run3("psum")
+    for algo in ("hierarchical", "ring", "tree"):
+        got = run3(algo)
+        rel = np.abs(got - want3).max() / (np.abs(want3).max() + 1e-9)
+        assert rel < 1e-5, (algo, rel)
+    try:
+        run3("mesh2d")
+    except ValueError as e:
+        assert "two-axis" in str(e), e
+    else:
+        raise AssertionError("mesh2d over 3 axes must raise ValueError")
+    print("topology-dispatched collectives ok (node:2 x device:4 and "
+          "2x2x2: hierarchical/ring/tree vs psum within ulp; mesh2d "
+          "refuses 3 axes)")
+
+
+def check_tree_nonpow2_raises_value_error():
+    """Satellite: the tree collective on a non-power-of-two axis raises
+    ValueError at trace time (was a bare assert, stripped under -O)."""
+    from repro.core.collectives import allreduce
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:6]), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(22), (6, 16))
+    f = jax.shard_map(lambda v: allreduce(v, "tree", ("data",)),
+                      mesh=mesh, in_specs=P("data", None),
+                      out_specs=P(None, None),
+                      axis_names={"data"}, check_vma=False)
+    try:
+        jax.jit(f).lower(x)
+    except ValueError as e:
+        assert "power-of-two" in str(e), e
+    else:
+        raise AssertionError("tree over 6 ranks must raise ValueError")
+    print("tree non-power-of-two ValueError ok")
+
+
 def check_hlo_collective_parse():
     from repro.launch.hlo_analysis import analyze
     mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
@@ -533,5 +627,7 @@ if __name__ == "__main__":
     check_sharded_checkpoint_reshard()
     check_reduce_scatter_all_gather_roundtrip()
     check_sharded_segment_ids_multi_axis()
+    check_topology_dispatched_collectives()
+    check_tree_nonpow2_raises_value_error()
     check_hlo_collective_parse()
     print("ALL MULTI-DEVICE CHECKS PASSED")

@@ -449,7 +449,7 @@ def test_bench_ci_gate_trips_on_regression(tmp_path):
 def test_bench_ci_committed_baselines_exist_and_match_schema():
     bdir = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines")
-    for suite in ("planner", "sharded", "pipeline"):
+    for suite in ("planner", "sharded", "pipeline", "topology"):
         path = os.path.join(bdir, f"BENCH_{suite}.json")
         assert os.path.exists(path), f"missing committed baseline {path}"
         with open(path) as f:

@@ -1,0 +1,357 @@
+"""Topology-first network model (core/schedule/topology.py, ISSUE 5).
+
+Covers: spec parsing/presets, the FLAT REGRESSION PINS (Topology.flat and
+bare LinkParams must reproduce the pre-redesign cost model bit-for-bit,
+for every algorithm — this is what keeps the committed benchmark
+baselines green), tiered per-phase pricing, the axis-placement
+primitives, the tree-candidate self-filter on non-power-of-two worlds,
+and the acceptance criterion: on the two-tier network the planner's pick
+is tier-aware and strictly beats the best flat-ring arm.
+"""
+import numpy as np
+import pytest
+
+from repro.core.schedule import (LINK_PRESETS, LayerProfile, LinkParams,
+                                 PipelineAxis, Topology, allreduce_cost_s,
+                                 allgather_cost_s, bucket_sync_cost_s,
+                                 bucket_sync_phases, p2p_cost_s, plan,
+                                 plan_rounds, reduce_scatter_cost_s,
+                                 serial_round_plan)
+from repro.core.schedule.planner import (DEFAULT_CANDIDATES, Candidate,
+                                         pipeline_placements)
+from repro.core.schedule.topology import TOPOLOGY_PRESETS, as_topology
+
+ALGOS = ("ring", "psum", "tree", "hierarchical", "mesh2d", "mesh2d_split")
+TWO_TIER = "node:4@datacenter,device:8@fast_ici"
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def test_from_spec_and_presets():
+    t = Topology.from_spec(TWO_TIER)
+    assert t.world == 32 and t.n_tiers == 2 and not t.is_flat
+    assert t.outermost.name == "node" and t.innermost.name == "device"
+    assert t.inner_size == 8
+    assert t.spec() == TWO_TIER          # round-trips through preset names
+    assert t == Topology.from_spec(t.spec())
+    for name in TOPOLOGY_PRESETS:        # every preset parses and its
+        p = Topology.from_spec(name)     # links join LINK_PRESETS
+        assert p.world > 1
+        for tier in p.tiers:
+            assert tier.link is LINK_PRESETS[tier.link_name]
+
+
+def test_from_spec_rejects_garbage():
+    with pytest.raises(ValueError, match="name:size@link"):
+        Topology.from_spec("node4datacenter")
+    with pytest.raises(ValueError, match="unknown link preset"):
+        Topology.from_spec("node:4@warp_drive")
+    with pytest.raises(ValueError, match="duplicate tier"):
+        Topology.from_spec("a:2@fast_ici,a:2@fast_ici")
+    with pytest.raises(ValueError, match="at least one tier"):
+        Topology(())
+
+
+def test_as_topology_world_mismatch_raises():
+    t = Topology.from_spec(TWO_TIER)
+    assert as_topology(t, 32) is t
+    with pytest.raises(ValueError, match="world"):
+        as_topology(t, 256)
+    flat = as_topology(LINK_PRESETS["fast_ici"], 8)
+    assert flat.is_flat and flat.world == 8
+
+
+# ---------------------------------------------------------------------------
+# Flat regression pins (satellite: pre-redesign values, all algos)
+# ---------------------------------------------------------------------------
+
+def _old_allreduce(algo, n, p, link, k=None):
+    """The pre-topology closed forms, re-typed verbatim as the pin."""
+    a, b = link.alpha_s, link.beta_s_per_byte
+    if p <= 1:
+        return 0.0
+    if algo in ("ring", "psum"):
+        return 2 * (p - 1) * (a + (n / p) * b)
+    if algo == "tree":
+        return 2 * np.log2(p) * (a + n * b)
+    if algo == "hierarchical":
+        k = k or int(np.sqrt(p))
+        inner = 2 * (k - 1) * (a + (n / k) * b)
+        outer = 2 * (p // k - 1) * (a + (n / k / (p // k)) * b)
+        return inner + outer + 2 * (k - 1) * a
+    px = int(np.sqrt(p))
+    py = p // px
+    t = (2 * (px - 1) * (a + (n / px) * b)
+         + 2 * (py - 1) * (a + (n / px / py) * b))
+    return t / (2 if algo == "mesh2d_split" else 1)
+
+
+@pytest.mark.parametrize("preset", sorted(LINK_PRESETS))
+@pytest.mark.parametrize("p", [2, 6, 8, 32, 256])
+def test_flat_topology_pins_pre_redesign_costs(preset, p):
+    link = LINK_PRESETS[preset]
+    flat = Topology.flat(p, link)
+    for n in (512.0, 64 * 1024.0, 4 * 2**20, 137 * 2**20 + 123):
+        for algo in ALGOS:
+            want = _old_allreduce(algo, n, p, link)
+            assert allreduce_cost_s(algo, n, p, link) == want
+            assert allreduce_cost_s(algo, n, p, flat) == want
+        # p2p / gather / reduce-scatter pins
+        a, b = link.alpha_s, link.beta_s_per_byte
+        assert p2p_cost_s(n, link) == a + n * b
+        assert p2p_cost_s(n, flat) == a + n * b
+        assert allgather_cost_s(n, p, flat) == (p - 1) * (a + n * b)
+        assert reduce_scatter_cost_s("tree", n, p, flat) == \
+            _old_allreduce("ring", n, p, link) / 2.0
+        # the full bucket metric, dense and compressed
+        for comp, args in (("none", ()), ("int8", ()), ("sign", ()),
+                           ("topk", (("ratio", 0.01),))):
+            assert bucket_sync_cost_s(comp, args, "ring", n, p, link) == \
+                bucket_sync_cost_s(comp, args, "ring", n, p, flat)
+
+
+def test_flat_plans_identical_to_linkparams_plans():
+    """The whole search, not just the primitives: planning on
+    Topology.flat returns the same buckets and the same modeled time as
+    planning on the bare LinkParams."""
+    profs = [LayerProfile(2e-4, 4 * 2**20) for _ in range(12)]
+    for preset in ("fast_ici", "commodity"):
+        link = LINK_PRESETS[preset]
+        a = plan(profs, link, 64)
+        b = plan(profs, Topology.flat(64, link), 64)
+        assert a.modeled_step_s == b.modeled_step_s
+        assert [(x.leaves, x.algo, x.compressor) for x in a.buckets] == \
+            [(x.leaves, x.algo, x.compressor) for x in b.buckets]
+
+
+# ---------------------------------------------------------------------------
+# Tiered pricing
+# ---------------------------------------------------------------------------
+
+def test_ring_is_gated_by_the_bottleneck_tier():
+    """A flat ring across a tiered network pays the slow fabric every
+    lockstep step (Zhang et al. 2020): its cost equals the ring priced on
+    the slow link alone."""
+    topo = Topology.from_spec(TWO_TIER)
+    slow = LINK_PRESETS["datacenter"]
+    n = 64 * 2**20
+    assert allreduce_cost_s("ring", n, 32, topo) == \
+        allreduce_cost_s("ring", n, 32, slow)
+
+
+def test_hierarchical_moves_bandwidth_to_the_fast_tier():
+    """On the two-tier network, hierarchical's inner phase runs on the
+    fast tier and the slow tier only carries the 1/k shard — so it beats
+    the flat ring for bandwidth-bound sizes, and its slow-tier phase cost
+    is the outer ring of the shard."""
+    topo = Topology.from_spec(TWO_TIER)
+    n = 256 * 2**20
+    hier = allreduce_cost_s("hierarchical", n, 32, topo)
+    ring = allreduce_cost_s("ring", n, 32, topo)
+    assert hier < ring
+    phases = dict()
+    for name, s in bucket_sync_phases("none", (), "hierarchical", n, 32,
+                                      topo):
+        phases[name] = phases.get(name, 0.0) + s
+    assert set(phases) == {"node", "device"}
+    # slow-tier traffic is the n/k shard over the 4 nodes
+    slow = LINK_PRESETS["datacenter"]
+    k = 8
+    want = 2 * (4 - 1) * (slow.alpha_s + (n / k / 4) * slow.beta_s_per_byte)
+    assert phases["node"] == want
+
+
+def test_phases_sum_to_totals():
+    topo = Topology.from_spec(TWO_TIER)
+    for algo in ALGOS:
+        for comp, args in (("none", ()), ("int8", ()),
+                           ("topk", (("ratio", 0.01),))):
+            for shard in (False, True):
+                total = bucket_sync_cost_s(comp, args, algo, 8 * 2**20, 32,
+                                           topo, shard_state=shard)
+                parts = sum(s for _, s in bucket_sync_phases(
+                    comp, args, algo, 8 * 2**20, 32, topo,
+                    shard_state=shard))
+                assert abs(total - parts) <= 1e-12 * max(total, 1.0), \
+                    (algo, comp, shard)
+
+
+def test_three_tier_hierarchical_prices_every_tier():
+    """A 3-tier network: the n/k shard rings over BOTH outer tiers (the
+    middle tier must not be silently priced at the fast link), and
+    mesh2d — a two-axis collective — is rejected by pricing and filtered
+    by the planner."""
+    from repro.core.schedule.planner import _algo_usable
+    topo = Topology.from_spec(
+        "pod:2@datacenter,node:4@commodity,device:8@fast_ici")
+    n = 64 * 2**20
+    names = [nm for nm, _ in bucket_sync_phases("none", (), "hierarchical",
+                                                n, 64, topo)]
+    assert set(names) == {"pod", "node", "device"}
+    # the middle (commodity) ring of the n/8 shard, priced on ITS link
+    phases = dict()
+    for nm, s in bucket_sync_phases("none", (), "hierarchical", n, 64,
+                                    topo):
+        phases[nm] = phases.get(nm, 0.0) + s
+    mid = LINK_PRESETS["commodity"]
+    want = 2 * (4 - 1) * (mid.alpha_s + (n / 8 / 4) * mid.beta_s_per_byte)
+    assert phases["node"] == want
+    with pytest.raises(ValueError, match="two-axis"):
+        allreduce_cost_s("mesh2d", n, 64, topo)
+    assert not _algo_usable("mesh2d", 64, topo)
+    assert _algo_usable("mesh2d", 64, LINK_PRESETS["fast_ici"])
+    # the full search runs clean on 3 tiers (mesh2d/tree filtered as needed)
+    profs = [LayerProfile(2e-4, 8 * 2**20) for _ in range(8)]
+    p = plan(profs, topo, 64)
+    assert all(b.algo not in ("mesh2d", "mesh2d_split") for b in p.buckets)
+
+
+def test_homogeneous_two_tier_ties_flat_ring():
+    link = LINK_PRESETS["fast_ici"]
+    homo = Topology.from_spec("node:4@fast_ici,device:8@fast_ici")
+    flat = Topology.flat(32, link)
+    n = 32 * 2**20
+    assert allreduce_cost_s("ring", n, 32, homo) == \
+        allreduce_cost_s("ring", n, 32, flat)
+    assert allreduce_cost_s("tree", n, 32, homo) == pytest.approx(
+        allreduce_cost_s("tree", n, 32, flat), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Axis placement
+# ---------------------------------------------------------------------------
+
+def test_place_consumes_a_tier():
+    topo = Topology.from_spec(TWO_TIER)
+    placed, rest = topo.place(4, 0)          # pipe across all 4 nodes
+    assert placed.size == 4 and placed.link is LINK_PRESETS["datacenter"]
+    assert rest.spec() == "device:8@fast_ici" and rest.world == 8
+    placed, rest = topo.place(2, 1)          # pipe inside the node
+    assert placed.link is LINK_PRESETS["fast_ici"]
+    assert rest.world == 16 and rest.tiers[1].size == 4
+    with pytest.raises(ValueError, match="does not divide"):
+        topo.place(3, 0)
+
+
+def test_pipeline_placements_flat_and_tiered():
+    link = LINK_PRESETS["commodity"]
+    flat = pipeline_placements(link, 32, 4)
+    assert flat == [("", link, link)]        # the historical single arm
+    topo = Topology.from_spec(TWO_TIER)
+    named = {p[0]: p for p in pipeline_placements(topo, 32, 4)}
+    assert set(named) == {"node", "device"}  # S=4 fits either tier
+    name, dp_net, p2p_net = named["node"]
+    assert p2p_net is LINK_PRESETS["datacenter"]
+    assert dp_net.spec() == "device:8@fast_ici"
+    # S=8 only fits the device tier; S=3 fits none
+    assert [p[0] for p in pipeline_placements(topo, 32, 8)] == ["device"]
+    assert pipeline_placements(topo, 32, 3) == []
+
+
+# ---------------------------------------------------------------------------
+# Tree self-filter (satellite)
+# ---------------------------------------------------------------------------
+
+def test_tree_candidates_self_filter_on_non_pow2_worlds():
+    profs = [LayerProfile(2e-4, 4 * 2**20) for _ in range(8)]
+    for net, world in ((LINK_PRESETS["commodity"], 6),
+                       (Topology.from_spec("node:3@datacenter,"
+                                           "device:2@fast_ici"), 6)):
+        p = plan(profs, net, world)
+        assert all(b.algo != "tree" for b in p.buckets), (net, world)
+        rp = serial_round_plan(profs, net, world)
+        assert all(b.algo != "tree" for b in rp.buckets), (net, world)
+    # power-of-two worlds keep tree in the pool (it can win on latency)
+    small = [LayerProfile(1e-6, 256.0) for _ in range(4)]
+    p = plan(small, LINK_PRESETS["commodity"], 64)
+    assert p.modeled_step_s > 0  # tree allowed — search just must not crash
+    with pytest.raises(ValueError, match="no candidate"):
+        plan(profs, LINK_PRESETS["commodity"], 6,
+             candidates=[Candidate("none", (), "tree")])
+
+
+def test_tree_collective_raises_value_error_not_assert():
+    """The executed guard survives ``python -O`` (a bare assert would
+    not): the source must raise ValueError."""
+    import inspect
+
+    from repro.core.collectives import tree
+    src = inspect.getsource(tree.tree_reduce_to_root)
+    assert "raise ValueError" in src
+    assert "\n    assert p" not in src
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: tier-aware arms win on tiered networks
+# ---------------------------------------------------------------------------
+
+def test_plan_rounds_picks_tier_aware_arm_on_two_tier_network():
+    topo = Topology.from_spec(TWO_TIER)
+    # a heavy model on a modest backward: communication-dominated
+    profs = [LayerProfile(5e-4, 64 * 2**20) for _ in range(24)]
+    pa = PipelineAxis(global_tokens=4096.0 * 32, bytes_per_token=4096.0)
+    ring_only = tuple(c for c in DEFAULT_CANDIDATES
+                      if c.algo in ("ring", "psum"))
+    flat_ring = plan(profs, topo, 32, candidates=ring_only)
+    best, arms = plan_rounds(profs, topo, 32, tau_grid=(1,), pipeline=pa)
+    assert best.modeled_step_s < flat_ring.modeled_step_s
+    if best.pipeline_stages > 1:
+        assert best.pipe_tier in ("node", "device")
+    else:
+        assert any(b.algo in ("hierarchical", "mesh2d", "mesh2d_split")
+                   for b in best.comm.buckets)
+    # the every-step arm alone is already tier-aware
+    assert any(b.algo == "hierarchical"
+               for b in arms["every_step"].comm.buckets)
+
+
+def test_plan_rounds_world_must_match_topology():
+    topo = Topology.from_spec(TWO_TIER)
+    profs = [LayerProfile(2e-4, 2**20) for _ in range(8)]
+    with pytest.raises(ValueError, match="world"):
+        plan_rounds(profs, topo, 256)
+
+
+# ---------------------------------------------------------------------------
+# Session integration: --plan-world deprecation, report, records
+# ---------------------------------------------------------------------------
+
+def test_plan_auto_prefers_topology_over_plan_world(capsys):
+    from repro.api import SessionConfig, TrainSession
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True,
+                                      batch=2, seq=16, steps=4))
+    sp = sess.plan_auto(topology=TWO_TIER, plan_world=999,
+                        t_backward_s=0.02)
+    out = capsys.readouterr().out
+    assert "disagrees with the topology" in out
+    assert "deprecated" in out
+    assert sess.planned["strategy_plan"].comm.world in (32, 8)  # arm world
+    # every arm was priced at the topology's world, not 999
+    assert all(a.comm.world in (32, 8, 16, 4)   # pipe arms use world/S
+               for a in sess.planned["arms"].values())
+    assert sp.modeled_step_s > 0
+
+
+def test_strategy_plan_report_and_record_carry_tiers(tmp_path, monkeypatch):
+    from repro.core.schedule import fixed_config_plan
+    from repro.launch import report
+    from repro.launch.report import (comm_plan_record, render_comm_plan,
+                                     tier_cost_breakdown)
+    topo = Topology.from_spec(TWO_TIER)
+    profs = [LayerProfile(2e-4, 16 * 2**20) for _ in range(8)]
+    cp = fixed_config_plan(profs, topo, 32, "none", "hierarchical")
+    txt = render_comm_plan(cp)
+    assert "topology node:4" in txt
+    assert "tier node" in txt and "tier device" in txt
+    rec = comm_plan_record(cp)
+    assert rec["topology"]["spec"] == TWO_TIER
+    assert set(rec["topology"]["tier_cost_s"]) >= {"node", "device"}
+    bd = tier_cost_breakdown(cp)
+    assert bd["node"] > 0 and bd["device"] > 0
+    # flat records keep the exact pre-topology schema (acceptance)
+    flat = fixed_config_plan(profs, LINK_PRESETS["fast_ici"], 32, "none",
+                             "ring")
+    assert "topology" not in comm_plan_record(flat)
+    assert "tier " not in render_comm_plan(flat)
