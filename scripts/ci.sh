@@ -47,6 +47,13 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 3 --batch 2 --seq 32 --shard-state --log-every 1
 
+  step "smoke: 3-step fused-wire train (int8_fused/ring, DESIGN.md §11)"
+  # the fused one-pass compressed wire in a REAL training loop: EF +
+  # quantize + pack in one kernel dispatch, fused dequant+accum decode
+  python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 3 --batch 2 --seq 32 --sync comm \
+      --compressor int8_fused --algo ring --log-every 1
+
   step "smoke: 3-step two-tier --topology --sync auto train"
   # the tiered network model (DESIGN.md §10): the planner prices every
   # phase per tier and must pick a tier-aware arm (hierarchical buckets

@@ -52,7 +52,8 @@ from repro.core.schedule import (LINK_PRESETS, LinkParams, PipelineAxis,
                                  RoundSchedule, StrategyPlan, Topology,
                                  fixed_config_plan, pipeline_arm,
                                  pipeline_placements, plan, plan_rounds,
-                                 profiles_from_grads, serial_round_plan)
+                                 profiles_from_grads, resolve_cost_table,
+                                 serial_round_plan)
 from repro.core.schedule.planner import FIXED_BASELINES, local_sgd_arm
 from repro.core.strategy import LocalSGDScheduler
 from repro.data import DataConfig, SyntheticPipeline
@@ -279,7 +280,8 @@ class TrainSession:
                   memory_budget_gb: Optional[float] = None,
                   pipeline_stages: Optional[int] = None,
                   micro_batches: Optional[int] = None,
-                  topology=None) -> StrategyPlan:
+                  topology=None,
+                  compression_costs=None) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
         per-bucket strategy × shard axis × parallelism axis), install the
         winning composite as this session's strategy.  ``scheduler`` pins
@@ -294,8 +296,15 @@ class TrainSession:
         replaces the flat link model with a tiered network — every arm is
         then priced per tier, the pipeline arms search axis placements,
         and the topology's world supersedes the deprecated ``plan_world``
-        (a disagreement warns and prefers the topology).  Stashes the
-        full decision record in ``self.planned`` for reporting."""
+        (a disagreement warns and prefers the topology).
+        ``compression_costs`` — a
+        :class:`~repro.core.schedule.cost.CompressionCostTable` or a path
+        to one recorded by ``benchmarks/bench_collectives.py
+        --write-compression-costs`` — replaces the analytic
+        compression-compute term with MEASURED per-compressor fits in
+        every arm (and in the fixed baselines, so the comparison stays
+        apples-to-apples).  Stashes the full decision record in
+        ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
         if topology is not None:
@@ -326,9 +335,12 @@ class TrainSession:
         if t_backward_s is None:
             t_backward_s = self.profile_backward()
         profiles = profiles_from_grads(self._params, t_backward_s)
+        cost_table = resolve_cost_table(compression_costs)
         kw: Dict[str, Any] = {}
         if candidates is not None:
             kw["candidates"] = candidates
+        if cost_table is not None:
+            kw["cost_table"] = cost_table
         t_bwd = sum(p.t_backward_s for p in profiles)
         pipe_axis = PipelineAxis(
             global_tokens=float(self.cfg.batch * self.cfg.seq),
@@ -413,11 +425,13 @@ class TrainSession:
 
         baselines = {
             name: fixed_config_plan(profiles, lp, world, comp, algo,
-                                    compressor_args=cargs)
+                                    compressor_args=cargs,
+                                    cost_table=cost_table)
             for name, (comp, algo, cargs) in FIXED_BASELINES.items()}
         self.planned = {"strategy_plan": best, "arms": arms,
                         "baselines": baselines,
-                        "t_backward_s": t_backward_s}
+                        "t_backward_s": t_backward_s,
+                        "cost_table": cost_table}
         return best
 
     def apply_micro_batching(self, micro_batches: int) -> bool:

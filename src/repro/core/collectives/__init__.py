@@ -5,6 +5,7 @@ from repro.core.collectives.api import (  # noqa: F401
 from repro.core.collectives.ring import (  # noqa: F401
     ring_all_gather_canonical, ring_allreduce, ring_reduce_scatter,
     ring_all_gather_chunks, ring_reduce_scatter_canonical)
+from repro.core.collectives.ring_fused import ring_fused_allreduce  # noqa: F401
 from repro.core.collectives.tree import tree_allreduce  # noqa: F401
 from repro.core.collectives.hierarchical import hierarchical_allreduce  # noqa: F401
 from repro.core.collectives.mesh2d import mesh2d_allreduce  # noqa: F401

@@ -19,11 +19,16 @@ from repro.core.collectives.mesh2d import mesh2d_allreduce
 from repro.core.collectives.ring import (ring_all_gather_canonical,
                                          ring_allreduce,
                                          ring_reduce_scatter_canonical)
+from repro.core.collectives.ring_fused import ring_fused_allreduce
 from repro.core.collectives.tree import tree_allreduce
 from repro.core.schedule.cost import (  # noqa: F401  (compat re-export)
     LINK_PRESETS, LinkParams, allreduce_cost_s)
 
-ALGOS = ("psum", "ring", "tree", "hierarchical", "mesh2d", "mesh2d_split")
+# ring_fused is the LOSSY compressed-ring prototype (int8 wire with per-hop
+# requantization, collectives/ring_fused.py) — every other algo sums
+# exactly; tolerance-sensitive callers special-case it.
+ALGOS = ("psum", "ring", "tree", "hierarchical", "mesh2d", "mesh2d_split",
+         "ring_fused")
 
 
 def axes_for_topology(topo) -> tuple:
@@ -65,6 +70,11 @@ def allreduce(x, algo: str, axes: Sequence[str]):
         # every outer axis, so the reduction covers the full world
         return hierarchical_allreduce(x, inner_axis=axes[0],
                                       outer_axis=axes[1:])
+    if algo == "ring_fused":
+        out = x
+        for ax in axes:
+            out = ring_fused_allreduce(out, ax)
+        return out
     if algo in ("mesh2d", "mesh2d_split"):
         if len(axes) == 1:
             return ring_allreduce(x, axes[0])

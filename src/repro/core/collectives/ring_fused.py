@@ -1,0 +1,117 @@
+"""Compressed ring allreduce with double-buffered compress/permute overlap
+(survey §4.1 × §3.2/§3.4 — the overlap chapter applied INSIDE the
+collective; prototype, DESIGN.md §11).
+
+Structure of one axis: the classic two-phase ring (``ring.py``), but every
+hop's payload is per-tile int8 + f32 scales (~4× fewer wire bytes), with
+re-quantization of the partial sums at each reduce-scatter hop:
+
+  reduce-scatter, step s:  quantize own outgoing chunk -> ppermute the
+                           (q, scales) payload -> dequantize + accumulate
+  all-gather:              quantize the completed chunk once; circulate the
+                           int8 payload p-1 hops; every rank (OWNER
+                           INCLUDED) dequantizes the same payload, so all
+                           ranks reconstruct identical values.
+
+DOUBLE BUFFERING: the flat buffer is split into ``streams`` independent
+sub-buffers whose per-step ops interleave in one loop.  Stream A's
+quantize/dequantize has no data dependency on stream B's ppermute in the
+same step, so the compiler (XLA/Mosaic) is free to overlap chunk i's
+compress with chunk i-1's permute — the survey's overlap schedule at the
+intra-collective level.  The schedule is expressed as op-level
+independence, not enforced; measured overlap is whatever the backend
+extracts (benchmarks/bench_collectives.py reports it).
+
+ERROR SEMANTICS: lossy.  Error feedback (when the executor pairs this
+algo with the ``int8_fused`` wire) corrects only the FIRST quantization —
+the sender's EF'd payload; the per-hop requantization error of partial
+sums is uncorrected (bounded by scale/254 per element per hop).
+Requantizing a freshly-dequantized tile is near-lossless (the tile's max
+realigns with scale), so at p=2 the wire degenerates to the plain
+compressed exchange.  Exactness-conformance wires therefore must not use
+this algo; the planner only pairs it with compressed candidates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _ring_perm(p):
+    return [(i, (i + 1) % p) for i in range(p)]
+
+
+def _pad_chunks(part, p: int):
+    n = part.shape[0]
+    m = -(-n // p)
+    return jnp.pad(part, (0, m * p - n)).reshape(p, m), n
+
+
+def ring_fused_allreduce(x, axis: str, *, tile: int = ops.TILE,
+                         streams: int = 2):
+    """Allreduce of ``x`` over one manual mesh axis on the compressed ring.
+    Returns the (lossy) sum, identical on every rank."""
+    p = jax.lax.axis_size(axis)
+    if p == 1:
+        return x
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    r = jax.lax.axis_index(axis)
+    perm = _ring_perm(p)
+
+    # independent sub-buffers (the double-buffer streams)
+    bounds = [round(n * i / streams) for i in range(streams + 1)]
+    parts = [flat[bounds[i]:bounds[i + 1]] for i in range(streams)
+             if bounds[i + 1] > bounds[i]]
+    accs, lens = [], []
+    for part in parts:
+        a, n0 = _pad_chunks(part, p)
+        accs.append(a)
+        lens.append(n0)
+
+    # phase 1 — reduce-scatter on the int8 wire.  All streams' encodes are
+    # issued before any stream's permute result is consumed: each step's
+    # compress is independent of the other stream's in-flight permute.
+    for s in range(p - 1):
+        sends = []
+        for a in accs:
+            val = jnp.take(a, (r - s) % p, axis=0)
+            sends.append(ops.quantize_tiles(val, tile=tile))
+        for t, (q, sc) in enumerate(sends):
+            qr = jax.lax.ppermute(q, axis, perm)
+            scr = jax.lax.ppermute(sc, axis, perm)
+            recv = ops.dequantize(qr, scr, tile=tile)
+            ri = (r - s - 1) % p
+            accs[t] = jax.lax.dynamic_update_index_in_dim(
+                accs[t],
+                jax.lax.dynamic_index_in_dim(accs[t], ri, 0, False) + recv,
+                ri, 0)
+
+    # phase 2 — all-gather of the quantized completed chunks (rank r owns
+    # chunk (r+1)%p after p-1 reduce steps, like ring.py).  The owner
+    # dequantizes its OWN payload too: every rank must reconstruct the
+    # same values or replicas diverge.
+    cur = []
+    outs = []
+    for a in accs:
+        mine = jnp.take(a, (r + 1) % p, axis=0)
+        cur.append(ops.quantize_tiles(mine, tile=tile))
+        outs.append(jnp.zeros_like(a))
+    idx = (r + 1) % p
+    for t, (q, sc) in enumerate(cur):
+        outs[t] = jax.lax.dynamic_update_index_in_dim(
+            outs[t], ops.dequantize(q, sc, tile=tile), idx, 0)
+    for _ in range(p - 1):
+        nxt = [(jax.lax.ppermute(q, axis, perm),
+                jax.lax.ppermute(sc, axis, perm)) for q, sc in cur]
+        idx = (idx - 1) % p
+        for t, (q, sc) in enumerate(nxt):
+            outs[t] = jax.lax.dynamic_update_index_in_dim(
+                outs[t], ops.dequantize(q, sc, tile=tile), idx, 0)
+        cur = nxt
+
+    out = jnp.concatenate([o.reshape(-1)[:n0]
+                           for o, n0 in zip(outs, lens)])
+    return out.reshape(x.shape).astype(x.dtype)

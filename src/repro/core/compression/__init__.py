@@ -1,5 +1,6 @@
 from repro.core.compression.base import (  # noqa: F401
     Compressor, get_compressor, identity_compressor, REGISTRY)
-from repro.core.compression import quantization, sparsification, lowrank  # noqa: F401
+from repro.core.compression import (  # noqa: F401
+    fused, lowrank, quantization, sparsification)
 from repro.core.compression.error_feedback import (  # noqa: F401
     apply_with_feedback, init_error_state)

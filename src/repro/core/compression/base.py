@@ -31,6 +31,19 @@ class Compressor:
     payload_bits: Callable[[Tuple[int, ...]], int]
     aggregatable: bool = False                     # payloads sum correctly
     unbiased: bool = False                         # E[decompress] == g
+    # Fused hot-path hooks (DESIGN.md §11) — wired only by the fused
+    # compressors (compression/fused.py), None elsewhere.  When present,
+    # PlanExecutor dispatches to them instead of the decomposed
+    # EF-add -> compress -> decompress -> EF-update op chain:
+    #   fused_ef_compress(g, e, decay) -> (payload, meta, e_new)
+    #     one-pass error feedback + compress + residual update;
+    #   fused_decode_sum(gathered_payload, gathered_meta) -> sum
+    #     one-pass decode+accumulate of all ranks' payloads (leading
+    #     world axis on every gathered leaf).
+    # Both must be BIT-IDENTICAL (payload and residual) to the decomposed
+    # path under jit — the fused-wire conformance suites pin this.
+    fused_ef_compress: Optional[Callable[..., Tuple[Any, Any, Any]]] = None
+    fused_decode_sum: Optional[Callable[[Any, Any], jnp.ndarray]] = None
 
     def roundtrip(self, g, rng=None):
         payload, meta = self.compress(g, rng)

@@ -1,0 +1,105 @@
+"""Fused compressed wires backed by the Pallas one-pass kernels (§3.2,
+DESIGN.md §11).
+
+The historical compressors in ``quantization.py``/``sparsification.py``
+execute as separate XLA ops — EF add, quantize/mask, decompress, EF
+update — each a full HBM round-trip over the bucket.  The two wires here
+carry the SAME information but dispatch to the fused kernels in
+``repro.kernels`` (compiled Pallas on TPU, the one-pass jnp lowering
+elsewhere; ``kernels/dispatch.py``):
+
+  * ``int8_fused`` — per-TILE int8 + f32 scales (the Pallas-native wire
+    format, tighter than per-tensor int8).  Gather-pattern: the (q,
+    scales) payload all-gathers and every rank runs ONE fused
+    dequantize+accumulate pass over all payloads (``ops.dequant_accum``)
+    — exactly one read per payload and one dense write per direction.
+  * ``topk_fused`` — per-tile bisection top-k of the EF-corrected
+    gradient (DGC-style, same semantics as the ``topk_mask`` kernel).
+    The payload is the masked dense buffer, so it is aggregatable: masked
+    tiles sum correctly under any reduce collective.
+
+The UNFUSED methods (``compress``/``decompress``) execute the identical
+op sequence as decomposed jnp (``kernels/ref.py``) — they are the
+reference path the conformance suite pins the fused hooks against
+(bit-identical payloads and EF residuals under jit), and what runs when a
+``BucketPlan`` sets ``fused=False``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressor, register
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def _flat32(g):
+    return g.reshape(-1).astype(jnp.float32)
+
+
+@register("int8_fused")
+def int8_fused_compressor(tile: int = ops.TILE) -> Compressor:
+    """Per-tile int8 against max|corrected| per tile.  Payload
+    ``(q int8 (n,), scales f32 (ceil(n/tile),))``; meta is the original
+    leaf shape (static)."""
+    tile = int(tile)
+
+    def compress(g, rng=None):
+        q, scales = kref.quantize_tiles_ref(_flat32(g), tile=tile)
+        return (q, scales), tuple(g.shape)
+
+    def decompress(payload, shape):
+        q, scales = payload
+        return kref.dequantize_ref(q, scales, tile=tile).reshape(shape)
+
+    def fused_ef_compress(g, e, decay):
+        q, e_new, scales = ops.quantize_ef(_flat32(g), _flat32(e),
+                                           decay=float(decay), tile=tile)
+        return (q, scales), tuple(g.shape), e_new.reshape(g.shape)
+
+    def fused_decode_sum(gathered_payload, shape):
+        q, scales = gathered_payload        # (w, n) int8, (w, ntiles) f32
+        return ops.dequant_accum(q, scales, tile=tile).reshape(shape)
+
+    def payload_bits(shape):
+        n = int(np.prod(shape))
+        return n * 8 + 32 * int(-(-n // tile))
+
+    return Compressor("int8_fused", compress, decompress, payload_bits,
+                      aggregatable=False, unbiased=False,
+                      fused_ef_compress=fused_ef_compress,
+                      fused_decode_sum=fused_decode_sum)
+
+
+@register("topk_fused")
+def topk_fused_compressor(ratio: float = 0.01, tile: int = ops.TILE,
+                          iters: int = 16) -> Compressor:
+    """Per-tile bisection top-k (the topk_mask kernel's semantics, NOT the
+    exact sort oracle).  The payload keeps the kept values dense-in-place,
+    so payloads from different ranks sum correctly (aggregatable) while
+    ``payload_bits`` reports the survey's (value, index) wire size."""
+    ratio, tile, iters = float(ratio), int(tile), int(iters)
+
+    def compress(g, rng=None):
+        y = kref.topk_mask_bisect_ref(_flat32(g), ratio=ratio, tile=tile,
+                                      iters=iters)
+        return y.reshape(g.shape), None
+
+    def decompress(payload, meta):
+        return payload
+
+    def fused_ef_compress(g, e, decay):
+        y, e_new = ops.topk_ef(_flat32(g), _flat32(e), ratio=ratio,
+                               tile=tile, iters=iters, decay=float(decay))
+        return y.reshape(g.shape), None, e_new.reshape(g.shape)
+
+    def payload_bits(shape):
+        n = int(np.prod(shape))
+        k = max(1, int(tile * ratio))
+        return min(n, int(-(-n // tile)) * k) * 64   # f32 value + i32 index
+
+    return Compressor("topk_fused", compress, decompress, payload_bits,
+                      aggregatable=True, unbiased=False,
+                      fused_ef_compress=fused_ef_compress)

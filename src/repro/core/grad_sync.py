@@ -406,15 +406,14 @@ class PlanExecutor:
                 buf = (self._pack_bucket(leaves, b.leaves) if b.pack
                        else leaves[b.leaves[0]].astype(jnp.float32))
                 if comp.aggregatable:
-                    # like _sync_buffer, but the dense decompressed sum
-                    # goes out as a reduce-scatter instead of an allreduce
-                    use_ef = self._bucket_uses_ef(b)
-                    corrected = (buf + b.ef_decay * errors[j] if use_ef
-                                 else buf)
-                    payload, meta = comp.compress(corrected, rngs[j])
-                    g_hat = comp.decompress(payload, meta)
-                    new_errors.append(corrected - g_hat if use_ef
-                                      else errors[j])
+                    # like _sync_buffer (fused hook included), but the
+                    # dense decompressed sum goes out as a reduce-scatter
+                    # instead of an allreduce
+                    payload, meta, new_e, g_hat = self._compress_with_ef(
+                        buf, errors[j], rngs[j], b, comp)
+                    if g_hat is None:
+                        g_hat = comp.decompress(payload, meta)
+                    new_errors.append(new_e)
                     shards.append(
                         reduce_scatter(g_hat.reshape(-1), b.algo, self.axes)
                         / denom)
@@ -436,17 +435,39 @@ class PlanExecutor:
             new_state["q"] = new_qs
         return shards, new_state
 
-    # EF + compress + exchange of one flat/leaf-shaped f32 buffer.
-    def _sync_buffer(self, buf, e, rng, b: BucketPlan, comp, denom):
+    # EF + compress of one flat/leaf-shaped f32 buffer.  Dispatches to the
+    # compressor's fused one-pass hook (Pallas kernels, DESIGN.md §11)
+    # when the plan allows it; otherwise runs the decomposed reference op
+    # chain.  Both are bit-identical in payload and residual under jit —
+    # the fused-wire conformance suites pin this.  Returns
+    # (payload, meta, new_e, g_hat) with g_hat=None on the fused path
+    # (the local reconstruction was folded into the kernel's residual).
+    def _compress_with_ef(self, buf, e, rng, b: BucketPlan, comp):
         use_ef = self._bucket_uses_ef(b)
+        if b.fused and use_ef and comp.fused_ef_compress is not None:
+            payload, meta, new_e = comp.fused_ef_compress(buf, e, b.ef_decay)
+            return payload, meta, new_e, None
         corrected = buf + b.ef_decay * e if use_ef else buf
         payload, meta = comp.compress(corrected, rng)
         g_hat = comp.decompress(payload, meta)
         new_e = corrected - g_hat if use_ef else e
-        if comp.aggregatable:
-            synced = allreduce(g_hat, b.algo, self.axes) / denom
+        return payload, meta, new_e, g_hat
+
+    # EF + compress + exchange of one flat/leaf-shaped f32 buffer.
+    def _sync_buffer(self, buf, e, rng, b: BucketPlan, comp, denom):
+        payload, meta, new_e, g_hat = self._compress_with_ef(
+            buf, e, rng, b, comp)
+        if comp.aggregatable or b.algo == "ring_fused":
+            # ring_fused needs a dense f32 operand (it re-compresses per
+            # hop), so gather-pattern wires also reconstruct locally and
+            # ride the compressed ring instead of the payload all-gather.
+            if g_hat is None:
+                g_hat = comp.decompress(payload, meta)
+            synced = allreduce(g_hat.astype(jnp.float32), b.algo,
+                               self.axes) / denom
         else:
-            synced = self._gather_mean(comp, payload, meta, g_hat, denom)
+            synced = self._gather_mean(comp, payload, meta, buf.shape,
+                                       denom, fused=b.fused)
         return new_e, synced
 
     # PowerSGD: allreduce the (P, Q) factors directly (aggregatable).
@@ -462,11 +483,17 @@ class PlanExecutor:
         approx = comp.decompress((p_f, q_f), (shape, None))
         return corrected - approx, q_f, approx.astype(g.dtype)
 
-    def _gather_mean(self, comp, payload, meta, g_hat, denom):
+    def _gather_mean(self, comp, payload, meta, shape, denom,
+                     fused: bool = True):
         """All-gather the compact payloads over the data axes; every rank
         decompresses and averages (1-bit SGD / DGC wire pattern).  Payload
         pytrees are gathered leaf-wise so the wire carries int8/indices,
-        not dense f32.  Static metadata (e.g. shapes) passes through."""
+        not dense f32.  Static metadata (e.g. shapes) passes through.
+
+        When the compressor provides ``fused_decode_sum`` (and the bucket
+        runs fused), the per-rank decompress loop collapses into ONE
+        fused dequantize+accumulate kernel pass over the gathered
+        payloads — each payload read once, the dense sum written once."""
         def is_arr(x):
             return isinstance(x, (jax.Array, jax.core.Tracer))
 
@@ -485,6 +512,10 @@ class PlanExecutor:
         gathered_meta = jax.tree.map(gather, meta) if meta is not None else None
         world = self._world()
 
+        if fused and comp.fused_decode_sum is not None:
+            return comp.fused_decode_sum(gathered_payload,
+                                         gathered_meta) / denom
+
         def one(i):
             pl = jax.tree.map(lambda x: index(x, i), gathered_payload)
             mt = (jax.tree.map(lambda x: index(x, i), gathered_meta)
@@ -493,7 +524,7 @@ class PlanExecutor:
 
         total = jax.lax.fori_loop(
             0, world, lambda i, acc: acc + one(i),
-            jnp.zeros(g_hat.shape, jnp.float32))
+            jnp.zeros(shape, jnp.float32))
         return total / denom
 
 

@@ -1,8 +1,10 @@
 from repro.core.schedule.cost import (  # noqa: F401
-    LINK_PRESETS, LinkParams, allgather_cost_s, allreduce_cost_s,
-    allreduce_phases, bucket_sync_cost_s, bucket_sync_phases,
-    compressed_wire_bytes, p2p_cost_s, reduce_scatter_cost_s,
-    shard_gather_cost_s)
+    LINK_PRESETS, CompressionCostTable, LinkParams, allgather_cost_s,
+    allreduce_cost_s, allreduce_phases, bucket_sync_cost_s,
+    bucket_sync_phases, compressed_wire_bytes, p2p_cost_s,
+    reduce_scatter_cost_s, shard_gather_cost_s)
+from repro.core.schedule.calibration import (  # noqa: F401
+    CALIBRATION_SET, measure_compression_costs, resolve_cost_table)
 from repro.core.schedule.topology import (  # noqa: F401
     TOPOLOGY_PRESETS, Tier, Topology, as_topology)
 from repro.core.schedule.perf_model import (  # noqa: F401

@@ -1,0 +1,131 @@
+"""Measured compression-compute calibration (DESIGN.md §11).
+
+The α-β cost model prices the wire from link parameters, but until now the
+compress/decompress COMPUTE term was a fixed analytic constant
+(``cost.COMPRESS_PROC_BW`` × a pass count).  This module measures it: time
+each compressor's encode and decode on the backend actually running, fit
+``seconds = n_bytes / bw + c0`` per stage, and hand the planner a
+:class:`~repro.core.schedule.cost.CompressionCostTable` — the first
+MEASURED input into ``plan_auto``.  ``benchmarks/bench_collectives.py
+--write-compression-costs PATH`` records the table;
+``launch/train.py --compression-costs PATH`` (or
+``plan_auto(compression_costs=...)``) feeds it back.
+
+Encode times the fused one-pass hook when the compressor has one (that is
+the op the executor actually runs), else the decomposed ``compress``.
+Decode times ``fused_decode_sum`` over ``cal_world`` stacked payloads for
+gather-pattern wires (matching how ``cost._compute_cost_s`` rescales the
+fit to the plan's world), else a single-payload ``decompress``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule.cost import CompressionCostTable
+
+# (compressor, args) pairs calibrated by default — the compressed members
+# of planner.DEFAULT_CANDIDATES (keys in the table are compressor NAMES:
+# the cost model does not distinguish arg variants of one compressor).
+CALIBRATION_SET: Tuple[Tuple[str, Tuple[Tuple[str, Any], ...]], ...] = (
+    ("int8", ()),
+    ("qsgd", (("levels", 127),)),
+    ("topk", (("ratio", 0.01),)),
+    ("sign", ()),
+    ("int8_fused", ()),
+    ("topk_fused", (("ratio", 0.01),)),
+)
+
+# Buffer sizes (f32 elements) the linear fit is anchored on: 1 MiB and
+# 8 MiB dense — inside the bucket range the planner actually prices.
+CAL_SIZES: Tuple[int, ...] = (1 << 18, 1 << 21)
+
+CAL_WORLD = 8
+
+
+def _time_best_s(fn, *args, repeats: int = 3) -> float:
+    """min-of-N wall time of an already-jitted ``fn`` (first call compiles
+    and is discarded)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fit(points: Sequence[Tuple[float, float]]) -> Tuple[float, float]:
+    """(bw_bytes_per_s, overhead_s) from (n_bytes, seconds) samples: the
+    two-point secant, clamped to a through-origin model when timing noise
+    makes the secant non-increasing."""
+    pts = sorted(points)
+    (b1, t1), (b2, t2) = pts[0], pts[-1]
+    slope = (t2 - t1) / (b2 - b1) if b2 > b1 else 0.0
+    if slope <= 0.0:
+        slope = t2 / b2
+        return 1.0 / max(slope, 1e-15), 0.0
+    return 1.0 / slope, max(t1 - b1 * slope, 0.0)
+
+
+def measure_compression_costs(
+        compressors: Sequence[Tuple[str, Tuple[Tuple[str, Any], ...]]]
+        = CALIBRATION_SET,
+        sizes: Sequence[int] = CAL_SIZES,
+        cal_world: int = CAL_WORLD,
+        repeats: int = 3,
+        seed: int = 0) -> CompressionCostTable:
+    """Time encode/decode per compressor at each size and fit the linear
+    per-stage model.  Returns the table ``bucket_sync_phases`` consumes."""
+    from repro.core.compression import get_compressor
+
+    entries = []
+    for name, args in compressors:
+        comp = get_compressor(name, **dict(args))
+        enc_pts, dec_pts = [], []
+        for i, n in enumerate(sizes):
+            key = jax.random.PRNGKey(seed + i)
+            g = jax.random.normal(key, (int(n),), dtype=jnp.float32)
+            e = jnp.zeros_like(g)
+            n_bytes = float(n) * 4.0
+
+            if comp.fused_ef_compress is not None:
+                enc = jax.jit(lambda g, e, c=comp:
+                              c.fused_ef_compress(g, e, 1.0))
+                payload, meta, _ = comp.fused_ef_compress(g, e, 1.0)
+                enc_pts.append((n_bytes, _time_best_s(enc, g, e,
+                                                      repeats=repeats)))
+            else:
+                enc = jax.jit(lambda g, c=comp: c.compress(g, None))
+                payload, meta = comp.compress(g, None)
+                enc_pts.append((n_bytes, _time_best_s(enc, g,
+                                                      repeats=repeats)))
+
+            if comp.fused_decode_sum is not None:
+                gathered = jax.tree.map(
+                    lambda a: jnp.stack([a] * int(cal_world)), payload)
+                dec = jax.jit(lambda p, c=comp, m=meta:
+                              c.fused_decode_sum(p, m))
+                dec_pts.append((n_bytes, _time_best_s(dec, gathered,
+                                                      repeats=repeats)))
+            else:
+                dec = jax.jit(lambda p, c=comp, m=meta: c.decompress(p, m))
+                dec_pts.append((n_bytes, _time_best_s(dec, payload,
+                                                      repeats=repeats)))
+        bw, c0 = _fit(enc_pts)
+        entries.append((f"{name}/encode", bw, c0))
+        bw, c0 = _fit(dec_pts)
+        entries.append((f"{name}/decode", bw, c0))
+    return CompressionCostTable(entries=tuple(entries),
+                                cal_world=int(cal_world))
+
+
+def resolve_cost_table(spec) -> Optional[CompressionCostTable]:
+    """Coerce a ``compression_costs`` argument — ``None``, an existing
+    table, or a path to a recorded JSON — into a table."""
+    if spec is None or isinstance(spec, CompressionCostTable):
+        return spec
+    return CompressionCostTable.load(spec)

@@ -220,11 +220,75 @@ COMPRESS_PROC_BW = 30e9
 # device compute, not wire time on any tier.
 COMPUTE_PHASE = "compute"
 
+# Per-tile f32 scale overhead of the fused int8 wire (DESIGN.md §11) —
+# shared with the ring_fused hop pricing below.
+FUSED_TILE = 8 * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionCostTable:
+    """MEASURED compression-compute costs — the first measured input into
+    the planner (Zhang et al. 2020: modeled α-β costs diverge from
+    measurement exactly where per-step compute overheads dominate).
+
+    ``entries`` holds linear fits ``seconds = n_bytes / bw + c0`` keyed
+    ``"{compressor}/{encode|decode}"`` against the DENSE bucket bytes:
+
+      * ``encode`` — the full send-side pass (EF add + compress + residual
+        update for EF wires);
+      * ``decode`` — the full receive-side pass at the calibration world
+        size (``calibration.CAL_WORLD``): one decompress for aggregatable
+        wires, the decompress+accumulate over all gathered payloads for
+        gather-pattern wires (scaled linearly in p when priced at other
+        world sizes).
+
+    Produced by ``schedule.calibration.measure_compression_costs`` (and
+    recorded by ``benchmarks/bench_collectives.py``); consumed by
+    :func:`bucket_sync_phases` via the ``cost_table`` argument, replacing
+    the hand-waved ``COMPRESS_PROC_BW`` term for compressors it covers.
+    """
+    entries: Tuple[Tuple[str, float, float], ...] = ()
+    cal_world: int = 8
+
+    def stage_s(self, compressor: str, stage: str,
+                n_bytes: float) -> Optional[float]:
+        key = f"{compressor}/{stage}"
+        for k, bw, c0 in self.entries:
+            if k == key:
+                return float(n_bytes) / bw + c0
+        return None
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"cal_world": self.cal_world,
+                "entries": [{"key": k, "bw_bytes_per_s": bw,
+                             "overhead_s": c0}
+                            for k, bw, c0 in self.entries]}
+
+    @classmethod
+    def from_json(cls, obj: Dict[str, Any]) -> "CompressionCostTable":
+        return cls(entries=tuple(
+            (e["key"], float(e["bw_bytes_per_s"]), float(e["overhead_s"]))
+            for e in obj.get("entries", [])),
+            cal_world=int(obj.get("cal_world", 8)))
+
+    def save(self, path: str) -> None:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "CompressionCostTable":
+        import json
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
 
 def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
                        algo: str, n_bytes: float, p: int, net: Net,
                        proc_bw: float = COMPRESS_PROC_BW,
-                       shard_state: bool = False) -> float:
+                       shard_state: bool = False,
+                       cost_table: Optional[CompressionCostTable] = None
+                       ) -> float:
     """Predicted wall time to synchronise ONE fused gradient bucket of
     ``n_bytes`` (dense f32) across ``p`` ranks with the given strategy.
 
@@ -250,22 +314,63 @@ def bucket_sync_cost_s(compressor: str, compressor_args: Tuple[Tuple[str, Any], 
     report always reconcile with the modeled totals exactly."""
     return sum((s for _, s in bucket_sync_phases(
         compressor, compressor_args, algo, n_bytes, p, net,
-        proc_bw=proc_bw, shard_state=shard_state)), 0.0)
+        proc_bw=proc_bw, shard_state=shard_state,
+        cost_table=cost_table)), 0.0)
+
+
+def _compute_cost_s(compressor: str, n_bytes: float, p: int,
+                    aggregatable: bool, c_bytes: float, proc_bw: float,
+                    cost_table: Optional[CompressionCostTable]) -> float:
+    """The compress/decompress compute term of one bucket sync: the
+    MEASURED fit when ``cost_table`` covers the compressor (encode +
+    decode, the latter scaled linearly from the calibration world to p
+    for gather-pattern wires whose decode walks all p payloads), else the
+    analytic ``COMPRESS_PROC_BW`` pass-count model."""
+    if cost_table is not None:
+        enc = cost_table.stage_s(compressor, "encode", n_bytes)
+        dec = cost_table.stage_s(compressor, "decode", n_bytes)
+        if enc is not None and dec is not None:
+            if not aggregatable:
+                dec = dec * (p / float(max(cost_table.cal_world, 1)))
+            return enc + dec
+    if aggregatable:
+        return 2 * n_bytes / proc_bw
+    return (n_bytes + p * c_bytes) / proc_bw
 
 
 def bucket_sync_phases(compressor: str,
                        compressor_args: Tuple[Tuple[str, Any], ...],
                        algo: str, n_bytes: float, p: int, net: Net,
                        proc_bw: float = COMPRESS_PROC_BW,
-                       shard_state: bool = False
+                       shard_state: bool = False,
+                       cost_table: Optional[CompressionCostTable] = None
                        ) -> List[Tuple[str, float]]:
     """Per-tier breakdown of :func:`bucket_sync_cost_s` — one
     ``(tier_name, seconds)`` entry per wire phase plus a ``"compute"``
     entry for compress/decompress time.  Feeds the per-tier rows of the
-    plan report and the plan record (DESIGN.md §10)."""
+    plan report and the plan record (DESIGN.md §10).
+
+    ``cost_table`` (a :class:`CompressionCostTable`) replaces the analytic
+    ``proc_bw`` compute term with measured per-compressor fits — the
+    planner's first measured input (``plan_auto(compression_costs=...)``).
+    """
     if p <= 1:
         return []
     topo = as_topology(net, p)
+    if algo == "ring_fused":
+        # Compressed ring (collectives/ring_fused.py): the ring's wire
+        # phases at the int8 payload size (~n/4 + per-tile scales, per-hop
+        # requantization included in the wire bytes), with the per-hop
+        # compress/decompress OVERLAPPED against the permutes by the
+        # double-buffered schedule — the compute term charges only the
+        # pipeline fill (1/p of the bucket's encode+decode), measured
+        # from the int8_fused fits when a cost table is supplied.
+        n_elems = max(int(n_bytes // 4), 1)
+        ring_bytes = n_elems * 1.0 + 4.0 * float(-(-n_elems // FUSED_TILE))
+        phases = allreduce_phases("ring", ring_bytes, p, net)
+        fill = _compute_cost_s("int8_fused", n_bytes, p, True, ring_bytes,
+                               proc_bw, cost_table) / p
+        return phases + [(COMPUTE_PHASE, fill)]
     if compressor == "none":
         if shard_state:
             # reduce-scatter = the ring reduce half, on the ring's tier
@@ -276,8 +381,10 @@ def bucket_sync_phases(compressor: str,
     comp = get_compressor(compressor, **dict(compressor_args))
     n_elems = int(n_bytes // 4)
     c_bytes = comp.payload_bits((max(n_elems, 1),)) / 8.0
+    compute = _compute_cost_s(compressor, n_bytes, p, comp.aggregatable,
+                              c_bytes, proc_bw, cost_table)
     if comp.aggregatable:
         return (allreduce_phases(algo, c_bytes, p, net)
-                + [(COMPUTE_PHASE, 2 * n_bytes / proc_bw)])
+                + [(COMPUTE_PHASE, compute)])
     return [(topo.bottleneck(c_bytes).name, allgather_cost_s(c_bytes, p, net)),
-            (COMPUTE_PHASE, (n_bytes + p * c_bytes) / proc_bw)]
+            (COMPUTE_PHASE, compute)]

@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.schedule.cost import (LinkParams, bucket_sync_cost_s,
+from repro.core.schedule.cost import (CompressionCostTable, LinkParams,
+                                      bucket_sync_cost_s,
                                       shard_gather_cost_s)
 from repro.core.schedule.perf_model import LayerProfile
 from repro.core.schedule.topology import Topology, as_topology
@@ -77,6 +78,12 @@ DEFAULT_CANDIDATES: Tuple[Candidate, ...] = (
     Candidate("qsgd", (("levels", 127),), "tree"),
     Candidate("topk", (("ratio", 0.01),), "ring"),
     Candidate("sign", (), "ring"),
+    # fused Pallas wires (DESIGN.md §11): the same bits as int8/topk but
+    # one kernel pass per direction; int8_fused/ring_fused additionally
+    # overlaps per-hop compression with the permutes inside the ring
+    Candidate("int8_fused", (), "ring"),
+    Candidate("int8_fused", (), "ring_fused"),
+    Candidate("topk_fused", (("ratio", 0.01),), "ring"),
 )
 
 # The NON-tier-aware traversals: what a flat ring / XLA allreduce can do
@@ -105,6 +112,11 @@ class BucketPlan:
     pack: bool = True
     error_feedback: bool = True
     ef_decay: float = 1.0
+    # Dispatch to the compressor's fused one-pass kernels when it has them
+    # (compression/fused.py; DESIGN.md §11).  False forces the decomposed
+    # reference op chain — the comparison arm of the fused-vs-unfused
+    # bit-trajectory checks.  No-op for compressors without fused hooks.
+    fused: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,10 +178,12 @@ def profiles_from_grads(grads, t_backward_s: float) -> List[LayerProfile]:
 # ---------------------------------------------------------------------------
 
 def _bucket_cost_s(b: BucketPlan, world: int, link,
-                   shard_state: bool = False) -> float:
+                   shard_state: bool = False,
+                   cost_table: Optional[CompressionCostTable] = None
+                   ) -> float:
     return bucket_sync_cost_s(b.compressor, b.compressor_args, b.algo,
                               b.bucket_bytes, world, link,
-                              shard_state=shard_state)
+                              shard_state=shard_state, cost_table=cost_table)
 
 
 def shard_gather_tail_s(plan: CommPlan, link,
@@ -184,7 +198,8 @@ def shard_gather_tail_s(plan: CommPlan, link,
 
 
 def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
-                link, world: int) -> float:
+                link, world: int,
+                cost_table: Optional[CompressionCostTable] = None) -> float:
     """Simulated iteration time of ``plan`` on one shared link.
 
     Backward produces leaf gradients last-layer-first (WFBP); a bucket is
@@ -208,7 +223,8 @@ def plan_cost_s(plan: CommPlan, layers: Sequence[LayerProfile],
     for ready, j in events:
         start = max(ready, link_free)
         link_free = start + _bucket_cost_s(plan.buckets[j], world, link,
-                                           plan.shard_state)
+                                           plan.shard_state,
+                                           cost_table=cost_table)
     base = max(t_total, link_free)
     if plan.shard_state:
         base += shard_gather_tail_s(plan, link, world)
@@ -273,7 +289,9 @@ def _usable_candidates(candidates: Sequence[Candidate], world: int,
 
 def _pick_candidate(n_bytes: float, world: int, link,
                     candidates: Sequence[Candidate],
-                    dense_small_bytes: float) -> Tuple[Candidate, float]:
+                    dense_small_bytes: float,
+                    cost_table: Optional[CompressionCostTable] = None
+                    ) -> Tuple[Candidate, float]:
     """Cheapest strategy for one bucket; small/latency-bound buckets fall
     back to dense (compression cannot help a latency-bound message and its
     bias is pure loss there)."""
@@ -284,7 +302,8 @@ def _pick_candidate(n_bytes: float, world: int, link,
     best, best_cost = None, float("inf")
     for c in pool:
         cost = bucket_sync_cost_s(c.compressor, c.compressor_args, c.algo,
-                                  n_bytes, world, link)
+                                  n_bytes, world, link,
+                                  cost_table=cost_table)
         if cost < best_cost:
             best, best_cost = c, cost
     return best, best_cost
@@ -294,7 +313,8 @@ def plan(layer_profiles: Sequence[LayerProfile], link, world: int,
          candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
          bucket_grid: Sequence[int] = BUCKET_GRID,
          dense_small_bytes: float = DENSE_SMALL_BYTES,
-         mean: bool = True, shard_state: bool = False) -> CommPlan:
+         mean: bool = True, shard_state: bool = False,
+         cost_table: Optional[CompressionCostTable] = None) -> CommPlan:
     """Search (compressor × algo × fusion granularity) per bucket.
 
     ``layer_profiles`` must be in leaf (tree) order — index i is flattened
@@ -304,6 +324,10 @@ def plan(layer_profiles: Sequence[LayerProfile], link, world: int,
     ``shard_state`` prices (and marks) the sharded-DP execution mode.
     ``link`` may be a tiered :class:`Topology`; candidates that cannot
     execute on it (tree on non-power-of-two axes) are filtered up front.
+    ``cost_table`` replaces the analytic compression-compute term with
+    MEASURED per-compressor encode/decode fits (``schedule/calibration.py``,
+    recorded by ``benchmarks/bench_collectives.py --write-compression-costs``)
+    — the planner's first measured input.
     """
     if world <= 1:
         # Degenerate world: communication is free; one dense bucket.
@@ -320,7 +344,8 @@ def plan(layer_profiles: Sequence[LayerProfile], link, world: int,
 
     def consider(p: CommPlan):
         nonlocal best_plan
-        t = plan_cost_s(p, layer_profiles, link, world)
+        t = plan_cost_s(p, layer_profiles, link, world,
+                        cost_table=cost_table)
         if best_plan is None or t < best_plan.modeled_step_s:
             best_plan = dataclasses.replace(p, modeled_step_s=t)
 
@@ -333,7 +358,8 @@ def plan(layer_profiles: Sequence[LayerProfile], link, world: int,
         bps = []
         for leaves, n_bytes in zip(bucket_leaves, sizes):
             cand, _ = _pick_candidate(n_bytes, world, link, candidates,
-                                      dense_small_bytes)
+                                      dense_small_bytes,
+                                      cost_table=cost_table)
             bps.append(BucketPlan(
                 leaves=leaves, compressor=cand.compressor,
                 compressor_args=cand.compressor_args, algo=cand.algo,
@@ -472,7 +498,9 @@ def serial_round_plan(layer_profiles: Sequence[LayerProfile],
                       candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                       bucket_grid: Sequence[int] = BUCKET_GRID,
                       dense_small_bytes: float = DENSE_SMALL_BYTES,
-                      mean: bool = True) -> CommPlan:
+                      mean: bool = True,
+                      cost_table: Optional[CompressionCostTable] = None
+                      ) -> CommPlan:
     """Per-bucket plan for one UNOVERLAPPED reduce round (a local-SGD
     parameter-averaging round runs at a barrier after the optimizer step, so
     nothing hides it): minimize the serial sum of bucket costs instead of
@@ -491,7 +519,8 @@ def serial_round_plan(layer_profiles: Sequence[LayerProfile],
 
     def consider(bps) -> None:
         nonlocal best
-        total = sum(_bucket_cost_s(b, world, link) for b in bps)
+        total = sum(_bucket_cost_s(b, world, link, cost_table=cost_table)
+                    for b in bps)
         if best is None or total < best.modeled_step_s:
             best = CommPlan(buckets=tuple(bps), mean=mean,
                             modeled_step_s=total, world=world, link=link)
@@ -503,7 +532,8 @@ def serial_round_plan(layer_profiles: Sequence[LayerProfile],
         greedy = []
         for leaves, n_bytes in zip(bucket_leaves, sizes):
             cand, _ = _pick_candidate(n_bytes, world, link, candidates,
-                                      dense_small_bytes)
+                                      dense_small_bytes,
+                                      cost_table=cost_table)
             greedy.append(BucketPlan(
                 leaves=leaves, compressor=cand.compressor,
                 compressor_args=cand.compressor_args, algo=cand.algo,
@@ -594,7 +624,9 @@ def pipeline_dp_plan(layer_profiles: Sequence[LayerProfile],
                      bucket_grid: Sequence[int] = BUCKET_GRID,
                      dense_small_bytes: float = DENSE_SMALL_BYTES,
                      mean: bool = True,
-                     dp_net=None) -> Tuple[CommPlan, List[float]]:
+                     dp_net=None,
+                     cost_table: Optional[CompressionCostTable] = None
+                     ) -> Tuple[CommPlan, List[float]]:
     """The M-independent half of a pipeline arm: balanced stage cuts plus
     the overlap-planned DP edge of the HEAVIEST stage (its leaves over
     world/S replicas).  Returns ``(dp_plan, per_stage_bytes)`` so
@@ -627,7 +659,8 @@ def pipeline_dp_plan(layer_profiles: Sequence[LayerProfile],
                         grad_bytes=l.grad_bytes) for l in sub]
     cp = plan(sub, dp_net if dp_net is not None else link, world // S,
               candidates=candidates, bucket_grid=bucket_grid,
-              dense_small_bytes=dense_small_bytes, mean=mean)
+              dense_small_bytes=dense_small_bytes, mean=mean,
+              cost_table=cost_table)
     return cp, per_stage
 
 
@@ -640,7 +673,8 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link,
                  mean: bool = True, opt_name: str = "adam",
                  opt_moments: Optional[float] = None,
                  dp_plan: Optional[Tuple[CommPlan, List[float]]] = None,
-                 placement: Optional[Tuple[str, Any, Any]] = None
+                 placement: Optional[Tuple[str, Any, Any]] = None,
+                 cost_table: Optional[CompressionCostTable] = None
                  ) -> StrategyPlan:
     """Price one pipeline(S, M) composite on a pipe(S) × data(world/S) mesh.
 
@@ -687,7 +721,7 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link,
         dp_plan = pipeline_dp_plan(
             layer_profiles, link, world, S, candidates=candidates,
             bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
-            mean=mean, dp_net=dp_net)
+            mean=mean, dp_net=dp_net, cost_table=cost_table)
     cp, per_stage = dp_plan
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
     bub = bubble_fraction(S, M)
@@ -700,7 +734,8 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link,
         else opt_moments
     return StrategyPlan(
         schedule=RoundSchedule(), comm=cp, modeled_step_s=modeled,
-        round_cost_s=sum(_bucket_cost_s(b, world // S, dp_net)
+        round_cost_s=sum(_bucket_cost_s(b, world // S, dp_net,
+                                        cost_table=cost_table)
                          for b in cp.buckets),
         t_backward_s=t_bwd, pipeline_stages=S, micro_batches=M, bubble=bub,
         pipe_p2p_s=p2p, pipe_tier=pipe_tier,
@@ -719,7 +754,8 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                 shard_grid: Sequence[bool] = (False, True),
                 memory_budget_bytes: Optional[float] = None,
                 opt_moments: Optional[float] = None,
-                pipeline: Optional[PipelineAxis] = None
+                pipeline: Optional[PipelineAxis] = None,
+                cost_table: Optional[CompressionCostTable] = None
                 ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
     """Search the rounds axis × the bits axis × the shard axis: every
     candidate composite is a (RoundSchedule, CommPlan) pair; returns
@@ -765,12 +801,13 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
         every = plan(layer_profiles, link, world, candidates=candidates,
                      bucket_grid=bucket_grid,
                      dense_small_bytes=dense_small_bytes, mean=mean,
-                     shard_state=shard)
+                     shard_state=shard, cost_table=cost_table)
         key = "every_step_sharded" if shard else "every_step"
         arms[key] = StrategyPlan(
             schedule=RoundSchedule(), comm=every,
             modeled_step_s=every.modeled_step_s,
-            round_cost_s=sum(_bucket_cost_s(b, world, link, shard)
+            round_cost_s=sum(_bucket_cost_s(b, world, link, shard,
+                                            cost_table=cost_table)
                              for b in every.buckets),
             t_backward_s=t_bwd, shard_state=shard,
             opt_mem_bytes=opt_state_bytes_per_worker(opt_name, pb, world,
@@ -780,7 +817,7 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                                candidates=candidates,
                                bucket_grid=bucket_grid,
                                dense_small_bytes=dense_small_bytes,
-                               mean=mean)
+                               mean=mean, cost_table=cost_table)
         mem = opt_state_bytes_per_worker(opt_name, pb, world, False,
                                          opt_moments)
         for tau in tau_grid:
@@ -801,14 +838,15 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                     layer_profiles, link, world, S, candidates=candidates,
                     bucket_grid=bucket_grid,
                     dense_small_bytes=dense_small_bytes, mean=mean,
-                    dp_net=placement[1])
+                    dp_net=placement[1], cost_table=cost_table)
                 for M in pipeline.micro_grid:
                     act = (pipeline.global_tokens / (world // S) / M
                            * pipeline.bytes_per_token)
                     arm = pipeline_arm(
                         layer_profiles, link, world, S, M, act,
                         opt_name=opt_name, opt_moments=opt_moments,
-                        dp_plan=dp, placement=placement)
+                        dp_plan=dp, placement=placement,
+                        cost_table=cost_table)
                     arms[arm.key] = arm
     pool = list(arms.values())
     if memory_budget_bytes is not None:
@@ -824,7 +862,9 @@ def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
                       compressor_args: Tuple[Tuple[str, Any], ...] = (),
                       bucket_bytes: int = 32 * 2**20,
                       mean: bool = True,
-                      shard_state: bool = False) -> CommPlan:
+                      shard_state: bool = False,
+                      cost_table: Optional[CompressionCostTable] = None
+                      ) -> CommPlan:
     """The degenerate plan a single global ``SyncConfig`` induces — every
     bucket gets the same strategy.  Used to score fixed baselines with the
     same simulator the planner optimises."""
@@ -838,4 +878,5 @@ def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
     p = CommPlan(buckets=tuple(bps), mean=mean, world=world, link=link,
                  shard_state=shard_state)
     return dataclasses.replace(
-        p, modeled_step_s=plan_cost_s(p, layer_profiles, link, world))
+        p, modeled_step_s=plan_cost_s(p, layer_profiles, link, world,
+                                      cost_table=cost_table))

@@ -1,0 +1,51 @@
+"""Backend dispatch for the Pallas kernels (the `_on_tpu` contract).
+
+Three implementations of every communication kernel exist:
+
+  * ``pallas``    — the compiled Pallas kernel (TPU; one HBM pass per tile);
+  * ``interpret`` — the same kernel body under the Pallas interpreter
+                    (correctness path on CPU/GPU; impractically slow at
+                    realistic sizes, so it is for tests, not the hot path);
+  * ``xla``       — a pure-jnp lowering of the identical op sequence
+                    (``kernels/ref.py``), bit-identical to the interpreted
+                    kernel under jit — the off-TPU hot path.
+
+``resolve_impl(None)`` picks ``pallas`` on TPU and ``xla`` elsewhere; the
+``REPRO_KERNELS_IMPL`` environment variable overrides the default (used by
+the parity tests and for forcing interpret mode off-TPU).  The historical
+bug this module fixes: the kernels defaulted to ``interpret=True``
+UNCONDITIONALLY, so even a TPU run executed the Python interpreter —
+``resolve_interpret(None)`` now follows the backend.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+IMPL_ENV = "REPRO_KERNELS_IMPL"
+IMPLS = ("pallas", "interpret", "xla")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` means "follow the backend": compiled on TPU, interpreter
+    elsewhere.  An explicit bool is honoured as given."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)
+
+
+def resolve_impl(impl=None) -> str:
+    """Resolve an implementation choice: explicit argument, then the
+    ``REPRO_KERNELS_IMPL`` env override, then the backend default."""
+    if impl is None:
+        impl = os.environ.get(IMPL_ENV, "").strip() or None
+    if impl is None:
+        impl = "pallas" if on_tpu() else "xla"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}; known: {IMPLS}")
+    return impl

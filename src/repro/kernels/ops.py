@@ -1,9 +1,24 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers for the Pallas kernels — THE hot-path entry
+points (`core/compression/fused.py` and `collectives/ring_fused.py` call
+these, never the kernels directly).
 
-On TPU the kernels compile natively; everywhere else (this CPU container,
-unit tests) they execute in interpret mode, which runs the same kernel body
-and BlockSpec pipeline in Python — the correctness contract the test suite
-enforces against the ref.py oracles.
+Every communication kernel dispatches over three implementations
+(``kernels/dispatch.py``):
+
+  * ``pallas``    — compiled Pallas (TPU default): one HBM pass per tile;
+  * ``interpret`` — the same kernel body under the Pallas interpreter —
+                    the correctness path tests pin against ref.py, far too
+                    slow for realistic sizes off-TPU;
+  * ``xla``       — the identical op sequence as vectorized jnp
+                    (``ref.py``'s reference lowerings), bit-identical to
+                    ``interpret`` under jit — the off-TPU default, so the
+                    CPU/GPU hot path is still a fused one-pass XLA fusion
+                    rather than the Python interpreter.
+
+``impl=None`` resolves to the backend default (``pallas`` on TPU, ``xla``
+elsewhere); the ``REPRO_KERNELS_IMPL`` env var overrides it.  The
+dispatch-flag regression tests pin that no caller hardcodes interpret
+mode (the historical ``interpret=True`` default bug).
 """
 from __future__ import annotations
 
@@ -12,13 +27,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as _ref
+from repro.kernels.dispatch import on_tpu, resolve_impl
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.quantize_ef import dequantize, quantize_ef_pallas
-from repro.kernels.topk_mask import topk_mask_pallas
+from repro.kernels.quantize_ef import (dequant_accum_pallas, dequantize,
+                                       quantize_ef_pallas, quantize_pallas)
+from repro.kernels.topk_mask import topk_ef_pallas, topk_mask_pallas
+
+TILE = 8 * 128
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return on_tpu()
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
@@ -30,16 +50,77 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                                   interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("decay", "tile"))
-def quantize_ef(g, e, *, decay: float = 1.0, tile: int = 8 * 128):
+@functools.partial(jax.jit, static_argnames=("decay", "tile", "impl"))
+def _quantize_ef(g, e, decay, tile, impl):
+    if impl == "xla":
+        return _ref.quantize_ef_ref(g, e, decay=decay, tile=tile)
     return quantize_ef_pallas(g, e, decay=decay, tile=tile,
-                              interpret=not _on_tpu())
+                              interpret=impl == "interpret")
 
 
-@functools.partial(jax.jit, static_argnames=("ratio", "tile", "iters"))
-def topk_mask(x, *, ratio: float = 0.01, tile: int = 8 * 128, iters: int = 16):
+def quantize_ef(g, e, *, decay: float = 1.0, tile: int = TILE, impl=None):
+    """Fused EF + per-tile int8 quantize: (q, e_new, scales)."""
+    return _quantize_ef(g, e, decay, tile, resolve_impl(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "impl"))
+def _quantize_tiles(x, tile, impl):
+    if impl == "xla":
+        return _ref.quantize_tiles_ref(x, tile=tile)
+    return quantize_pallas(x, tile=tile, interpret=impl == "interpret")
+
+
+def quantize_tiles(x, *, tile: int = TILE, impl=None):
+    """Per-tile int8 quantize without EF (ring_fused hop encode)."""
+    return _quantize_tiles(x, tile, resolve_impl(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "impl"))
+def _dequant_accum(q, scales, tile, impl):
+    if impl == "xla":
+        return _ref.dequant_accum_ref(q, scales, tile=tile)
+    return dequant_accum_pallas(q, scales, tile=tile,
+                                interpret=impl == "interpret")
+
+
+def dequant_accum(q, scales, *, tile: int = TILE, impl=None):
+    """Fused dequantize + accumulate of gathered payloads: q (w, n) int8,
+    scales (w, ceil(n/tile)) -> (n,) f32 sum (one read per payload, one
+    dense write — the decode half of the one-read/one-write contract)."""
+    return _dequant_accum(q, scales, tile, resolve_impl(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("ratio", "tile", "iters",
+                                             "impl"))
+def _topk_mask(x, ratio, tile, iters, impl):
+    if impl == "xla":
+        return _ref.topk_mask_bisect_ref(x, ratio=ratio, tile=tile,
+                                         iters=iters)
     return topk_mask_pallas(x, ratio=ratio, tile=tile, iters=iters,
-                            interpret=not _on_tpu())
+                            interpret=impl == "interpret")
 
 
-__all__ = ["flash_attention", "quantize_ef", "topk_mask", "dequantize"]
+def topk_mask(x, *, ratio: float = 0.01, tile: int = TILE, iters: int = 16,
+              impl=None):
+    """Per-tile bisection top-k mask (no EF)."""
+    return _topk_mask(x, ratio, tile, iters, resolve_impl(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("ratio", "tile", "iters",
+                                             "decay", "impl"))
+def _topk_ef(g, e, ratio, tile, iters, decay, impl):
+    if impl == "xla":
+        return _ref.topk_ef_ref(g, e, ratio=ratio, tile=tile, iters=iters,
+                                decay=decay)
+    return topk_ef_pallas(g, e, ratio=ratio, tile=tile, iters=iters,
+                          decay=decay, interpret=impl == "interpret")
+
+
+def topk_ef(g, e, *, ratio: float = 0.01, tile: int = TILE, iters: int = 16,
+            decay: float = 1.0, impl=None):
+    """Fused EF + top-k mask + residual: (y, e_new), y + e_new = g + decay·e."""
+    return _topk_ef(g, e, ratio, tile, iters, decay, resolve_impl(impl))
+
+
+__all__ = ["flash_attention", "quantize_ef", "quantize_tiles", "topk_mask",
+           "topk_ef", "dequant_accum", "dequantize", "TILE"]

@@ -1,4 +1,4 @@
-"""Fused error-feedback + int8 quantization Pallas kernel (survey §3.2.1).
+"""Fused error-feedback + int8 quantization Pallas kernels (survey §3.2.1).
 
 One HBM->VMEM pass per (8·128-aligned) tile computes
 
@@ -9,9 +9,23 @@ One HBM->VMEM pass per (8·128-aligned) tile computes
 
 The GPU formulation is three kernels (EF add, max-reduce, quantize) with
 three HBM round-trips; on TPU we tile so each block's scale is computed in
-VMEM and everything is written once (DESIGN.md §5).  Per-TILE scales (vs
-per-tensor) are the TPU-friendly choice and also tighten the quantization
-error; the wire format is (int8[tile], f32 scale per tile).
+VMEM and everything is written once (DESIGN.md §5/§11).  Per-TILE scales
+(vs per-tensor) are the TPU-friendly choice and also tighten the
+quantization error; the wire format is (int8[tile], f32 scale per tile).
+
+Non-tile-multiple lengths are zero-padded to the next tile boundary and
+the outputs sliced back: appended zeros cannot raise a tile's max|·|
+scale, cannot win a top-k bisection round against any non-zero value, and
+quantize to q=0 with e_new=0 — so the partial tile's scale and residual
+are exactly what ``ref.py`` computes (pinned by the ragged parity tests).
+
+The decode side is ``dequant_accum_pallas``: unpack + accumulate of all
+gathered payloads in ONE pass per output tile (the gather-pattern wire
+reads each payload once and writes the dense sum once — the one-read /
+one-write contract of DESIGN.md §11).
+
+``interpret=None`` (the default) resolves via ``dispatch.resolve_interpret``:
+compiled on TPU, interpreter elsewhere.  Callers must not hardcode it.
 """
 from __future__ import annotations
 
@@ -19,10 +33,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 TILE = 8 * 128  # VPU-aligned flat tile
+
+
+def _pad_to_tile(x, tile: int):
+    """Zero-pad a flat array to the next tile multiple (no-op if aligned)."""
+    n = x.shape[0]
+    m = -(-n // tile) * tile
+    if m != n:
+        x = jnp.pad(x, (0, m - n))
+    return x
 
 
 def _kernel(g_ref, e_ref, q_ref, e_new_ref, scale_ref, *, decay: float):
@@ -37,12 +61,16 @@ def _kernel(g_ref, e_ref, q_ref, e_new_ref, scale_ref, *, decay: float):
 
 
 def quantize_ef_pallas(g, e, *, decay: float = 1.0, tile: int = TILE,
-                       interpret: bool = True):
-    """g, e: flat (n,) arrays (pad to a tile multiple before calling).
-    Returns (q int8 (n,), e_new f32 (n,), scales f32 (n/tile,))."""
+                       interpret=None):
+    """g, e: flat (n,) arrays, any length (zero-padded to a tile multiple
+    internally).  Returns (q int8 (n,), e_new f32 (n,),
+    scales f32 (ceil(n/tile),))."""
+    interpret = resolve_interpret(interpret)
     n = g.shape[0]
-    assert n % tile == 0, (n, tile)
-    grid = (n // tile,)
+    g = _pad_to_tile(g, tile)
+    e = _pad_to_tile(e, tile)
+    m = g.shape[0]
+    grid = (m // tile,)
     kernel = functools.partial(_kernel, decay=decay)
     q, e_new, scales = pl.pallas_call(
         kernel,
@@ -52,12 +80,71 @@ def quantize_ef_pallas(g, e, *, decay: float = 1.0, tile: int = TILE,
         out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
                    pl.BlockSpec((tile,), lambda i: (i,)),
                    pl.BlockSpec((1,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
-                   jax.ShapeDtypeStruct((n,), jnp.float32),
-                   jax.ShapeDtypeStruct((n // tile,), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int8),
+                   jax.ShapeDtypeStruct((m,), jnp.float32),
+                   jax.ShapeDtypeStruct((m // tile,), jnp.float32)],
         interpret=interpret,
     )(g, e)
-    return q, e_new, scales
+    return q[:n], e_new[:n], scales
+
+
+def _q_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    q = jnp.clip(jnp.round(x / scale * 127.0), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[0] = scale
+
+
+def quantize_pallas(x, *, tile: int = TILE, interpret=None):
+    """Per-tile int8 quantization WITHOUT error feedback — the per-hop
+    requantization step of the compressed ring (``collectives/ring_fused``).
+    x: flat (n,), any length.  Returns (q int8 (n,), scales (ceil(n/tile),))."""
+    interpret = resolve_interpret(interpret)
+    n = x.shape[0]
+    x = _pad_to_tile(x, tile)
+    m = x.shape[0]
+    q, scales = pl.pallas_call(
+        _q_kernel,
+        grid=(m // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int8),
+                   jax.ShapeDtypeStruct((m // tile,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return q[:n], scales
+
+
+def _accum_kernel(q_ref, s_ref, out_ref):
+    # q_ref: (w, tile) int8, s_ref: (w, 1) f32 — one output tile, all ranks
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(q * (s_ref[...] / 127.0), axis=0)
+
+
+def dequant_accum_pallas(q, scales, *, tile: int = TILE, interpret=None):
+    """Fused dequantize + accumulate: the decode side of the gathered int8
+    wire.  q: (w, n) int8 payloads from w ranks, scales: (w, ceil(n/tile))
+    f32.  Returns the (n,) f32 SUM of the dequantized payloads — each
+    payload element is read once and the dense sum written once."""
+    interpret = resolve_interpret(interpret)
+    w, n = q.shape
+    ntiles = -(-n // tile)
+    m = ntiles * tile
+    assert scales.shape == (w, ntiles), (scales.shape, (w, ntiles))
+    if m != n:
+        q = jnp.pad(q, ((0, 0), (0, m - n)))
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=(ntiles,),
+        in_specs=[pl.BlockSpec((w, tile), lambda i: (0, i)),
+                  pl.BlockSpec((w, 1), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+    return out[:n]
 
 
 def dequantize(q, scales, tile: int = TILE):

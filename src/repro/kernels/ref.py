@@ -1,10 +1,33 @@
 """Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
-these across shape/dtype sweeps)."""
+these across shape/dtype sweeps).
+
+Two kinds of function live here:
+
+  * ORACLES — independent formulations tests compare against with a
+    tolerance (``flash_attention_ref``) or an exactness bound
+    (``topk_mask_ref``, the true sort-based per-tile top-k the bisection
+    kernel approximates);
+  * REFERENCE LOWERINGS — the kernels' op sequences re-expressed as plain
+    vectorized jnp (``quantize_ef_ref``, ``topk_ef_ref``,
+    ``quantize_tiles_ref``, ``dequant_accum_ref``).  Under ``jax.jit``
+    these are bit-identical to the interpreted Pallas kernels, which makes
+    them double as the off-TPU hot path (``ops.py`` dispatches to them as
+    the ``xla`` impl) AND the exactness reference the fused-wire
+    conformance suites pin payloads and EF residuals against.
+
+Ragged lengths follow the kernels' pad-and-slice contract: inputs are
+zero-padded to the tile boundary, tiles computed, outputs sliced back to
+n — zero pads cannot change a tile's max|·| scale and cannot be kept by a
+positive bisection threshold, so the partial tile's scale/residual are
+unaffected (DESIGN.md §11).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+TILE = 8 * 128
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
@@ -14,26 +37,124 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
                                softcap=softcap)
 
 
-def quantize_ef_ref(g, e, *, decay: float = 1.0, tile: int = 8 * 128):
-    """Per-tile EF + int8 quantization oracle. g, e: flat (n,)."""
+def _pad_blocks(x, tile: int):
+    """Zero-pad a flat array to the tile boundary and reshape to
+    (ntiles, tile) f32 blocks."""
+    n = x.shape[0]
+    m = -(-n // tile) * tile
+    if m != n:
+        x = jnp.pad(x, (0, m - n))
+    return x.astype(jnp.float32).reshape(m // tile, tile)
+
+
+def quantize_ef_ref(g, e, *, decay: float = 1.0, tile: int = TILE):
+    """Per-tile EF + int8 quantization: the quantize_ef kernel's op
+    sequence.  g, e: flat (n,), any length.  Returns (q int8 (n,),
+    e_new f32 (n,), scales f32 (ceil(n/tile),))."""
     n = g.shape[0]
-    corrected = (g.astype(jnp.float32) + decay * e.astype(jnp.float32))
-    blocks = corrected.reshape(n // tile, tile)
+    blocks = _pad_blocks(g, tile) + decay * _pad_blocks(e, tile)
     scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-30)
     q = jnp.clip(jnp.round(blocks / scales[:, None] * 127.0), -127, 127)
     e_new = blocks - q * (scales[:, None] / 127.0)
-    return (q.reshape(n).astype(jnp.int8), e_new.reshape(n), scales)
+    return (q.reshape(-1)[:n].astype(jnp.int8), e_new.reshape(-1)[:n],
+            scales)
 
 
-def topk_mask_ref(x, *, ratio: float = 0.01, tile: int = 8 * 128):
+def quantize_tiles_ref(x, *, tile: int = TILE):
+    """Per-tile int8 quantization without EF (the ring_fused hop step and
+    the unfused int8_fused wire).  Returns (q int8 (n,), scales)."""
+    n = x.shape[0]
+    blocks = _pad_blocks(x, tile)
+    scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-30)
+    q = jnp.clip(jnp.round(blocks / scales[:, None] * 127.0), -127, 127)
+    return q.reshape(-1)[:n].astype(jnp.int8), scales
+
+
+def dequantize_ref(q, scales, *, tile: int = TILE):
+    """Inverse of quantize_tiles_ref (biased by the rounding, bound
+    scale/254 per element)."""
+    n = q.shape[0]
+    s = jnp.repeat(scales, tile)[:n]
+    return q.astype(jnp.float32) * (s / 127.0)
+
+
+def dequant_accum_ref(q, scales, *, tile: int = TILE):
+    """The dequant_accum kernel's op sequence: q (w, n) int8 payloads,
+    scales (w, ceil(n/tile)) — returns the (n,) f32 sum of the dequantized
+    payloads (summed over the rank axis, like the kernel)."""
+    w, n = q.shape
+    ntiles = -(-n // tile)
+    m = ntiles * tile
+    if m != n:
+        q = jnp.pad(q, ((0, 0), (0, m - n)))
+    q3 = q.astype(jnp.float32).reshape(w, ntiles, tile)
+    out = jnp.sum(q3 * (scales[:, :, None] / 127.0), axis=0)
+    return out.reshape(-1)[:n]
+
+
+def _bisect_threshold_ref(ax, k: int, iters: int):
+    """The topk kernels' bisection, verbatim (see topk_mask._bisect_threshold
+    — the op sequences must stay identical for the xla impl to be
+    bit-identical to the interpreted kernel)."""
+    hi = jnp.max(ax)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.int32))
+        return jnp.where(cnt > k, mid, lo), jnp.where(cnt > k, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+def topk_mask_bisect_ref(x, *, ratio: float = 0.01, tile: int = TILE,
+                         iters: int = 16):
+    """The topk_mask KERNEL's bisection semantics as vectorized jnp (the
+    xla impl) — distinct from :func:`topk_mask_ref`, the exact oracle."""
+    n = x.shape[0]
+    dtype = x.dtype
+    k = max(1, int(tile * ratio))
+    blocks = _pad_blocks(x, tile)
+
+    def one(b):
+        ax = jnp.abs(b)
+        hi = _bisect_threshold_ref(ax, k, iters)
+        return jnp.where(ax >= hi, b, 0.0)
+
+    return jax.vmap(one)(blocks).reshape(-1)[:n].astype(dtype)
+
+
+def topk_ef_ref(g, e, *, ratio: float = 0.01, tile: int = TILE,
+                iters: int = 16, decay: float = 1.0):
+    """The fused topk_ef kernel's op sequence: EF add + bisection mask +
+    residual in one vectorized pass.  Returns (y (n,), e_new (n,)) f32
+    with y + e_new == g + decay·e."""
+    n = g.shape[0]
+    k = max(1, int(tile * ratio))
+    blocks = _pad_blocks(g, tile) + decay * _pad_blocks(e, tile)
+
+    def one(b):
+        ax = jnp.abs(b)
+        hi = _bisect_threshold_ref(ax, k, iters)
+        keep = ax >= hi
+        return jnp.where(keep, b, 0.0), jnp.where(keep, 0.0, b)
+
+    y, e_new = jax.vmap(one)(blocks)
+    return y.reshape(-1)[:n], e_new.reshape(-1)[:n]
+
+
+def topk_mask_ref(x, *, ratio: float = 0.01, tile: int = TILE):
     """EXACT per-tile top-k oracle (the kernel's bisection approximates
-    this; tests bound the difference)."""
+    this; tests bound the difference).  Ragged lengths pad like the
+    kernel."""
     n = x.shape[0]
     k = max(1, int(tile * ratio))
-    blocks = x.reshape(n // tile, tile)
+    blocks = _pad_blocks(x, tile)
 
     def one(b):
         thresh = jnp.sort(jnp.abs(b))[-k]
         return jnp.where(jnp.abs(b) >= thresh, b, 0)
 
-    return jax.vmap(one)(blocks).reshape(n)
+    return jax.vmap(one)(blocks).reshape(-1)[:n].astype(x.dtype)

@@ -86,6 +86,12 @@ def parse_args(argv=None):
                     help="plan for this per-step backward time instead of "
                          "measuring (model a TPU's backward from a laptop; "
                          "--sync auto)")
+    ap.add_argument("--compression-costs", default="", metavar="PATH",
+                    help="measured per-compressor encode/decode cost table "
+                         "(JSON recorded by benchmarks/bench_collectives.py "
+                         "--write-compression-costs); replaces the analytic "
+                         "compression-compute term in --sync auto's model "
+                         "(DESIGN.md §11)")
     ap.add_argument("--shard-state", action="store_true",
                     help="sharded data parallelism (ZeRO-style): gradients "
                          "reduce-scatter per bucket, optimizer moments + "
@@ -205,7 +211,8 @@ def main(argv=None):
             shard_state=(True if args.shard_state else None),
             memory_budget_gb=args.memory_budget_gb,
             pipeline_stages=(pipe if pipe > 1 else None),
-            micro_batches=(micro if pipe > 1 else None))
+            micro_batches=(micro if pipe > 1 else None),
+            compression_costs=args.compression_costs or None)
         if pipe <= 1 and micro > 1:
             # S=1 accumulation rides the winning arm when it composes
             session.apply_micro_batching(micro)

@@ -144,3 +144,92 @@ def test_threshold_zeroes_small():
     g = jnp.asarray([-1.0, -0.4, 0.0, 0.3, 0.9])
     out = np.asarray(comp.roundtrip(g))
     np.testing.assert_allclose(out, [-1.0, 0.0, 0.0, 0.0, 0.9], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused wires (DESIGN.md §11): the one-pass hooks must be BIT-IDENTICAL to
+# the decomposed reference chain under jit — payload AND residual — across
+# ragged lengths, 2-D leaves and bf16 inputs.
+# ---------------------------------------------------------------------------
+
+FUSED = [("int8_fused", {}), ("topk_fused", {"ratio": 0.25})]
+
+
+@pytest.mark.parametrize("name,kw", FUSED, ids=[f[0] for f in FUSED])
+@pytest.mark.parametrize("shape", [(2500,), (64, 33)],
+                         ids=["ragged-1d", "2d"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_fused_hooks_bit_identical_to_chain(name, kw, shape, dtype):
+    comp = get_compressor(name, tile=1024, **kw)
+    g = jax.random.normal(RNG, shape, getattr(jnp, dtype))
+    e = jax.random.normal(jax.random.fold_in(RNG, 1), shape,
+                          jnp.float32) * 0.1
+
+    @jax.jit
+    def fused(g, e):
+        return comp.fused_ef_compress(g, e, 1.0)
+
+    @jax.jit
+    def chain(g, e):
+        corrected = g.astype(jnp.float32) + 1.0 * e
+        payload, meta = comp.compress(corrected, None)
+        return payload, meta, corrected - comp.decompress(payload, meta)
+
+    pf, mf, ef = fused(g, e)
+    pu, mu, eu = chain(g, e)
+    assert mf == mu
+    for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{name} payload")
+    np.testing.assert_array_equal(np.asarray(ef), np.asarray(eu),
+                                  err_msg=f"{name} residual")
+    assert ef.shape == g.shape and ef.dtype == jnp.float32
+
+
+def test_fused_decode_sum_matches_per_rank_loop():
+    """One fused dequantize+accumulate pass over the gathered payloads ==
+    the per-rank decompress loop (up to f32 summation order)."""
+    comp = get_compressor("int8_fused", tile=1024)
+    n, w = 2500, 8
+    payloads, metas = [], []
+    for i in range(w):
+        g = jax.random.normal(jax.random.fold_in(RNG, i), (n,)) * (1 + i)
+        p, m = comp.compress(g, None)
+        payloads.append(p)
+        metas.append(m)
+    gathered = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    got = comp.fused_decode_sum(gathered, metas[0])
+    want = sum(comp.decompress(p, m) for p, m in zip(payloads, metas))
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_fused_payload_bits():
+    """int8_fused: 8 bits/elem + one f32 scale per tile; topk_fused: the
+    survey's (value, index) accounting, 64 bits per kept element."""
+    i8 = get_compressor("int8_fused", tile=1024)
+    assert i8.payload_bits((2048,)) == 2048 * 8 + 2 * 32
+    assert i8.payload_bits((1000,)) == 1000 * 8 + 32      # ragged: 1 tile
+    assert not i8.aggregatable
+    tk = get_compressor("topk_fused", ratio=0.25, tile=1024)
+    assert tk.payload_bits((2048,)) == 2 * 256 * 64
+    assert tk.aggregatable
+
+
+def test_fused_ef_decay_applied_before_quantize():
+    """The decay factor scales the carried residual INSIDE the one-pass
+    kernel: fused(decay) == chain on g + decay*e."""
+    comp = get_compressor("int8_fused", tile=1024)
+    g = jax.random.normal(RNG, (2048,))
+    e = jax.random.normal(jax.random.fold_in(RNG, 1), (2048,))
+    (q, sc), _, e_new = jax.jit(
+        lambda g, e: comp.fused_ef_compress(g, e, 0.9))(g, e)
+    corrected = g + 0.9 * e
+    q2, sc2 = jax.jit(lambda c: comp.compress(c, None)[0])(corrected)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc2))
+    np.testing.assert_allclose(
+        np.asarray(e_new),
+        np.asarray(corrected - comp.decompress((q, sc), (2048,))),
+        atol=1e-6)

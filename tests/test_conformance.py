@@ -55,6 +55,16 @@ WIRES = [
      True),
     ("powersgd/ring", dict(compressor="powersgd", algo="ring",
                            compressor_args=(("rank", 2),)), True),
+    # the fused Pallas wires (DESIGN.md §11): gather-pattern int8 tiles +
+    # scales, and the aggregatable bisection top-k — one-pass kernels in
+    # the hot path, decomposed chain as the pinned reference
+    ("int8_fused/ring", dict(compressor="int8_fused", algo="ring",
+                             compressor_args=(("tile", 128),),
+                             bucket_bytes=2048), True),
+    ("topk_fused/ring", dict(compressor="topk_fused", algo="ring",
+                             compressor_args=(("ratio", 0.25),
+                                              ("tile", 128)),
+                             bucket_bytes=2048), True),
 ]
 
 
@@ -187,6 +197,71 @@ def test_ef_residual_bookkeeping_preserved_under_sharding(name, kw):
         nonzero += int(np.any(np.asarray(a) != 0))
     # a biased/quantizing compressor must actually be accumulating error
     assert nonzero > 0, f"{name}: EF residuals all zero after {STEPS} steps"
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("int8_fused", dict(compressor="int8_fused", algo="ring",
+                        bucket_bytes=2048)),
+    ("topk_fused", dict(compressor="topk_fused", algo="ring",
+                        compressor_args=(("ratio", 0.25),),
+                        bucket_bytes=2048)),
+], ids=["int8_fused", "topk_fused"])
+def test_fused_vs_unfused_bit_trajectory(name, kw):
+    """The fused one-pass wire vs the SAME plan with ``fused=False`` (the
+    decomposed reference chain), 3 sync rounds of fresh gradients: EF
+    residual trajectories and synced sums must track each other at the
+    few-ulp level.  These are two DIFFERENT world=1 XLA programs, so the
+    promise here carries the same FMA-contraction caveat as
+    ``_assert_tight`` (observed: 1-ulp flips on ~10% of elements); the
+    BIT-STRICT 3-step run for both wires lives on the 8-device mesh in
+    multi_device_checks.py (the acceptance criterion), where payload
+    equality is pinned at the compressor level by test_compression.py."""
+    import dataclasses
+
+    from repro.core.grad_sync import plan_from_config
+
+    mesh = _mesh1()
+    tmpl = {"w": jnp.zeros((64, 33)), "b": jnp.zeros((17,))}
+    plan_f = plan_from_config(SyncConfig(**kw), tmpl)
+    assert all(b.fused for b in plan_f.buckets)
+    plan_u = dataclasses.replace(plan_f, buckets=tuple(
+        dataclasses.replace(b, fused=False) for b in plan_f.buckets))
+    grads = [{"w": jax.random.normal(jax.random.fold_in(
+                  jax.random.PRNGKey(3), s), (64, 33)),
+              "b": jax.random.normal(jax.random.fold_in(
+                  jax.random.PRNGKey(4), s), (17,))} for s in range(3)]
+
+    def run(plan):
+        ex = PlanExecutor(plan, ("data",))
+
+        def body():
+            st = ex.init_state(grads[0])
+            outs, errs = [], []
+            for g in grads:
+                out, st = ex(g, st, jax.random.PRNGKey(0))
+                outs.append(out)
+                errs.append([e for e in st["error"] if e is not None])
+            return outs, errs
+
+        f = jax.shard_map(
+            body, mesh=mesh, in_specs=(),
+            out_specs=(jax.sharding.PartitionSpec(),) * 2,
+            axis_names={"data"}, check_vma=False)
+        return jax.jit(f)()
+
+    outs_f, errs_f = run(plan_f)
+    outs_u, errs_u = run(plan_u)
+    def cmp(a, b, what):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        tol = 4 * np.finfo(np.float32).eps * max(1.0, np.abs(b).max())
+        assert np.abs(a - b).max() <= tol, (what, np.abs(a - b).max())
+
+    for s in range(3):
+        assert len(errs_f[s]) == len(errs_u[s]) > 0
+        for j, (a, b) in enumerate(zip(errs_f[s], errs_u[s])):
+            cmp(a, b, f"{name} step {s} EF[{j}]")
+        for k in ("w", "b"):
+            cmp(outs_f[s][k], outs_u[s][k], f"{name} step {s} {k}")
 
 
 def test_modes_are_deterministic():

@@ -302,9 +302,18 @@ def test_plan_rounds_picks_tier_aware_arm_on_two_tier_network():
     else:
         assert any(b.algo in ("hierarchical", "mesh2d", "mesh2d_split")
                    for b in best.comm.buckets)
-    # the every-step arm alone is already tier-aware
-    assert any(b.algo == "hierarchical"
+    # the every-step arm alone is tier-aware -- or, since PR 6, takes the
+    # fused compressed ring that moves ~4x fewer bytes over the slow tier;
+    # with dense wires only, hierarchical must still win the arm
+    assert any(b.algo in ("hierarchical", "mesh2d", "mesh2d_split",
+                          "ring_fused")
                for b in arms["every_step"].comm.buckets)
+    dense_only = tuple(c for c in DEFAULT_CANDIDATES
+                       if c.compressor == "none")
+    _, arms_d = plan_rounds(profs, topo, 32, tau_grid=(1,), pipeline=pa,
+                            candidates=dense_only)
+    assert any(b.algo == "hierarchical"
+               for b in arms_d["every_step"].comm.buckets)
 
 
 def test_plan_rounds_world_must_match_topology():
