@@ -12,7 +12,7 @@ import traceback
 from benchmarks import (bench_collectives, bench_compression,
                         bench_large_batch, bench_overlap, bench_periodic,
                         bench_pipeline, bench_planner, bench_protocols,
-                        bench_sharded, bench_topology)
+                        bench_serving, bench_sharded, bench_topology)
 
 SUITES = {
     "table1": bench_large_batch,
@@ -25,6 +25,7 @@ SUITES = {
     "sharded": bench_sharded,
     "pipeline": bench_pipeline,
     "topology": bench_topology,
+    "serving": bench_serving,
 }
 
 

@@ -186,6 +186,65 @@ def _profiles():
     return out
 
 
+def collect_serving() -> dict:
+    """Serving suite (DESIGN.md §12): fully deterministic — the engine's
+    admission/retirement state machine runs on a :class:`SimClock` with
+    modeled per-step costs (no wall-clock timing, no device work), and
+    the placement rows come from the α-β decode cost model.  Gated
+    numbers: simulated trace makespans for continuous and static
+    batching, their ratio (continuous/static — rising means the
+    continuous engine lost scheduling efficiency), and the planner's
+    per-arm decode step times for gemma-2b on two_tier_pod."""
+    from repro.configs import get_config, reduced
+    from repro.core.schedule import (TOPOLOGY_PRESETS, Topology,
+                                     plan_serving)
+    from repro.models import Model
+    from repro.models.model import count_params
+    from repro.serve import (Engine, Request, ServeConfig, SimCosts,
+                             run_static)
+    from repro.serve.engine import latency_summary
+
+    import numpy as np
+
+    serving: dict = {}
+    cfg = reduced(get_config("gemma-2b"))
+    model = Model(cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(8,)).astype(np.int32),
+                    max_new=24 if i % 4 == 0 else 4,
+                    arrival_s=0.0) for i in range(12)]
+    sim = SimCosts(prefill_s_per_token=2e-4, decode_step_s=2e-3)
+    eng = Engine(model, None, ServeConfig(max_batch=4, max_len=32,
+                                          page_size=8), sim=sim)
+    cont = latency_summary(eng.run(reqs))
+    stat = latency_summary(run_static(model, None, reqs, 4, 32, sim=sim))
+    serving["gemma-2b/sim/continuous"] = {
+        "metric": "sim_makespan_ms", "sim_makespan_ms":
+        cont["makespan_s"] * 1e3, "arm": "continuous"}
+    serving["gemma-2b/sim/static"] = {
+        "metric": "sim_makespan_ms", "sim_makespan_ms":
+        stat["makespan_s"] * 1e3, "arm": "static"}
+    serving["gemma-2b/sim/speedup"] = {
+        "metric": "continuous_over_static_makespan",
+        "continuous_over_static_makespan":
+        cont["makespan_s"] / stat["makespan_s"],
+        "arm": f"cont {cont['tokens_per_s']:.0f} tok/s vs "
+               f"stat {stat['tokens_per_s']:.0f}"}
+
+    full = get_config("gemma-2b")
+    pb = count_params(full) * 2.0
+    net = Topology.from_spec(TOPOLOGY_PRESETS["two_tier_pod"])
+    best, arms = plan_serving(net, net.world, pb, full.num_layers,
+                              full.d_model, batch=8)
+    for a in arms:
+        serving[f"gemma-2b/two_tier_pod/{a.key()}"] = {
+            "metric": "step_ms", "step_ms": a.step_s * 1e3,
+            "arm": "best" if a.key() == best.key() else ""}
+    return serving
+
+
 def collect() -> dict:
     """All tracked records, keyed by suite name."""
     from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
@@ -285,7 +344,8 @@ def collect() -> dict:
                 "modeled_step_ms": tbest.modeled_step_s * 1e3,
                 "arm": tbest.key}
     return {"planner": planner, "sharded": sharded, "pipeline": pipeline,
-            "topology": topology, "kernels": collect_kernels()}
+            "topology": topology, "kernels": collect_kernels(),
+            "serving": collect_serving()}
 
 
 def gate(records: dict, baseline_dir: str, tolerance: float) -> list:

@@ -80,10 +80,19 @@ if [[ "${1:-}" != "--fast" ]]; then
   fi
 fi
 
-step "smoke: planner + sharded + pipeline benchmarks (modeled tables)"
+if [[ "${1:-}" != "--fast" ]]; then
+  step "smoke: 2-replica continuous serving (paged KV, DESIGN.md §12)"
+  # the serving engine end to end: paged KV cache, continuous batching
+  # with mid-stream admission, least-loaded routing across 2 replicas
+  python -m repro.launch.serve --arch gemma-2b --batch 2 \
+      --prompt-len 8 --gen 4 --requests 6 --replicas 2 --engine continuous
+fi
+
+step "smoke: planner + sharded + pipeline + serving benchmarks"
 python -m benchmarks.run --only planner
 python -m benchmarks.run --only sharded
 python -m benchmarks.run --only pipeline
+python -m benchmarks.run --only serving
 
 step "smoke: bench regression gate (scripts/bench_ci.py)"
 python scripts/bench_ci.py --out-dir artifacts/bench

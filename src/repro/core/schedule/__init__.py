@@ -1,8 +1,9 @@
 from repro.core.schedule.cost import (  # noqa: F401
-    LINK_PRESETS, CompressionCostTable, LinkParams, allgather_cost_s,
-    allreduce_cost_s, allreduce_phases, bucket_sync_cost_s,
-    bucket_sync_phases, compressed_wire_bytes, p2p_cost_s,
-    reduce_scatter_cost_s, shard_gather_cost_s)
+    DECODE_HBM_BW, LINK_PRESETS, CompressionCostTable, LinkParams,
+    allgather_cost_s, allreduce_cost_s, allreduce_phases,
+    bucket_sync_cost_s, bucket_sync_phases, compressed_wire_bytes,
+    decode_step_cost_s, p2p_cost_s, reduce_scatter_cost_s,
+    shard_gather_cost_s)
 from repro.core.schedule.calibration import (  # noqa: F401
     CALIBRATION_SET, measure_compression_costs, resolve_cost_table)
 from repro.core.schedule.topology import (  # noqa: F401
@@ -14,11 +15,11 @@ from repro.core.schedule.perf_model import (  # noqa: F401
 from repro.core.schedule.planner import (  # noqa: F401
     BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
     DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, MICRO_GRID, OPT_MOMENTS,
-    PIPE_GRID, PipelineAxis, RoundSchedule, StrategyPlan, TAU_GRID,
-    fixed_config_plan, opt_state_bytes_per_worker, pipeline_arm,
-    pipeline_placements, plan, plan_cost_s, plan_rounds,
-    profiles_from_grads, profiles_from_sizes, serial_round_plan,
-    shard_gather_tail_s)
+    PIPE_GRID, PipelineAxis, RoundSchedule, ServingPlan, StrategyPlan,
+    TAU_GRID, fixed_config_plan, opt_state_bytes_per_worker,
+    pipeline_arm, pipeline_placements, plan, plan_cost_s, plan_rounds,
+    plan_serving, profiles_from_grads, profiles_from_sizes,
+    serial_round_plan, serving_placements, shard_gather_tail_s)
 from repro.core.pipeline import (  # noqa: F401
     PIPE_FWD_FRACTION, StagedModel, aligned_order, aligned_ticks,
     balanced_cuts, bubble_fraction, schedule_1f1b, simulate_1f1b,

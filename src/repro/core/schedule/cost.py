@@ -200,6 +200,34 @@ def allgather_cost_s(n_bytes: float, p: int, net: Net) -> float:
     return (p - 1) * (link.alpha_s + n_bytes * link.beta_s_per_byte)
 
 
+# Effective HBM bandwidth for weight-streaming decode (B/s).  Incremental
+# decode is memory-bound: every step reads the full (TP-sharded) parameter
+# set once, so compute time is param_bytes / bandwidth, not a FLOP count.
+DECODE_HBM_BW = 800e9
+
+
+def decode_step_cost_s(param_bytes: float, n_layers: int, d_model: int,
+                       batch: int, tp: int, net: Net, *,
+                       act_bytes: int = 2,
+                       hbm_bw: float = DECODE_HBM_BW) -> float:
+    """Predicted wall time of ONE batched decode step under ``tp``-way
+    tensor parallelism (DESIGN.md §12).
+
+    Compute is weight streaming — each rank reads its ``param_bytes/tp``
+    shard once per token — and communication is the Megatron pattern: two
+    allreduces per layer of the ``(batch, d_model)`` activations, priced
+    by :func:`allreduce_cost_s` on whatever tier ``net`` places the TP
+    group on.  Tiny payloads make this α-dominated, which is why the
+    serving planner pins TP groups to the fastest tier."""
+    if tp < 1:
+        raise ValueError("tp must be >= 1")
+    step = param_bytes / (tp * hbm_bw)
+    if tp > 1:
+        act = float(batch) * d_model * act_bytes
+        step += 2 * n_layers * allreduce_cost_s("ring", act, tp, net)
+    return step
+
+
 def compressed_wire_bytes(compressor: str, compressor_args: Tuple[Tuple[str, Any], ...],
                           n_elems: int) -> float:
     """Per-rank wire bytes for one fused bucket of ``n_elems`` f32 values

@@ -880,3 +880,84 @@ def fixed_config_plan(layer_profiles: Sequence[LayerProfile],
     return dataclasses.replace(
         p, modeled_step_s=plan_cost_s(p, layer_profiles, link, world,
                                       cost_table=cost_table))
+
+
+# ---------------------------------------------------------------------------
+# Serving placement (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """One serving arm: ``tp``-way sharded decode with its collectives on
+    ``tp_tier``, replicated ``replicas`` times over the remaining world."""
+    tp: int
+    tp_tier: str                # "" on a flat network
+    replicas: int
+    step_s: float               # one decode step of one replica
+    tokens_per_s: float         # batch * replicas / step_s
+
+    def key(self) -> str:
+        tier = self.tp_tier or "flat"
+        return f"tp{self.tp}@{tier}x{self.replicas}"
+
+    def describe(self) -> str:
+        return (f"{self.key()}: step {self.step_s*1e3:.3f} ms, "
+                f"{self.tokens_per_s:,.0f} tok/s")
+
+
+def serving_placements(net, world: int, tp: int) -> List[Tuple[str, Any]]:
+    """Tier placements for a tp-way decode group: ``[(tier_name,
+    tp_net), ...]`` where ``tp_net`` prices the group's allreduces.  Flat
+    networks have the single historical placement; on a tiered topology
+    every tier tp divides is an arm (TP across nodes is expressible —
+    and the planner will duly price it out of contention)."""
+    if tp == 1:
+        return [("", net)]
+    if not isinstance(net, Topology):
+        return [("", net)]
+    if net.world != world:
+        raise ValueError(f"topology world {net.world} != world {world}")
+    out = []
+    for ti, tier in enumerate(net.tiers):
+        if tier.size % tp != 0:
+            continue
+        placed, _ = net.place(tp, ti)
+        out.append(("" if net.is_flat else tier.name, placed.link))
+    return out
+
+
+def plan_serving(net, world: int, param_bytes: float, n_layers: int,
+                 d_model: int, batch: int,
+                 tp_grid: Sequence[int] = (1, 2, 4, 8, 16),
+                 latency_budget_s: Optional[float] = None,
+                 act_bytes: int = 2
+                 ) -> Tuple[ServingPlan, List[ServingPlan]]:
+    """Choose the decode sharding for a serving fleet of ``world`` chips:
+    search tp degree x tier placement, price one batched decode step via
+    :func:`~repro.core.schedule.cost.decode_step_cost_s`, replicate the
+    chosen group over the rest of the world, and keep the arm with the
+    highest aggregate tokens/s (optionally subject to a per-step latency
+    budget).  Returns ``(best, all_arms)`` — the arms feed
+    ``launch/report.render_serving_plan``."""
+    from repro.core.schedule.cost import decode_step_cost_s
+    arms: List[ServingPlan] = []
+    for tp in tp_grid:
+        if tp > world or world % tp != 0:
+            continue
+        for tier_name, tp_net in serving_placements(net, world, tp):
+            step = decode_step_cost_s(param_bytes, n_layers, d_model,
+                                      batch, tp, tp_net,
+                                      act_bytes=act_bytes)
+            replicas = world // tp
+            arms.append(ServingPlan(
+                tp=tp, tp_tier=tier_name, replicas=replicas, step_s=step,
+                tokens_per_s=batch * replicas / step))
+    if not arms:
+        raise ValueError(f"no serving arm fits world={world} "
+                         f"with tp_grid={tuple(tp_grid)}")
+    pool = arms
+    if latency_budget_s is not None:
+        fits = [a for a in pool if a.step_s <= latency_budget_s]
+        pool = fits or [min(pool, key=lambda a: a.step_s)]
+    best = max(pool, key=lambda a: a.tokens_per_s)
+    return best, arms

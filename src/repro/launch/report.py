@@ -224,6 +224,28 @@ def render_strategy_plan(sp, arms=None, baselines=None,
     return "\n".join(lines)
 
 
+def render_serving_plan(best, arms, arch: str = "", batch: int = 0,
+                        latency_budget_s=None) -> str:
+    """Markdown rendering of a serving placement search
+    (``planner.plan_serving``, DESIGN.md §12): every tp × tier arm the
+    planner priced, best-throughput arm marked."""
+    hdr = f" — {arch}" if arch else ""
+    budget = (f", latency budget {latency_budget_s * 1e3:.2f} ms/step"
+              if latency_budget_s is not None else "")
+    lines = [f"### Serving placement (tp × tier × replicas){hdr}", "",
+             f"chosen arm: **{best.key()}** — {best.step_s * 1e3:.3f} "
+             f"ms/step, {best.tokens_per_s:,.0f} tok/s"
+             f" at decode batch {batch}{budget}" if batch else
+             f"chosen arm: **{best.key()}** — {best.step_s * 1e3:.3f} "
+             f"ms/step, {best.tokens_per_s:,.0f} tok/s{budget}",
+             "", "| arm | step | aggregate tok/s |", "|---|---|---|"]
+    for a in sorted(arms, key=lambda a: -a.tokens_per_s):
+        mark = " ←" if a.key() == best.key() else ""
+        lines.append(f"| {a.key()}{mark} | {a.step_s * 1e3:.3f} ms | "
+                     f"{a.tokens_per_s:,.0f} |")
+    return "\n".join(lines)
+
+
 def _write_plan_record(rec: dict, arch: str) -> str:
     from repro.launch.paths import COMM_PLANS
     os.makedirs(COMM_PLANS, exist_ok=True)

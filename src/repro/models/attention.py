@@ -306,36 +306,48 @@ def init_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
 
 def attn_decode(params, cfg: ModelConfig, spec: LayerSpec, x, cache, pos):
     """One-token decode.  x: (B, 1, d); cache: {'k','v'} (B, L, KV, hd);
-    pos: scalar int32 — number of tokens already in the cache."""
+    pos: scalar int32 — number of tokens already in the cache — or an (B,)
+    int32 vector of PER-ROW positions (the serving engine's continuous
+    batch, where every slot sits at its own depth; DESIGN.md §12).  The
+    scalar path is unchanged; the vector path stores per row via a one-hot
+    ``where`` write (bit-identical values to the per-row dynamic slice)."""
     B = x.shape[0]
     hd = cfg.hd
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    vec = pos.ndim == 1
+    positions = pos[:, None] if vec else jnp.full((B, 1), pos, dtype=jnp.int32)
     q, k, v = _project_qkv(params, cfg, x, positions)
     L = cache["k"].shape[1]
     slot = pos % L if spec.window else pos
-    k_cache = _dynamic_store(cache["k"], k, slot)
-    v_cache = _dynamic_store(cache["v"], v, slot)
+    if vec:
+        k_cache = _store_rows(cache["k"], k, slot)
+        v_cache = _store_rows(cache["v"], v, slot)
+    else:
+        k_cache = _dynamic_store(cache["k"], k, slot)
+        v_cache = _dynamic_store(cache["v"], v, slot)
 
-    # positions actually stored in each cache slot (ring-aware)
+    # positions actually stored in each cache slot (ring-aware).  ``p_row``
+    # broadcasts the per-row/scalar cases through one set of formulas:
+    # valid is (B, L) on the vector path, (L,) on the scalar path.
     idx = jnp.arange(L)
+    p_row = pos[:, None] if vec else pos
     if spec.window:
         # slot i holds position p with p % L == i and p <= pos; invalid if p > pos
         # or evicted (pos - p >= window).
-        base = pos - (pos % L)
-        cand = jnp.where(idx <= (pos % L), base + idx, base - L + idx)
-        valid = (cand >= 0) & (cand <= pos) & ((pos - cand) < spec.window)
-        k_pos = cand
+        base = p_row - (p_row % L)
+        cand = jnp.where(idx <= (p_row % L), base + idx, base - L + idx)
+        valid = (cand >= 0) & (cand <= p_row) & ((p_row - cand) < spec.window)
     else:
-        k_pos = idx
-        valid = idx <= pos
+        valid = idx <= p_row
+    vmask = (valid[:, None, None, None, :] if vec
+             else valid[None, None, None, None, :])
 
     qg = q.reshape(B, 1, cfg.num_kv_heads, -1, hd)
     s = jnp.einsum("btkgh,blkh->bkgtl", qg, k_cache,
                    preferred_element_type=jnp.float32) / np.sqrt(hd)
     if cfg.attn_logit_softcap is not None:
         s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
-    del k_pos  # positions only used through the validity mask (RoPE is absolute)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgtl,blkh->btkgh", p, v_cache).reshape(B, 1, -1)
     return out @ params["wo"], {"k": k_cache, "v": v_cache}
@@ -344,6 +356,16 @@ def attn_decode(params, cfg: ModelConfig, spec: LayerSpec, x, cache, pos):
 def _dynamic_store(cache, new, slot):
     return jax.lax.dynamic_update_slice_in_dim(
         cache, new.astype(cache.dtype), slot, axis=1)
+
+
+def _store_rows(cache, new, slot):
+    """Per-row store: new[b, 0] lands at cache[b, slot[b]] — the
+    vector-``pos`` twin of :func:`_dynamic_store`.  cache: (B, L, ...);
+    new: (B, 1, ...); slot: (B,) int32."""
+    L = cache.shape[1]
+    hit = jnp.arange(L)[None, :] == slot[:, None]             # (B, L)
+    hit = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(hit, new.astype(cache.dtype), cache)
 
 
 # ---------------------------------------------------------------------------
@@ -434,12 +456,21 @@ def mla_decode(params, cfg: ModelConfig, spec: LayerSpec, x, cache, pos,
     """
     B = x.shape[0]
     H, nope, rope, vdim = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    vec = pos.ndim == 1           # per-row positions (serving; DESIGN.md §12)
+    positions = pos[:, None] if vec else jnp.full((B, 1), pos, dtype=jnp.int32)
     q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, positions)
-    c_cache = _dynamic_store(cache["c_kv"], c_kv_new, pos)
-    r_cache = _dynamic_store(cache["k_rope"], k_rope_new, pos)
+    if vec:
+        c_cache = _store_rows(cache["c_kv"], c_kv_new, pos)
+        r_cache = _store_rows(cache["k_rope"], k_rope_new, pos)
+    else:
+        c_cache = _dynamic_store(cache["c_kv"], c_kv_new, pos)
+        r_cache = _dynamic_store(cache["k_rope"], k_rope_new, pos)
     L = c_cache.shape[1]
-    valid = (jnp.arange(L) <= pos)[None, None, None, :]
+    if vec:
+        valid = (jnp.arange(L)[None, :] <= pos[:, None])[:, None, None, :]
+    else:
+        valid = (jnp.arange(L) <= pos)[None, None, None, :]
 
     w_ukv = params["w_ukv"].reshape(cfg.kv_lora_rank, H, nope + vdim)
     w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]

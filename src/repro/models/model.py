@@ -182,7 +182,9 @@ class Model:
 
     def decode_step(self, params, tokens, cache, pos, mla_absorb: bool = False,
                     moe_dispatch: bool = False):
-        """tokens: (B, 1) int32; pos: scalar int32 (tokens already cached).
+        """tokens: (B, 1) int32; pos: scalar int32 (tokens already cached)
+        or an (B,) int32 vector of per-row depths (continuous batching —
+        every serving slot decodes at its own position; DESIGN.md §12).
         Returns (logits (B, 1, vocab), new_cache)."""
         cfg = self.cfg
         x = self._embed(params, tokens)

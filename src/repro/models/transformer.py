@@ -9,6 +9,7 @@ Three entry points per stack:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -289,6 +290,48 @@ def stack_cache(cfg: ModelConfig, plan, batch: int, max_len: int, dtype):
             period = [jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((seg.repeats,) + s.shape, s.dtype), p)
                 for p in period]
+        segs.append(period)
+    return segs
+
+
+# Cache leaves with a per-position length dim — the ones the serving
+# engine stores in fixed-size pages (attention K/V, MLA latents).  Every
+# other leaf (recurrent h/conv/C, xLSTM states and stabilizers) is carried
+# whole per serving slot.  Mirrors the name-based layout knowledge of
+# Model.input_partition_specs (DESIGN.md §3/§12).
+PAGED_CACHE_LEAVES = ("k", "v", "c_kv", "k_rope")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeafMeta:
+    """Per-leaf layout label for the paged serving pool (serve/kv_cache):
+    ``kind`` is "paged" (length dim at ``batch_axis + 1``, ``length``
+    entries) or "state"; ``batch_axis`` is 1 for leaves stacked over a
+    segment's repeats, else 0."""
+    kind: str
+    batch_axis: int
+    length: int
+
+
+def stack_cache_meta(cfg: ModelConfig, plan, batch: int, max_len: int, dtype):
+    """A pytree structurally aligned with :func:`stack_cache` whose leaves
+    are :class:`CacheLeafMeta` labels — the serving engine's view of which
+    cache leaves page over positions and which are per-slot state."""
+    def label(stacked):
+        def f(path, s):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            bi = 1 if stacked else 0
+            if name in PAGED_CACHE_LEAVES:
+                return CacheLeafMeta("paged", bi, int(s.shape[1]))
+            return CacheLeafMeta("state", bi, 0)
+        return f
+
+    segs = []
+    for seg in plan:
+        period = [jax.tree_util.tree_map_with_path(
+            label(seg.repeats > 1),
+            block_cache(cfg, spec, batch, max_len, dtype))
+            for spec in seg.period]
         segs.append(period)
     return segs
 

@@ -1,0 +1,9 @@
+"""Production serving subsystem (DESIGN.md §12): paged KV cache,
+continuous-batching engine, and topology-aware multi-replica decode."""
+from repro.serve.engine import (Clock, Completion, Engine, Request,  # noqa: F401
+                                ServeConfig, SimClock, SimCosts,
+                                poisson_trace, run_static)
+from repro.serve.kv_cache import (PageAllocator, PagedDecodeCache,  # noqa: F401
+                                  TRASH_PAGE)
+from repro.serve.sharded import (LeastLoadedRouter,  # noqa: F401
+                                 MultiReplicaServer)

@@ -1,0 +1,532 @@
+"""Continuous-batching serving engine (DESIGN.md §12).
+
+One :class:`Engine` owns a fixed-shape decode batch of ``max_batch``
+slots over a :class:`~repro.serve.kv_cache.PagedDecodeCache`.  Every tick
+it (1) retires finished sequences and frees their pages, (2) admits
+queued prompts into free slots — at most ``max_prefill_per_tick`` per
+tick, the prefill/decode disaggregation that keeps long prefills from
+stalling the in-flight batch — and (3) runs ONE compiled decode step at
+the fixed ``(max_batch, 1)`` shape with active-slot masking and per-row
+positions.  All jitted programs are built once in ``__init__`` (the
+hoisted-jit satellite): prefill compiles once per distinct prompt
+length, admit-write and decode exactly once.
+
+At temperature 0 the per-row outputs are BIT-IDENTICAL to the static
+``launch/serve.generate`` reference with the same ``max_len``
+(tests/test_serving.py pins this, including mid-stream admissions): the
+vector-position decode writes the same cache values, garbage rows/pages
+only ever contribute exp(NEG_INF) = 0.0 to the softmax, and XLA's
+per-row results are batch-size-stable.  The one documented exception is
+capacity-dispatch MoE decode (tokens mix across rows); int8 KV
+quantization is lossy by construction.
+
+Timing is injectable: the default :class:`Clock` reads the wall;
+:class:`SimClock` + :class:`SimCosts` run the SAME scheduling logic on
+modeled per-step costs — fully deterministic, which is what the
+``serving`` suite of scripts/bench_ci.py gates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.kv_cache import PagedDecodeCache
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+class Clock:
+    """Wall clock with an idle fast-forward: ``skip_to`` advances a virtual
+    offset instead of sleeping, so a trace with gaps replays without
+    penalizing the server for having no work."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._offset = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._offset
+
+    def skip_to(self, t: float) -> None:
+        self._offset += max(0.0, t - self.now())
+
+    def advance(self, dt: float) -> None:   # no-op: real work takes real time
+        del dt
+
+
+class SimClock:
+    """Virtual clock for deterministic simulation: work advances it by
+    modeled costs (:class:`SimCosts`), idleness skips it forward."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def skip_to(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@dataclasses.dataclass(frozen=True)
+class SimCosts:
+    """Modeled per-step costs for simulated serving: a prefill charges
+    ``tokens x prefill_s_per_token``; every decode tick charges the flat
+    ``decode_step_s`` of the fixed-shape compiled step."""
+    prefill_s_per_token: float = 2e-4
+    decode_step_s: float = 2e-3
+
+
+# ---------------------------------------------------------------------------
+# Requests / completions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int                  # generated tokens incl. the prefill token
+    arrival_s: float = 0.0
+    temperature: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray            # (n,) int32 generated tokens
+    arrival_s: float
+    admit_s: float
+    emit_s: List[float]           # per-token emission times
+
+    @property
+    def first_token_s(self) -> float:
+        return self.emit_s[0]
+
+    @property
+    def finish_s(self) -> float:
+        return self.emit_s[-1]
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def per_token_latency_s(self) -> float:
+        """Normalized request latency — the serving metric the bench
+        reports p50/p99 of: (finish - arrival) / generated tokens."""
+        return (self.finish_s - self.arrival_s) / max(len(self.tokens), 1)
+
+
+def poisson_trace(n: int, mean_interarrival_s: float, prompt_len: int,
+                  max_new_choices: Sequence[int], vocab: int,
+                  seed: int = 0) -> List[Request]:
+    """A deterministic Poisson arrival trace: exponential interarrivals,
+    random prompts, and generation lengths drawn from
+    ``max_new_choices`` (a skewed mix makes the static baseline pay the
+    max-length padding tax)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += float(rng.exponential(mean_interarrival_s))
+        out.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=(prompt_len,)).astype(np.int32),
+            max_new=int(rng.choice(np.asarray(max_new_choices))),
+            arrival_s=t))
+    return out
+
+
+def latency_summary(completions: Sequence[Completion]) -> Dict[str, float]:
+    """Throughput + per-token latency percentiles over a finished trace."""
+    if not completions:
+        return {"tokens": 0, "tokens_per_s": 0.0, "makespan_s": 0.0,
+                "p50_s": 0.0, "p99_s": 0.0, "mean_ttft_s": 0.0}
+    toks = sum(len(c.tokens) for c in completions)
+    t0 = min(c.arrival_s for c in completions)
+    t1 = max(c.finish_s for c in completions)
+    lat = np.asarray([c.per_token_latency_s for c in completions])
+    return {"tokens": toks,
+            "tokens_per_s": toks / max(t1 - t0, 1e-12),
+            "makespan_s": t1 - t0,
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "mean_ttft_s": float(np.mean([c.ttft_s for c in completions]))}
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig + Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 64
+    page_size: int = 8
+    n_pages: Optional[int] = None       # default: fully provisioned + trash
+    quantize: Optional[str] = None      # "int8" for lossy paged KV
+    max_prefill_per_tick: int = 1
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "last", "tokens", "admit_s", "emit_s")
+
+    def __init__(self, req: Request, admit_s: float):
+        self.req = req
+        self.pos = req.prompt_len     # next cache position to write
+        self.last = 0                 # last generated token (decode input)
+        self.tokens: List[int] = []
+        self.admit_s = admit_s
+        self.emit_s: List[float] = []
+
+
+class Engine:
+    """One serving replica.  ``sim=SimCosts(...)`` (with a
+    :class:`SimClock`) runs the identical admission/retirement state
+    machine on modeled costs and synthetic tokens — no device work."""
+
+    def __init__(self, model, params, cfg: ServeConfig, clock=None,
+                 sim: Optional[SimCosts] = None, dtype=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.sim = sim
+        self.clock = clock if clock is not None else (
+            SimClock() if sim is not None else Clock())
+        self.cache = PagedDecodeCache(
+            model, cfg.max_batch, cfg.max_len, cfg.page_size,
+            n_pages=cfg.n_pages, quantize=cfg.quantize, dtype=dtype,
+            build_pool=sim is None)
+        self.pool = self.cache.pool
+        self._slots: List[Optional[_Slot]] = [None] * cfg.max_batch
+        self._pending: deque = deque()      # not yet arrived (by arrival_s)
+        self._queue: deque = deque()        # arrived, waiting for admission
+        self._rng_base = None if sim is not None else __import__(
+            "jax").random.PRNGKey(cfg.seed)
+        self.decode_ticks = 0
+        self.prefills = 0
+        if sim is None:
+            self._build_jits()
+
+    # -- compiled programs (built ONCE; the hoisted-jit satellite) ----------
+
+    def _build_jits(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.sharding_ctx import mesh_ctx
+        model, cache, max_len = self.model, self.cache, self.cfg.max_len
+
+        # The activation-sharding context is process-global and set by the
+        # TRAINING launcher; a server built in the same process must not
+        # inherit it — a stale mesh would bake with_sharding_constraint ops
+        # into the serving programs (committed NamedSharding outputs -> a
+        # second executable-cache entry per jit, breaking the compile-once
+        # contract) and change num_batch_shards() under MoE dispatch.
+        def prefill_fn(params, tokens):
+            with mesh_ctx(None, ()):
+                return model.prefill(params, {"tokens": tokens},
+                                     max_len=max_len)
+
+        def admit_fn(pool, cache_row, table_row, slot):
+            return cache.write_prefill(pool, cache_row, table_row, slot)
+
+        def decode_fn(params, pool, tokens, pos, tables, active):
+            with mesh_ctx(None, ()):
+                linear = cache.gather(pool, tables)
+                pos_c = jnp.where(active, pos, 0)
+                logits, new_linear = model.decode_step(params, tokens,
+                                                       linear, pos_c)
+                pool = cache.scatter_token(pool, new_linear, pos_c, tables,
+                                           active)
+                last = logits[:, -1]
+                return (jnp.argmax(last, axis=-1).astype(jnp.int32), last,
+                        pool)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._admit = jax.jit(admit_fn, donate_argnums=(0,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Traced-program counts per compiled entry point (engine contract:
+        decode and admit trace exactly once; prefill once per distinct
+        prompt length)."""
+        out = {}
+        for name in ("_prefill", "_admit", "_decode"):
+            fn = getattr(self, name, None)
+            if fn is not None and hasattr(fn, "_cache_size"):
+                out[name[1:]] = fn._cache_size()
+        return out
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if req.prompt_len + req.max_new > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new} exceeds max_len {self.cfg.max_len}")
+        self._pending.append(req)
+        self._pending = deque(sorted(self._pending,
+                                     key=lambda r: (r.arrival_s, r.rid)))
+
+    def load(self) -> int:
+        """Outstanding work (router metric): waiting + in flight."""
+        return (len(self._pending) + len(self._queue)
+                + sum(s is not None for s in self._slots))
+
+    def busy(self) -> bool:
+        return self.load() > 0
+
+    def _ingest(self) -> None:
+        now = self.clock.now()
+        while self._pending and self._pending[0].arrival_s <= now:
+            self._queue.append(self._pending.popleft())
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _sample(self, row_logits, temperature: float, rid: int,
+                step: int) -> int:
+        import jax
+        import jax.numpy as jnp
+        if temperature <= 0.0:
+            return int(np.argmax(np.asarray(row_logits)))
+        key = jax.random.fold_in(jax.random.fold_in(self._rng_base, rid),
+                                 step)
+        return int(jax.random.categorical(
+            key, jnp.asarray(row_logits) / temperature))
+
+    def _sim_token(self, rid: int, step: int) -> int:
+        return (rid * 997 + step * 31) % 1000
+
+    # -- the tick -----------------------------------------------------------
+
+    def _admit_one(self, req: Request, slot: int) -> List[Completion]:
+        import jax.numpy as jnp
+        need = req.prompt_len + req.max_new
+        self.cache.alloc(slot, need)
+        admit_s = self.clock.now()
+        if self.sim is not None:
+            self.clock.advance(req.prompt_len * self.sim.prefill_s_per_token)
+            first = self._sim_token(req.rid, 0)
+        else:
+            logits, cache_row = self._prefill(self.params,
+                                             jnp.asarray(req.prompt)[None, :])
+            first = self._sample(logits[0, -1], req.temperature, req.rid, 0)
+            table_row = {L: jnp.asarray(a.table()[slot])
+                         for L, a in self.cache.allocators.items()}
+            self.pool = self._admit(self.pool, cache_row, table_row,
+                                    jnp.asarray(slot, jnp.int32))
+        self.prefills += 1
+        s = _Slot(req, admit_s)
+        s.last = first
+        s.tokens.append(first)
+        s.emit_s.append(self.clock.now())
+        self._slots[slot] = s
+        return self._retire_if_done(slot)
+
+    def _retire_if_done(self, slot: int) -> List[Completion]:
+        s = self._slots[slot]
+        done = (len(s.tokens) >= s.req.max_new
+                or (self.cfg.eos_id is not None
+                    and s.tokens[-1] == self.cfg.eos_id))
+        if not done:
+            return []
+        self._slots[slot] = None
+        self.cache.free(slot)
+        return [Completion(rid=s.req.rid, prompt_len=s.req.prompt_len,
+                           tokens=np.asarray(s.tokens, np.int32),
+                           arrival_s=s.req.arrival_s, admit_s=s.admit_s,
+                           emit_s=list(s.emit_s))]
+
+    def _decode_tick(self) -> List[Completion]:
+        B = self.cfg.max_batch
+        active = np.array([s is not None for s in self._slots])
+        if not active.any():
+            return []
+        tokens = np.array([[s.last if s else 0] for s in self._slots],
+                          np.int32)
+        pos = np.array([s.pos if s else 0 for s in self._slots], np.int32)
+        self.decode_ticks += 1
+        if self.sim is not None:
+            self.clock.advance(self.sim.decode_step_s)
+            nxt = np.array([self._sim_token(s.req.rid, len(s.tokens))
+                            if s else 0 for s in self._slots])
+            logits = None
+        else:
+            import jax.numpy as jnp
+            greedy, logits, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(tokens),
+                jnp.asarray(pos), self.cache.tables(), jnp.asarray(active))
+            nxt = np.asarray(greedy)
+        now = self.clock.now()
+        done: List[Completion] = []
+        for b in range(B):
+            s = self._slots[b]
+            if s is None:
+                continue
+            if self.sim is not None or s.req.temperature <= 0.0:
+                tok = int(nxt[b])
+            else:
+                tok = self._sample(logits[b], s.req.temperature, s.req.rid,
+                                   len(s.tokens))
+            s.pos += 1
+            s.last = tok
+            s.tokens.append(tok)
+            s.emit_s.append(now)
+            done += self._retire_if_done(b)
+        return done
+
+    def step(self) -> List[Completion]:
+        """One engine tick: ingest arrivals, admit (bounded prefills),
+        decode the in-flight batch, retire finished rows."""
+        done: List[Completion] = []
+        self._ingest()
+        if (not self._queue and not any(self._slots) and self._pending):
+            self.clock.skip_to(self._pending[0].arrival_s)
+            self._ingest()
+        admits = 0
+        while self._queue and admits < self.cfg.max_prefill_per_tick:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self._queue[0]
+            if not self.cache.can_admit(req.prompt_len + req.max_new):
+                break                      # FCFS: wait for pages to free
+            self._queue.popleft()
+            done += self._admit_one(req, slot)
+            admits += 1
+        done += self._decode_tick()
+        return done
+
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        for r in requests:
+            self.submit(r)
+        out: List[Completion] = []
+        while self.busy():
+            out += self.step()
+        self.cache.check()
+        return sorted(out, key=lambda c: c.rid)
+
+
+# ---------------------------------------------------------------------------
+# Static-batching baseline
+# ---------------------------------------------------------------------------
+
+def static_compiled(model):
+    """The (prefill, decode) jit pair :func:`run_static` uses — build once
+    and pass via ``compiled=`` to keep compilation out of a measured run.
+    Traced under a cleared activation-sharding context for the same reason
+    as ``Engine._build_jits``: serving programs must not inherit a leaked
+    training mesh."""
+    import jax
+    from repro.models.sharding_ctx import mesh_ctx
+
+    def prefill_fn(params, batch, *, max_len):
+        with mesh_ctx(None, ()):
+            return model.prefill(params, batch, max_len=max_len)
+
+    def decode_fn(params, tok, cache, pos):
+        with mesh_ctx(None, ()):
+            return model.decode_step(params, tok, cache, pos)
+
+    return (jax.jit(prefill_fn, static_argnames=("max_len",)),
+            jax.jit(decode_fn, donate_argnums=(2,)))
+
+
+def run_static(model, params, requests: Sequence[Request], max_batch: int,
+               max_len: int, clock=None, sim: Optional[SimCosts] = None,
+               dtype=None, compiled=None) -> List[Completion]:
+    """The static-batching baseline the bench compares against: FCFS
+    batches of up to ``max_batch`` ARRIVED requests; each batch prefills
+    together and decodes in lockstep to the batch's LONGEST ``max_new``
+    (shorter rows pay the padding tax).  Shares the engine's clock
+    semantics and, in real mode, the classic scalar-``pos`` decode graph
+    compiled once at the padded ``(max_batch, 1)`` shape."""
+    clock = clock if clock is not None else (
+        SimClock() if sim is not None else Clock())
+    todo = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+    out: List[Completion] = []
+    if sim is None:
+        prefill, decode = (compiled if compiled is not None
+                           else static_compiled(model))
+
+    while todo:
+        if todo[0].arrival_s > clock.now():
+            clock.skip_to(todo[0].arrival_s)
+        batch = []
+        while todo and len(batch) < max_batch \
+                and todo[0].arrival_s <= clock.now():
+            batch.append(todo.popleft())
+        P = batch[0].prompt_len
+        assert all(r.prompt_len == P for r in batch), \
+            "static batching pads prompts to one length per batch"
+        gen = max(r.max_new for r in batch)
+        admit_s = clock.now()
+        rows = [r.prompt for r in batch]
+        rows += [rows[-1]] * (max_batch - len(batch))   # shape padding
+        toks: List[List[int]] = [[] for _ in batch]
+        emit: List[List[float]] = [[] for _ in batch]
+
+        if sim is not None:
+            clock.advance(sum(r.prompt_len for r in batch)
+                          * sim.prefill_s_per_token)
+            for i, r in enumerate(batch):
+                toks[i].append((r.rid * 997) % 1000)
+                emit[i].append(clock.now())
+            for step in range(1, gen):
+                clock.advance(sim.decode_step_s)
+                now = clock.now()
+                for i, r in enumerate(batch):
+                    if step < r.max_new:
+                        toks[i].append((r.rid * 997 + step * 31) % 1000)
+                        emit[i].append(now)
+        else:
+            import jax.numpy as jnp
+            prompts = jnp.asarray(np.stack(rows))
+            logits, cache = prefill(params, {"tokens": prompts},
+                                    max_len=max_len)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            host = np.asarray(tok[:, 0])
+            now = clock.now()
+            for i in range(len(batch)):
+                toks[i].append(int(host[i]))
+                emit[i].append(now)
+            for step in range(1, gen):
+                logits, cache = decode(params, tok, cache,
+                                       jnp.asarray(P + step - 1, jnp.int32))
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(
+                    jnp.int32)[:, None]
+                host = np.asarray(tok[:, 0])
+                now = clock.now()
+                for i, r in enumerate(batch):
+                    if step < r.max_new:
+                        toks[i].append(int(host[i]))
+                        emit[i].append(now)
+
+        for i, r in enumerate(batch):
+            out.append(Completion(rid=r.rid, prompt_len=r.prompt_len,
+                                  tokens=np.asarray(toks[i], np.int32),
+                                  arrival_s=r.arrival_s, admit_s=admit_s,
+                                  emit_s=emit[i]))
+    return sorted(out, key=lambda c: c.rid)

@@ -1,0 +1,340 @@
+"""Paged KV-cache manager (DESIGN.md §12).
+
+The decode cache of every architecture family is a pytree whose leaves
+split two ways (``transformer.stack_cache_meta``):
+
+  * **paged** leaves — attention K/V, MLA latents — have a per-position
+    length dim.  Instead of a dense ``(max_batch, L, ...)`` block per
+    slot, positions live in a GLOBAL pool of fixed-size pages
+    ``(n_pages, page_size, ...)`` (stacked segments: ``(R, n_pages,
+    page_size, ...)``), and each serving slot owns a host-side page table
+    mapping logical page -> physical page.  Pages are allocated at
+    admission (enough for ``prompt + max_new`` tokens) and freed at
+    retirement, so short requests hold few pages and the pool, not the
+    slot count, bounds admission.
+  * **state** leaves — recurrent h/conv/C, xLSTM states — are carried
+    whole per slot: pool shape == linear shape at ``max_batch``.
+
+Page 0 is the reserved TRASH page: unallocated table entries point at it
+and masked (inactive-slot) writes land on it.  Its garbage is never read
+— the decode-side validity masks multiply stale scores by exactly 0.0
+(``NEG_INF`` -> softmax 0), which is the masking contract that makes the
+paged view bit-identical to the dense cache.
+
+Optional int8 KV quantization (``quantize="int8"``) stores paged leaves
+as ``{"q": int8, "s": f32 per-token scales}`` through the
+``kernels/ops.py`` quantize wire (one tile per token entry, inheriting
+its pad-and-mask contract).  Quantized serving is LOSSY — the
+bit-identity guarantee applies to the unquantized pool only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (CacheLeafMeta, materialize_cache,
+                                      stack_cache_meta)
+
+TRASH_PAGE = 0
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for ONE table group (all cache leaves
+    sharing length ``length``): a LIFO free list over the global pool plus
+    per-slot page tables.  Invariants (``check()``): page 0 is never
+    handed out, no page is owned twice, and free + owned + trash always
+    partition the pool."""
+
+    def __init__(self, n_pages: int, page_size: int, length: int,
+                 max_batch: int):
+        if length % page_size:
+            raise ValueError(f"page_size {page_size} must divide cache "
+                             f"length {length}")
+        if n_pages < 2:
+            raise ValueError("pool needs at least one page beyond trash")
+        self.page_size = int(page_size)
+        self.length = int(length)
+        self.pages_per_slot = length // page_size
+        self.n_pages = int(n_pages)
+        self.max_batch = int(max_batch)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(max_batch)]
+        self._table = np.full((max_batch, self.pages_per_slot), TRASH_PAGE,
+                              np.int32)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages to cover ``n_tokens`` positions — capped at the group's
+        table width (ring/window groups wrap instead of growing)."""
+        return min(-(-int(n_tokens) // self.page_size), self.pages_per_slot)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= len(self._free)
+
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        if self._owned[slot]:
+            raise RuntimeError(f"slot {slot} already owns pages "
+                               f"{self._owned[slot]}")
+        n = self.pages_needed(n_tokens)
+        if n > len(self._free):
+            raise RuntimeError(f"out of pages: need {n}, free "
+                               f"{len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = pages
+        self._table[slot] = TRASH_PAGE
+        self._table[slot, :n] = pages
+        return pages
+
+    def free(self, slot: int) -> int:
+        pages = self._owned[slot]
+        self._owned[slot] = []
+        self._free.extend(reversed(pages))
+        self._table[slot] = TRASH_PAGE
+        return len(pages)
+
+    def live_pages(self) -> Set[int]:
+        return {p for owned in self._owned for p in owned}
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    def table(self) -> np.ndarray:
+        """(max_batch, pages_per_slot) int32 logical->physical map;
+        unallocated entries point at the trash page."""
+        return self._table.copy()
+
+    def check(self) -> None:
+        live = self.live_pages()
+        assert TRASH_PAGE not in live, "trash page was handed out"
+        assert TRASH_PAGE not in self._free, "trash page on the free list"
+        assert len(live) + len(self._free) + 1 == self.n_pages, (
+            f"page leak: {len(live)} live + {len(self._free)} free + trash "
+            f"!= {self.n_pages}")
+        flat = [p for owned in self._owned for p in owned]
+        assert len(flat) == len(set(flat)), "page owned by two slots"
+
+
+def _quant(x):
+    """Symmetric int8 through the ``kernels/ops`` quantize wire: one tile
+    per last-axis row (tile = trailing dim), inheriting the wire's
+    pad-and-mask contract.  Returns (q ``x.shape`` int8, scales
+    ``x.shape[:-1]`` f32)."""
+    from repro.kernels import ops
+    q, s = ops.quantize_tiles(x.astype(jnp.float32).reshape(-1),
+                              tile=x.shape[-1])
+    return q.reshape(x.shape), s.reshape(x.shape[:-1])
+
+
+def _dequant(q, s, dtype):
+    """Inverse through the same wire (``ops.dequantize``): q ``(...,
+    rest)`` int8, s ``(...)`` per-row scales."""
+    from repro.kernels import ops
+    flat = ops.dequantize(q.reshape(-1), s.reshape(-1), tile=q.shape[-1])
+    return flat.reshape(q.shape).astype(dtype)
+
+
+class PagedDecodeCache:
+    """Device pool + host allocators for one model's decode cache.
+
+    The pure device functions (``gather`` / ``write_prefill`` /
+    ``scatter_token``) take the pool pytree as an argument and return the
+    updated pool, so the engine can fold them into its compiled
+    prefill-write and decode-step programs; the allocators are plain host
+    state driving admission control.
+    """
+
+    def __init__(self, model, max_batch: int, max_len: int, page_size: int,
+                 n_pages: Optional[int] = None, dtype=None,
+                 quantize: Optional[str] = None, build_pool: bool = True):
+        from repro.models.model import _dtype as resolve_dtype
+        cfg = model.cfg
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("paged serving covers decoder-only "
+                                      "stacks (no cross-attention cache)")
+        if quantize not in (None, "int8"):
+            raise ValueError(f"unknown KV quantization {quantize!r}")
+        dtype = dtype or resolve_dtype(cfg.compute_dtype)
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.quantize = quantize
+        self.dtype = dtype
+        self.specs = model.init_cache(max_batch, max_len, dtype=dtype)
+        self.meta = stack_cache_meta(cfg, model.plan, max_batch, max_len,
+                                     dtype)
+
+        lengths = sorted({m.length for m in jax.tree.leaves(
+            self.meta, is_leaf=lambda x: isinstance(x, CacheLeafMeta))
+            if m.kind == "paged"})
+        self.allocators: Dict[int, PageAllocator] = {}
+        for L in lengths:
+            full = 1 + max_batch * (L // page_size)
+            self.allocators[L] = PageAllocator(
+                n_pages if n_pages is not None else full,
+                page_size, L, max_batch)
+        self.pool = self._build_pool() if build_pool else None
+
+    # -- pool construction --------------------------------------------------
+
+    def _leaf_map(self, fn, *trees):
+        """tree.map over (meta, *aligned trees) with meta leaves opaque."""
+        return jax.tree.map(fn, self.meta, *trees,
+                            is_leaf=lambda x: isinstance(x, CacheLeafMeta))
+
+    def _build_pool(self):
+        page = self.page_size
+
+        def pool_spec(m, s):
+            if m.kind == "state":
+                return s
+            np_ = self.allocators[m.length].n_pages
+            if m.batch_axis == 1:
+                shape = (s.shape[0], np_, page) + s.shape[3:]
+            else:
+                shape = (np_, page) + s.shape[2:]
+            return jax.ShapeDtypeStruct(shape, s.dtype)
+
+        pool = materialize_cache(self._leaf_map(pool_spec, self.specs))
+        if self.quantize == "int8":
+            def quantized(m, p):
+                if m.kind == "state":
+                    return p
+                return {"q": jnp.zeros(p.shape, jnp.int8),
+                        "s": jnp.zeros(p.shape[:-1], jnp.float32)}
+            pool = self._leaf_map(quantized, pool)
+        return pool
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return all(a.can_admit(n_tokens) for a in self.allocators.values())
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        for a in self.allocators.values():
+            a.alloc(slot, n_tokens)
+
+    def free(self, slot: int) -> int:
+        return sum(a.free(slot) for a in self.allocators.values())
+
+    def tables(self) -> Dict[int, jnp.ndarray]:
+        """{length: (max_batch, pages_per_slot) int32} device page tables
+        — one table per length group, shared by every leaf of that L."""
+        return {L: jnp.asarray(a.table())
+                for L, a in self.allocators.items()}
+
+    def check(self) -> None:
+        for a in self.allocators.values():
+            a.check()
+
+    # -- pure device functions (fold into the engine's jitted steps) --------
+
+    def _split(self, p, m):
+        """(values_leaf, scales_leaf_or_None) view of a pool leaf."""
+        if self.quantize == "int8" and m.kind == "paged":
+            return p["q"], p["s"]
+        return p, None
+
+    def gather(self, pool, tables):
+        """Pool -> linear ``(max_batch, L, ...)`` cache view through the
+        page tables: the pytree ``model.decode_step`` consumes.  State
+        leaves pass through; garbage gathered from trash/beyond-``pos``
+        pages is neutralized by the decode validity masks."""
+        B = self.max_batch
+
+        def g(m, p):
+            if m.kind == "state":
+                return p
+            vals, scales = self._split(p, m)
+            t = tables[m.length]                       # (B, pps)
+            if m.batch_axis == 1:
+                x = vals[:, t]                         # (R, B, pps, page, ...)
+                out = x.reshape((x.shape[0], B, m.length) + x.shape[4:])
+                if scales is not None:
+                    s = scales[:, t].reshape(out.shape[:-1])
+                    out = _dequant(out, s, self.dtype)
+                return out
+            x = vals[t]                                # (B, pps, page, ...)
+            out = x.reshape((B, m.length) + x.shape[3:])
+            if scales is not None:
+                s = scales[t].reshape(out.shape[:-1])
+                out = _dequant(out, s, self.dtype)
+            return out
+
+        return self._leaf_map(g, pool)
+
+    def write_prefill(self, pool, cache_row, table_row, slot):
+        """Write one request's prefill cache (linear, batch=1) into its
+        pages and state row.  ``table_row``: {length: (pps,) int32};
+        ``slot``: traced scalar int32.  Unallocated table entries point at
+        trash, so short allocations spill harmlessly."""
+        page = self.page_size
+
+        def w(m, p, c):
+            if m.kind == "state":
+                if m.batch_axis == 1:
+                    return p.at[:, slot].set(c[:, 0].astype(p.dtype))
+                return p.at[slot].set(c[0].astype(p.dtype))
+            tr = table_row[m.length]                   # (pps,)
+            pps = tr.shape[0]
+            vals, scales = self._split(p, m)
+            if m.batch_axis == 1:
+                rows = c[:, 0]                         # (R, L, ...)
+                rows = rows.reshape((rows.shape[0], pps, page)
+                                    + rows.shape[2:])
+            else:
+                rows = c[0].reshape((pps, page) + c.shape[2:])
+            if scales is None:
+                if m.batch_axis == 1:
+                    return p.at[:, tr].set(rows.astype(p.dtype))
+                return p.at[tr].set(rows.astype(p.dtype))
+            q, s = _quant(rows)
+            if m.batch_axis == 1:
+                return {"q": vals.at[:, tr].set(q),
+                        "s": scales.at[:, tr].set(s)}
+            return {"q": vals.at[tr].set(q), "s": scales.at[tr].set(s)}
+
+        return self._leaf_map(w, pool, cache_row)
+
+    def scatter_token(self, pool, linear, pos, tables, active):
+        """Write the decode step's new entries back: paged leaves scatter
+        the per-row entry at ``pos[b] % L`` into ``(page, offset)`` through
+        the table — inactive rows are routed to the trash page — and state
+        leaves adopt the updated linear rows wholesale (inactive rows hold
+        garbage that the next admission's prefill write overwrites)."""
+        B = self.max_batch
+        page = self.page_size
+        rows = jnp.arange(B)
+
+        def s_(m, p, lin):
+            if m.kind == "state":
+                return lin.astype(p.dtype)
+            L = m.length
+            slot = pos % L                              # (B,)
+            page_idx = slot // page
+            off = slot % page
+            t = tables[L]
+            phys = jnp.take_along_axis(t, page_idx[:, None], axis=1)[:, 0]
+            phys = jnp.where(active, phys, TRASH_PAGE)
+            vals, scales = self._split(p, m)
+            if m.batch_axis == 1:
+                entry = lin[:, rows, slot]              # (R, B, ...)
+            else:
+                entry = lin[rows, slot]                 # (B, ...)
+            if scales is None:
+                if m.batch_axis == 1:
+                    return p.at[:, phys, off].set(entry.astype(p.dtype))
+                return p.at[phys, off].set(entry.astype(p.dtype))
+            q, s = _quant(entry)
+            if m.batch_axis == 1:
+                return {"q": vals.at[:, phys, off].set(q),
+                        "s": scales.at[:, phys, off].set(s)}
+            return {"q": vals.at[phys, off].set(q),
+                    "s": scales.at[phys, off].set(s)}
+
+        return self._leaf_map(s_, pool, linear)
