@@ -245,6 +245,54 @@ def collect_serving() -> dict:
     return serving
 
 
+def collect_calibration() -> dict:
+    """Calibration suite (DESIGN.md §13): fully deterministic — the
+    per-tier α/β link fit replayed over RECORDED collective timings
+    (``benchmarks/fixtures/calibration_timings.json``, a synthetic
+    two-tier fabric with known ground truth plus fixed additive noise),
+    never live timings.  Gated numbers per tier: fitted α (µs), fitted β
+    (ps/byte) and the fit residual (µs) — a drift in any of them means
+    the fit pipeline changed what it extracts from identical data.  Plus
+    the canned drift-report math (drift % and the modeled wall step),
+    which must stay exact."""
+    from repro.core.schedule import (Topology, calibrate_topology,
+                                     drift_fraction, modeled_wall_step_s)
+
+    with open(os.path.join(REPO, "benchmarks", "fixtures",
+                           "calibration_timings.json")) as f:
+        fx = json.load(f)
+    lookup = {(s["tier"], s["algo"], s["p"], s["n_bytes"]): s["seconds"]
+              for s in fx["samples"]}
+
+    def timer(algo, tier, p, n_bytes):
+        return lookup[(tier, algo, int(p), float(n_bytes))]
+
+    cal = calibrate_topology(Topology.from_spec(fx["spec"]), timer=timer,
+                             sizes=fx["sizes"], algos=fx["algos"])
+    out: dict = {}
+    for name, fit in cal.fits:
+        out[f"{fx['spec']}/{name}/alpha"] = {
+            "metric": "alpha_us", "alpha_us": fit.alpha_s * 1e6,
+            "arm": f"R2={fit.r2:.4f}"}
+        out[f"{fx['spec']}/{name}/beta"] = {
+            "metric": "beta_ps_per_byte",
+            "beta_ps_per_byte": fit.beta_s_per_byte * 1e12,
+            "arm": f"{1.0 / fit.beta_s_per_byte / 1e9:.2f} GB/s"}
+        out[f"{fx['spec']}/{name}/rms"] = {
+            "metric": "fit_rms_us", "fit_rms_us": fit.rms_s * 1e6,
+            "arm": f"n={fit.n_samples}"}
+    # canned drift math: exact by construction, gated at exact values
+    out["drift/canned_20pct"] = {
+        "metric": "drift_pct",
+        "drift_pct": drift_fraction(10e-3, 12e-3) * 100.0,
+        "arm": "measured 12ms vs modeled 10ms"}
+    out["drift/modeled_wall"] = {
+        "metric": "modeled_wall_ms",
+        "modeled_wall_ms": modeled_wall_step_s(8e-3, 4e-3) * 1e3,
+        "arm": "overlap 8ms + fwd 2ms"}
+    return out
+
+
 def collect() -> dict:
     """All tracked records, keyed by suite name."""
     from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
@@ -345,7 +393,8 @@ def collect() -> dict:
                 "arm": tbest.key}
     return {"planner": planner, "sharded": sharded, "pipeline": pipeline,
             "topology": topology, "kernels": collect_kernels(),
-            "serving": collect_serving()}
+            "serving": collect_serving(),
+            "calibration": collect_calibration()}
 
 
 def gate(records: dict, baseline_dir: str, tolerance: float) -> list:

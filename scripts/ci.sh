@@ -64,6 +64,32 @@ if [[ "${1:-}" != "--fast" ]]; then
       --topology node:4@datacenter,device:8@fast_ici \
       --plan-backward-ms 20 --log-every 1
 
+  step "smoke: 5-step --calibrate --sync auto train (drift record)"
+  # the modeled<->measured loop (DESIGN.md §13): time real collectives on
+  # this host, fit alpha/beta with confidence bounds, plan on the fitted
+  # fabric, and close the loop — the plan record must carry the fitted
+  # calibration block and a POPULATED drift block
+  python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 5 --batch 2 --seq 32 --sync auto --calibrate --log-every 1
+  python - <<'PY'
+import json
+with open("artifacts/comm_plans/xlstm-125m.json") as f:
+    rec = json.load(f)
+assert "calibration" in rec, "plan record missing the calibration block"
+tiers = rec["calibration"]["tiers"]
+assert tiers and all("alpha_s" in t and "alpha_err_s" in t for t in tiers), \
+    f"calibration tiers lack fitted alpha/beta + bounds: {tiers}"
+d = rec.get("drift")
+assert d, "plan record missing the drift block"
+for k in ("modeled_wall_step_s", "measured_step_s", "drift_pct",
+          "fit_error_s", "within_fit_error", "arms"):
+    assert k in d, f"drift block missing {k!r}: {sorted(d)}"
+assert d["measured_step_s"] > 0 and d["arms"], "drift block not populated"
+print(f"drift block OK: modeled {d['modeled_wall_step_s']*1e3:.1f} ms vs "
+      f"measured {d['measured_step_s']*1e3:.1f} ms "
+      f"({d['drift_pct']:+.1f}%, within_fit_error={d['within_fit_error']})")
+PY
+
   if (( DEVICES % 2 == 0 && DEVICES >= 2 )); then
     step "smoke: 3-step pipeline train (S=2, M=2, reduced gemma-2b)"
     python -m repro.launch.train --arch gemma-2b --reduced \

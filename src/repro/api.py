@@ -35,6 +35,7 @@ counted HONESTLY: a round is a collective that actually ran (gradient syncs
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -48,11 +49,14 @@ from repro.core import (GradientSynchronizer, PlanExecutor, ShardLayout,
 from repro.core.grad_sync import sharded_plan_from_config
 from repro.core.pipeline import StagedModel
 from repro.core.collectives import axes_for_topology
-from repro.core.schedule import (LINK_PRESETS, LinkParams, PipelineAxis,
-                                 RoundSchedule, StrategyPlan, Topology,
-                                 fixed_config_plan, pipeline_arm,
-                                 pipeline_placements, plan, plan_rounds,
-                                 profiles_from_grads, resolve_cost_table,
+from repro.core.schedule import (LINK_PRESETS, CalibratedTopology,
+                                 LinkParams, PipelineAxis, RoundSchedule,
+                                 StrategyPlan, Topology, calibrate_topology,
+                                 drift_fraction, fixed_config_plan,
+                                 modeled_wall_step_s, pipeline_arm,
+                                 pipeline_placements, plan, plan_comm_error_s,
+                                 plan_rounds, profiles_from_grads,
+                                 resolve_calibration, resolve_cost_table,
                                  serial_round_plan)
 from repro.core.schedule.planner import FIXED_BASELINES, local_sgd_arm
 from repro.core.strategy import LocalSGDScheduler
@@ -167,6 +171,16 @@ class TrainSession:
         self.staged: Optional[StagedModel] = None   # set by pipeline builds
         self.topology: Optional[Topology] = None    # set by apply_topology
         self.tiered_mesh = False     # True when the mesh IS one-axis-per-tier
+        self.calibration: Optional[CalibratedTopology] = None
+        self.step_times: List[float] = []      # per-step wall time (run())
+        self.replans = 0
+        self.replan_events: List[Dict[str, Any]] = []
+        self._t_backward_spread_s = 0.0        # profile_backward repeat spread
+        self._replan_drift_pct = 0.0           # 0 = replanning off
+        self._replan_every = 25
+        self._max_replans = 1
+        self._window: List[float] = []         # step times since last check
+        self._plan_kwargs: Optional[Dict[str, Any]] = None
         self._built = False
 
     # -- state views ---------------------------------------------------------
@@ -240,21 +254,58 @@ class TrainSession:
             self.world = topo.world
         return topo
 
-    def profile_backward(self) -> float:
+    def profile_backward(self, repeats: int = 3) -> float:
         """Wall time of the PER-DEVICE backward (compile excluded): the
         planned shard_map step computes global_batch / world per device, so
         time that slice — timing the full global batch would inflate
         t_backward by the data-parallel factor and make the planner
-        over-hide communication.  bwd ≈ 2/3 of a grad step."""
+        over-hide communication.  bwd ≈ 2/3 of a grad step.  Min-of-N
+        (the calibration timing policy, DESIGN.md §13); the repeat spread
+        is kept as ``_t_backward_spread_s``, the measurement-error term
+        of the drift report's fit bound."""
         grad_fn = jax.jit(lambda p, b: jax.grad(self.model.loss)(p, b))
         batch = jax.tree.map(jnp.asarray, self.data.batch(0))
         n_global = jax.tree.leaves(batch)[0].shape[0]
         per_dev = max(1, n_global // self.world)
         batch = jax.tree.map(lambda x: x[:per_dev], batch)
         jax.block_until_ready(grad_fn(self._params, batch))   # compile
-        t0 = time.time()
-        jax.block_until_ready(grad_fn(self._params, batch))
-        return (time.time() - t0) * (2.0 / 3.0)
+        times = []
+        for _ in range(max(repeats, 1)):
+            t0 = time.time()
+            jax.block_until_ready(grad_fn(self._params, batch))
+            times.append(time.time() - t0)
+        self._t_backward_spread_s = (max(times) - min(times)) * (2.0 / 3.0)
+        return min(times) * (2.0 / 3.0)
+
+    def calibrate(self, sizes=None, repeats=None,
+                  timer=None) -> CalibratedTopology:
+        """Measure THIS host's collective fabric and fit per-tier α/β
+        with confidence bounds (``--calibrate``, DESIGN.md §13).  On a
+        tiered mesh (``apply_topology`` matched the device count) each
+        tier's axis is timed separately; otherwise the flat fabric over
+        all local devices is fitted — and if a planning-only topology was
+        requested, the calibration measures the host, not the model, so
+        say so.  The result is stored as ``self.calibration`` and feeds
+        :meth:`plan_auto` via ``calibration=``."""
+        from repro.core.schedule.calibration import (CAL_LINK_REPEATS,
+                                                     CAL_LINK_SIZES)
+        if self.topology is not None and not self.tiered_mesh:
+            print(f"note: --calibrate times the HOST fabric "
+                  f"({len(jax.devices())} device(s)), not the planning "
+                  f"topology {self.topology.spec()}", flush=True)
+        topo = self.topology if self.tiered_mesh else None
+        kw: Dict[str, Any] = {
+            "sizes": sizes if sizes is not None else CAL_LINK_SIZES,
+            "repeats": repeats if repeats is not None else CAL_LINK_REPEATS,
+        }
+        if timer is not None:
+            kw["timer"] = timer
+            if topo is None and self.topology is not None:
+                topo = self.topology    # injected timer: no mesh needed
+        elif topo is not None:
+            kw["mesh"] = self.mesh      # the tiered session mesh
+        self.calibration = calibrate_topology(topo, **kw)
+        return self.calibration
 
     def _pipeline_executable(self, S: int, M: int) -> bool:
         """Can pipeline(S, M) actually run on THIS host's devices/batch?
@@ -281,7 +332,8 @@ class TrainSession:
                   pipeline_stages: Optional[int] = None,
                   micro_batches: Optional[int] = None,
                   topology=None,
-                  compression_costs=None) -> StrategyPlan:
+                  compression_costs=None,
+                  calibration=None) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
         per-bucket strategy × shard axis × parallelism axis), install the
         winning composite as this session's strategy.  ``scheduler`` pins
@@ -303,12 +355,37 @@ class TrainSession:
         --write-compression-costs`` — replaces the analytic
         compression-compute term with MEASURED per-compressor fits in
         every arm (and in the fixed baselines, so the comparison stays
-        apples-to-apples).  Stashes the full decision record in
-        ``self.planned`` for reporting."""
+        apples-to-apples).  ``calibration`` — a
+        :class:`~repro.core.schedule.CalibratedTopology` (from
+        :meth:`calibrate` / ``--calibrate``) or a path to a saved one —
+        replaces the preset link model with the FITTED fabric: a tiered
+        calibration becomes the pricing topology outright; a flat one
+        supplies the measured link (so an explicit ``plan_world`` still
+        prices a hypothetical pod, on real α/β).  Stashes the full
+        decision record in ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
         if topology is not None:
             self.apply_topology(topology)
+        cal = resolve_calibration(calibration)
+        cal_link = None
+        if cal is not None:
+            self.calibration = cal
+            shape = [(t.name, t.size) for t in cal.topology.tiers]
+            if self.topology is not None and \
+                    [(t.name, t.size) for t in self.topology.tiers] != shape:
+                print(f"warning: calibration measured "
+                      f"{cal.topology.spec()} but the planning topology is "
+                      f"{self.topology.spec()}; fitted links apply only to "
+                      f"the fabric they were measured on — planning keeps "
+                      f"the preset links", flush=True)
+            elif cal.topology.is_flat and self.topology is None \
+                    and plan_world and plan_world != cal.world:
+                # hypothetical world, measured link: the fitted flat α/β
+                # price the requested --plan-world
+                cal_link = cal.topology.innermost.link
+            else:
+                self.apply_topology(cal.topology)
         if scheduler is not None and shard_state:
             raise ValueError("shard_state composes only with the planner's "
                              "every-step arm, not a pinned rounds scheduler")
@@ -330,7 +407,8 @@ class TrainSession:
                       f"planning for the topology — --plan-world is "
                       f"deprecated, the tier-size product wins", flush=True)
         else:
-            lp = self.resolve_link(link, alpha, beta_gbps)
+            lp = cal_link if cal_link is not None \
+                else self.resolve_link(link, alpha, beta_gbps)
             world = plan_world or self.world
         if t_backward_s is None:
             t_backward_s = self.profile_backward()
@@ -376,6 +454,15 @@ class TrainSession:
         elif scheduler is None:
             shard_grid = ((False, True) if shard_state is None
                           else (bool(shard_state),))
+            # replan hook re-runs exactly this search with a fresh profile
+            self._plan_kwargs = {
+                "lp": lp, "world": world, "opt_name": self.cfg.optimizer,
+                "shard_grid": shard_grid, "opt_moments": self.opt_moments,
+                "memory_budget_bytes": (memory_budget_gb * 2**30
+                                        if memory_budget_gb is not None
+                                        else None),
+                "pipe_axis": pipe_axis, "kw": dict(kw),
+                "tau_grid": tau_grid}
             best, arms = plan_rounds(
                 profiles, lp, world,
                 opt_name=self.cfg.optimizer, shard_grid=shard_grid,
@@ -725,7 +812,14 @@ class TrainSession:
         start = self.step
         out: List[float] = []
         for i in range(steps):
+            pre_built = self._built      # a build step pays compile time
+            ts = time.time()
             loss = self.step_once()
+            dt = time.time() - ts
+            self.step_times.append(dt)
+            if pre_built:
+                self._window.append(dt)
+            self._maybe_replan()
             out.append(loss)
             if log_every and i % log_every == 0:
                 dt = (time.time() - t0) / max(i, 1)
@@ -735,6 +829,146 @@ class TrainSession:
         self.wall_s = time.time() - t0
         self.steps_run = self.step - start
         return out
+
+    # -- modeled vs measured -------------------------------------------------
+
+    def measured_step_s(self) -> float:
+        """Median wall time of the steps :meth:`run` executed, dropping
+        the first (it pays compilation).  NaN before any steps ran."""
+        times = self.step_times[1:] or self.step_times
+        return statistics.median(times) if times else float("nan")
+
+    def enable_replan(self, drift_pct: float, check_every: int = 25,
+                      max_replans: int = 1) -> None:
+        """Arm the drift-gated re-planning hook (``--replan-drift-pct``):
+        every ``check_every`` post-compile steps, compare the window's
+        median step time against the plan's modeled wall step; when the
+        drift exceeds ``drift_pct`` percent, re-profile the backward pass
+        and re-run the planner search.  Off by default (0 disarms)."""
+        self._replan_drift_pct = float(drift_pct)
+        self._replan_every = max(int(check_every), 2)
+        self._max_replans = int(max_replans)
+
+    def _modeled_wall_s(self) -> float:
+        sp = self.planned.get("strategy_plan") if self.planned else None
+        if sp is None:
+            return float("nan")
+        return modeled_wall_step_s(sp.modeled_step_s, sp.t_backward_s)
+
+    def _maybe_replan(self) -> None:
+        if (self._replan_drift_pct <= 0 or self.planned is None
+                or len(self._window) < self._replan_every
+                or self.replans >= self._max_replans):
+            if len(self._window) >= self._replan_every:
+                self._window.clear()
+            return
+        measured = statistics.median(self._window)
+        self._window.clear()
+        modeled = self._modeled_wall_s()
+        if not modeled or modeled != modeled:
+            return
+        drift = drift_fraction(modeled, measured)
+        if abs(drift) * 100.0 <= self._replan_drift_pct:
+            return
+        self._replan(drift, measured)
+
+    def _replan(self, drift: float, measured_s: float) -> None:
+        """Re-run the stashed planner search with a FRESH backward profile
+        (the measured fabric disagreed with the modeled one).  The new
+        winner is installed only when both the outgoing and incoming arms
+        are plain every-step replicated sync — swapping rounds schedules
+        or shard layouts mid-run would discard scheduler/optimizer state;
+        for those the event records the recommendation without acting."""
+        event: Dict[str, Any] = {
+            "step": self.step, "drift_frac": drift,
+            "measured_step_s": measured_s,
+            "old_key": self.planned["strategy_plan"].key,
+            "applied": False, "note": ""}
+        pk = self._plan_kwargs
+        if pk is None:
+            event["note"] = ("no free-search plan to rerun (pinned "
+                             "scheduler or pipeline)")
+            event["new_key"] = event["old_key"]
+            self.replans += 1
+            self.replan_events.append(event)
+            return
+        t_bwd = self.profile_backward()
+        profiles = profiles_from_grads(self._params, t_bwd)
+        extra = dict(pk["kw"])
+        if pk["tau_grid"] is not None:
+            extra["tau_grid"] = pk["tau_grid"]
+        best, arms = plan_rounds(
+            profiles, pk["lp"], pk["world"], opt_name=pk["opt_name"],
+            shard_grid=pk["shard_grid"], opt_moments=pk["opt_moments"],
+            memory_budget_bytes=pk["memory_budget_bytes"],
+            pipeline=pk["pipe_axis"], **extra)
+        event["new_key"] = best.key
+        old = self.strategy
+        old_plain = (old is not None
+                     and old.scheduler.computes == frozenset({"sync"})
+                     and not old.scheduler.has_param_rounds
+                     and not old.scheduler.needs_grad_probe
+                     and old.pipeline_stages <= 1 and old.micro_batches <= 1)
+        new_sched = best.schedule.kind == "every_step"
+        new_plain = (new_sched and not best.shard_state
+                     and best.pipeline_stages <= 1
+                     and best.micro_batches <= 1)
+        if old_plain and new_plain:
+            if best.key != event["old_key"]:
+                self.strategy = strategy_from_plan(best, self.axes)
+                self._built = False    # rebuild lazily; EF residual resets
+                event["applied"] = True
+            else:
+                event["note"] = "re-plan kept the incumbent arm"
+        else:
+            event["note"] = ("winner needs a different execution shape "
+                             "(rounds/shard/pipeline); not swapped mid-run")
+        self.planned = dict(self.planned, strategy_plan=best, arms=arms,
+                            t_backward_s=t_bwd)
+        self.replans += 1
+        self.replan_events.append(event)
+        print(f"replan @step {self.step}: drift {drift * 100:+.1f}% -> "
+              f"{best.key}" + (" (installed)" if event["applied"]
+                               else f" ({event['note']})"), flush=True)
+
+    def drift_report(self) -> Optional[Dict[str, Any]]:
+        """The modeled-vs-measured closing of the loop: per-arm predicted
+        step time against this run's measured median, with the fit's
+        error budget (comm α/β confidence + backward-profile spread +
+        measurement spread).  None until both a plan and steps exist."""
+        if self.planned is None or not self.step_times:
+            return None
+        sp = self.planned["strategy_plan"]
+        measured = self.measured_step_s()
+        modeled_wall = self._modeled_wall_s()
+        times = self.step_times[1:] or self.step_times
+        spread = (max(times) - min(times)) / 2.0 if len(times) > 1 else 0.0
+        comm_err = plan_comm_error_s(sp.comm, self.calibration)
+        fit_err = comm_err + self._t_backward_spread_s + spread
+        arms = {}
+        for key, arm in self.planned.get("arms", {}).items():
+            wall = modeled_wall_step_s(arm.modeled_step_s, arm.t_backward_s)
+            arms[key] = {
+                "modeled_step_s": arm.modeled_step_s,
+                "modeled_wall_step_s": wall,
+                "drift_pct": drift_fraction(wall, measured) * 100.0}
+        return {
+            "plan_key": sp.key,
+            "modeled_step_s": sp.modeled_step_s,
+            "modeled_wall_step_s": modeled_wall,
+            "measured_step_s": measured,
+            "steps_measured": len(times),
+            "drift_frac": drift_fraction(modeled_wall, measured),
+            "drift_pct": drift_fraction(modeled_wall, measured) * 100.0,
+            "comm_fit_err_s": comm_err,
+            "t_backward_err_s": self._t_backward_spread_s,
+            "measured_spread_s": spread,
+            "fit_error_s": fit_err,
+            "within_fit_error": abs(measured - modeled_wall) <= fit_err,
+            "replans": self.replans,
+            "replan_events": list(self.replan_events),
+            "arms": arms,
+        }
 
     def save_checkpoint(self, path: str) -> None:
         """In sharded mode the optimizer state is saved LEAF-SHAPED (via

@@ -5,7 +5,10 @@ from repro.core.schedule.cost import (  # noqa: F401
     decode_step_cost_s, p2p_cost_s, reduce_scatter_cost_s,
     shard_gather_cost_s)
 from repro.core.schedule.calibration import (  # noqa: F401
-    CALIBRATION_SET, measure_compression_costs, resolve_cost_table)
+    CALIBRATION_SET, AffineFit, CalibratedTopology, LinkFit,
+    calibrate_topology, drift_fraction, fit_affine,
+    measure_compression_costs, modeled_wall_step_s, plan_comm_error_s,
+    resolve_calibration, resolve_cost_table)
 from repro.core.schedule.topology import (  # noqa: F401
     TOPOLOGY_PRESETS, Tier, Topology, as_topology)
 from repro.core.schedule.perf_model import (  # noqa: F401

@@ -1,31 +1,53 @@
-"""Measured compression-compute calibration (DESIGN.md §11).
+"""Measured calibration: compression compute (DESIGN.md §11) and the
+collective fabric itself (DESIGN.md §13).
 
-The α-β cost model prices the wire from link parameters, but until now the
-compress/decompress COMPUTE term was a fixed analytic constant
-(``cost.COMPRESS_PROC_BW`` × a pass count).  This module measures it: time
-each compressor's encode and decode on the backend actually running, fit
-``seconds = n_bytes / bw + c0`` per stage, and hand the planner a
-:class:`~repro.core.schedule.cost.CompressionCostTable` — the first
-MEASURED input into ``plan_auto``.  ``benchmarks/bench_collectives.py
---write-compression-costs PATH`` records the table;
-``launch/train.py --compression-costs PATH`` (or
-``plan_auto(compression_costs=...)``) feeds it back.
+The α-β cost model prices the wire from link parameters, but hand-written
+``LINK_PRESETS`` are exactly the unvalidated constants Zhang et al. ("Is
+Network the Bottleneck?") show diverging from measured collective behavior
+at real message sizes.  This module closes the modeled↔measured loop twice:
 
-Encode times the fused one-pass hook when the compressor has one (that is
-the op the executor actually runs), else the decomposed ``compress``.
-Decode times ``fused_decode_sum`` over ``cal_world`` stacked payloads for
-gather-pattern wires (matching how ``cost._compute_cost_s`` rescales the
-fit to the plan's world), else a single-payload ``decompress``.
+  * :func:`measure_compression_costs` times each compressor's encode and
+    decode on the backend actually running, fits ``seconds = n_bytes / bw
+    + c0`` per stage, and hands the planner a
+    :class:`~repro.core.schedule.cost.CompressionCostTable` — the measured
+    COMPUTE term (PR 6).
+  * :func:`calibrate_topology` times the actual collectives (per algorithm
+    × payload size × tier axis, under ``shard_map`` on the real mesh, via
+    the same ``collectives/api.py`` edges training executes) and fits
+    per-tier ``LinkParams`` (α, β) WITH confidence bounds — the measured
+    WIRE term.  The result, a :class:`CalibratedTopology`, drops into
+    every ``net`` argument of ``cost.py`` (``as_topology`` unwraps it), so
+    ``plan_auto(calibration=...)`` prices every arm on the fabric it will
+    run on.
+
+Timing policy (shared rationale with ``benchmarks/common.py``, see
+DESIGN.md §13): calibration uses MIN-of-N per point — the minimum is the
+best estimate of the uncontended cost that the α-β model defines, while
+the median (used by throughput benches) tracks what a loaded machine
+delivers.  Fits are least squares over ≥3 sizes; every fit records its
+residual and confidence bounds so a noisy calibration is visible instead
+of silently wrong (the old two-point ``_fit`` clamped noise to a
+through-origin model with no signal).
+
+Drift accounting: :func:`drift_fraction` (measured/modeled − 1) and
+:func:`modeled_wall_step_s` define the modeled-vs-measured comparison the
+plan records carry and ``--replan-drift-pct`` gates on.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import math
 import time
-from typing import Any, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.schedule.cost import CompressionCostTable
+from repro.core.schedule.cost import (CompressionCostTable, LinkParams)
+from repro.core.schedule.topology import Tier, Topology
 
 # (compressor, args) pairs calibrated by default — the compressed members
 # of planner.DEFAULT_CANDIDATES (keys in the table are compressor NAMES:
@@ -39,11 +61,25 @@ CALIBRATION_SET: Tuple[Tuple[str, Tuple[Tuple[str, Any], ...]], ...] = (
     ("topk_fused", (("ratio", 0.01),)),
 )
 
-# Buffer sizes (f32 elements) the linear fit is anchored on: 1 MiB and
-# 8 MiB dense — inside the bucket range the planner actually prices.
-CAL_SIZES: Tuple[int, ...] = (1 << 18, 1 << 21)
+# Buffer sizes (f32 elements) the compression fit is anchored on: 1, 2 and
+# 8 MiB dense — ≥3 sizes so the least-squares fit has a residual to report
+# (the old two-point secant could not distinguish noise from signal).
+CAL_SIZES: Tuple[int, ...] = (1 << 18, 1 << 19, 1 << 21)
 
 CAL_WORLD = 8
+
+# Payload sizes (f32 elements) the LINK fit is anchored on — spanning the
+# α-dominated (16 KiB) through β-dominated (8 MiB) regimes so both
+# coefficients are identified.
+CAL_LINK_SIZES: Tuple[int, ...] = (1 << 12, 1 << 15, 1 << 18, 1 << 21)
+
+# Algorithms timed per tier: psum (the XLA edge training actually runs)
+# and the explicit ring share one phase formula, giving the joint fit
+# algorithm diversity at no formula risk; tree is opt-in (power-of-two
+# tiers only).
+CAL_LINK_ALGOS: Tuple[str, ...] = ("psum", "ring")
+
+CAL_LINK_REPEATS = 5
 
 
 def _time_best_s(fn, *args, repeats: int = 3) -> float:
@@ -58,17 +94,80 @@ def _time_best_s(fn, *args, repeats: int = 3) -> float:
     return best
 
 
-def _fit(points: Sequence[Tuple[float, float]]) -> Tuple[float, float]:
-    """(bw_bytes_per_s, overhead_s) from (n_bytes, seconds) samples: the
-    two-point secant, clamped to a through-origin model when timing noise
-    makes the secant non-increasing."""
-    pts = sorted(points)
-    (b1, t1), (b2, t2) = pts[0], pts[-1]
-    slope = (t2 - t1) / (b2 - b1) if b2 > b1 else 0.0
-    if slope <= 0.0:
-        slope = t2 / b2
-        return 1.0 / max(slope, 1e-15), 0.0
-    return 1.0 / slope, max(t1 - b1 * slope, 0.0)
+# ---------------------------------------------------------------------------
+# Least-squares fitting with confidence bounds
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AffineFit:
+    """Least-squares ``t = intercept + slope·x`` with standard errors.
+
+    ``slope_err``/``intercept_err`` are the 1-σ standard errors from the
+    residual variance (``inf`` with <3 points: two points leave zero
+    degrees of freedom, which is exactly the blindness the old two-point
+    fit hid).  ``degenerate`` flags a non-increasing fit — timing noise
+    swamping the size signal."""
+    slope: float
+    intercept: float
+    slope_err: float
+    intercept_err: float
+    r2: float
+    rms_s: float
+    n: int
+    degenerate: bool = False
+
+
+def fit_affine(points: Sequence[Tuple[float, float]]) -> AffineFit:
+    """Fit ``t = intercept + slope·x`` to ``(x, t)`` samples by least
+    squares; see :class:`AffineFit` for what is reported."""
+    pts = sorted((float(x), float(t)) for x, t in points)
+    if len(pts) < 2:
+        raise ValueError(f"need >= 2 points to fit a line, got {len(pts)}")
+    x = np.asarray([p[0] for p in pts])
+    t = np.asarray([p[1] for p in pts])
+    X = np.stack([x, np.ones_like(x)], axis=1)
+    coef, _, _, _ = np.linalg.lstsq(X, t, rcond=None)
+    slope, intercept = float(coef[0]), float(coef[1])
+    resid = t - X @ coef
+    rss = float(resid @ resid)
+    m = len(pts)
+    tss = float(((t - t.mean()) ** 2).sum())
+    r2 = 1.0 - rss / tss if tss > 0 else 1.0
+    if m > 2:
+        sigma2 = rss / (m - 2)
+        try:
+            cov = sigma2 * np.linalg.inv(X.T @ X)
+            slope_err = math.sqrt(max(float(cov[0, 0]), 0.0))
+            intercept_err = math.sqrt(max(float(cov[1, 1]), 0.0))
+        except np.linalg.LinAlgError:
+            slope_err = intercept_err = float("inf")
+    else:
+        slope_err = intercept_err = float("inf")
+    return AffineFit(slope=slope, intercept=intercept, slope_err=slope_err,
+                     intercept_err=intercept_err, r2=r2,
+                     rms_s=math.sqrt(rss / m), n=m,
+                     degenerate=slope <= 0.0)
+
+
+def _fit(points: Sequence[Tuple[float, float]]
+         ) -> Tuple[float, float, AffineFit]:
+    """(bw_bytes_per_s, overhead_s, fit) from (n_bytes, seconds) samples:
+    a least-squares affine fit over all sizes.  A non-increasing fit still
+    degenerates to the through-origin secant (the planner needs SOME
+    positive bandwidth), but now WARNS and flags the fit so the recorded
+    table carries the degradation instead of silently reporting
+    ``overhead_s = 0`` as measured."""
+    fit = fit_affine(points)
+    if fit.degenerate:
+        b_max, t_max = max(points)
+        warnings.warn(
+            f"calibration fit degenerated: seconds non-increasing over "
+            f"{fit.n} sizes (slope {fit.slope:.3e} s/B) — timing noise "
+            f"swamps the size signal; clamping to a through-origin model",
+            stacklevel=2)
+        slope = max(t_max / b_max, 1e-15)
+        return 1.0 / slope, 0.0, fit
+    return 1.0 / fit.slope, max(fit.intercept, 0.0), fit
 
 
 def measure_compression_costs(
@@ -79,10 +178,12 @@ def measure_compression_costs(
         repeats: int = 3,
         seed: int = 0) -> CompressionCostTable:
     """Time encode/decode per compressor at each size and fit the linear
-    per-stage model.  Returns the table ``bucket_sync_phases`` consumes."""
+    per-stage model.  Returns the table ``bucket_sync_phases`` consumes;
+    each entry carries its fit quality (rms residual, R², degeneracy)."""
     from repro.core.compression import get_compressor
 
     entries = []
+    quality = []
     for name, args in compressors:
         comp = get_compressor(name, **dict(args))
         enc_pts, dec_pts = [], []
@@ -115,12 +216,14 @@ def measure_compression_costs(
                 dec = jax.jit(lambda p, c=comp, m=meta: c.decompress(p, m))
                 dec_pts.append((n_bytes, _time_best_s(dec, payload,
                                                       repeats=repeats)))
-        bw, c0 = _fit(enc_pts)
-        entries.append((f"{name}/encode", bw, c0))
-        bw, c0 = _fit(dec_pts)
-        entries.append((f"{name}/decode", bw, c0))
+        for stage, pts in (("encode", enc_pts), ("decode", dec_pts)):
+            bw, c0, fit = _fit(pts)
+            entries.append((f"{name}/{stage}", bw, c0))
+            quality.append((f"{name}/{stage}", fit.rms_s, fit.r2,
+                            fit.degenerate))
     return CompressionCostTable(entries=tuple(entries),
-                                cal_world=int(cal_world))
+                                cal_world=int(cal_world),
+                                quality=tuple(quality))
 
 
 def resolve_cost_table(spec) -> Optional[CompressionCostTable]:
@@ -129,3 +232,330 @@ def resolve_cost_table(spec) -> Optional[CompressionCostTable]:
     if spec is None or isinstance(spec, CompressionCostTable):
         return spec
     return CompressionCostTable.load(spec)
+
+
+# ---------------------------------------------------------------------------
+# Collective calibration: fitted per-tier LinkParams (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinkFit:
+    """Fitted (α, β) of ONE tier's fabric, with 1-σ confidence bounds and
+    the fit residual.  ``degenerate`` marks fits with no wire signal: a
+    1-rank tier (collectives are no-ops; the fit is raw dispatch
+    overhead) or a negative coefficient clamped to zero."""
+    alpha_s: float
+    beta_s_per_byte: float
+    alpha_err_s: float
+    beta_err_s_per_byte: float
+    r2: float
+    rms_s: float
+    n_samples: int
+    degenerate: bool = False
+
+    @property
+    def link(self) -> LinkParams:
+        return LinkParams(alpha_s=self.alpha_s,
+                          beta_s_per_byte=self.beta_s_per_byte)
+
+    def describe(self) -> str:
+        bw = (1.0 / self.beta_s_per_byte / 1e9
+              if self.beta_s_per_byte > 0 else float("inf"))
+        return (f"α={self.alpha_s:.3e}±{self.alpha_err_s:.1e} s, "
+                f"β⁻¹={bw:.2f} GB/s, rms={self.rms_s:.2e} s, "
+                f"R²={self.r2:.3f}, n={self.n_samples}"
+                + (" [degenerate]" if self.degenerate else ""))
+
+
+def _phase_coeffs(algo: str, p: int, n_bytes: float
+                  ) -> Optional[Tuple[float, float]]:
+    """(∂t/∂α, ∂t/∂β) of one single-axis collective of ``n_bytes`` over
+    ``p`` ranks — the design-matrix row linking a timed sample to the
+    tier's (α, β).  Must mirror ``cost.allreduce_phases`` exactly: the
+    fit is only as honest as the formula it inverts."""
+    if p <= 1:
+        return None
+    if algo in ("ring", "psum"):
+        return 2.0 * (p - 1), 2.0 * (p - 1) * n_bytes / p
+    if algo == "tree":
+        if p & (p - 1):
+            return None          # tree needs a power-of-two axis
+        return 2.0 * math.log2(p), 2.0 * math.log2(p) * n_bytes
+    return None
+
+
+def _fit_link(rows: Sequence[Tuple[float, float, float]]) -> LinkFit:
+    """Joint least squares ``t = a·α + b·β`` over ``(a, b, t)`` rows from
+    :func:`_phase_coeffs` — one fit per tier, pooling every (algo × size)
+    sample.  Negative coefficients (noise) are clamped to 0 and flagged."""
+    A = np.asarray([[r[0], r[1]] for r in rows])
+    t = np.asarray([r[2] for r in rows])
+    coef, _, _, _ = np.linalg.lstsq(A, t, rcond=None)
+    alpha, beta = float(coef[0]), float(coef[1])
+    resid = t - A @ coef
+    rss = float(resid @ resid)
+    m = len(rows)
+    tss = float(((t - t.mean()) ** 2).sum())
+    r2 = 1.0 - rss / tss if tss > 0 else 1.0
+    if m > 2:
+        sigma2 = rss / (m - 2)
+        try:
+            cov = sigma2 * np.linalg.inv(A.T @ A)
+            a_err = math.sqrt(max(float(cov[0, 0]), 0.0))
+            b_err = math.sqrt(max(float(cov[1, 1]), 0.0))
+        except np.linalg.LinAlgError:
+            a_err = b_err = float("inf")
+    else:
+        a_err = b_err = float("inf")
+    degenerate = alpha < 0.0 or beta < 0.0
+    if degenerate:
+        warnings.warn(
+            f"link fit degenerated (α={alpha:.3e}, β={beta:.3e}); "
+            f"clamping negative coefficients to 0 — the measured fabric "
+            f"is faster than the timing floor resolves", stacklevel=2)
+    return LinkFit(alpha_s=max(alpha, 0.0),
+                   beta_s_per_byte=max(beta, 0.0),
+                   alpha_err_s=a_err, beta_err_s_per_byte=b_err,
+                   r2=r2, rms_s=math.sqrt(rss / m), n_samples=m,
+                   degenerate=degenerate)
+
+
+def _fit_degenerate_tier(samples: Sequence[Tuple[float, float]]) -> LinkFit:
+    """A 1-rank tier: the collective is a no-op, so the timings are pure
+    dispatch overhead.  Fit ``t = α + n·β`` directly and flag it — the
+    resulting near-zero link is the honest price of communication on a
+    fabric with one member."""
+    fit = fit_affine(samples)
+    return LinkFit(alpha_s=max(fit.intercept, 0.0),
+                   beta_s_per_byte=max(fit.slope, 0.0),
+                   alpha_err_s=fit.intercept_err,
+                   beta_err_s_per_byte=fit.slope_err,
+                   r2=fit.r2, rms_s=fit.rms_s, n_samples=fit.n,
+                   degenerate=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedTopology:
+    """A :class:`Topology` whose links are FITTED from measured
+    collectives, with per-tier fit residuals and confidence bounds.
+
+    ``topology`` carries the fitted :class:`LinkParams` (each tier's
+    ``link_name`` is ``"calibrated"`` and its ``fit`` field holds the
+    :class:`LinkFit`), so it drops into every ``net`` argument of the
+    cost model — ``as_topology`` unwraps this wrapper too, making a
+    ``CalibratedTopology`` itself a valid ``net``.  ``samples`` keeps the
+    raw ``(tier, algo, p, n_bytes, seconds)`` timings for offline refits
+    (the deterministic CI calibration suite replays exactly such records).
+    """
+    topology: Topology
+    fits: Tuple[Tuple[str, LinkFit], ...]      # (tier_name, fit), outer first
+    samples: Tuple[Tuple[str, str, int, float, float], ...] = ()
+
+    @property
+    def world(self) -> int:
+        return self.topology.world
+
+    def fit_for(self, tier_name: str) -> Optional[LinkFit]:
+        for name, fit in self.fits:
+            if name == tier_name:
+                return fit
+        return None
+
+    def describe(self) -> str:
+        lines = [f"calibrated topology: {self.topology.spec()} "
+                 f"({len(self.samples)} timed collectives)"]
+        for name, fit in self.fits:
+            lines.append(f"  {name}: {fit.describe()}")
+        return "\n".join(lines)
+
+    def allreduce_error_s(self, n_bytes: float, p: int) -> float:
+        """1-σ propagated fit error of one ring allreduce of ``n_bytes``
+        over ``p`` ranks, priced like the cost model prices it: the ring
+        formula on the bottleneck tier, with that tier's coefficient
+        errors in place of its coefficients."""
+        if p <= 1:
+            return 0.0
+        t = self.topology.bottleneck(n_bytes / p)
+        fit = self.fit_for(t.name)
+        if fit is None or not math.isfinite(fit.alpha_err_s):
+            return 0.0
+        return 2.0 * (p - 1) * (fit.alpha_err_s
+                                + (n_bytes / p) * fit.beta_err_s_per_byte)
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": 1,
+            "world": self.world,
+            "tiers": [{
+                "name": t.name, "size": t.size,
+                "alpha_s": f.alpha_s,
+                "beta_s_per_byte": f.beta_s_per_byte,
+                "alpha_err_s": f.alpha_err_s,
+                "beta_err_s_per_byte": f.beta_err_s_per_byte,
+                "r2": f.r2, "rms_s": f.rms_s,
+                "n_samples": f.n_samples, "degenerate": f.degenerate,
+            } for t, (_, f) in zip(self.topology.tiers, self.fits)],
+            "samples": [{"tier": tn, "algo": al, "p": p,
+                         "n_bytes": nb, "seconds": s}
+                        for tn, al, p, nb, s in self.samples],
+        }
+
+    @classmethod
+    def from_json(cls, obj: Dict[str, Any]) -> "CalibratedTopology":
+        tiers, fits = [], []
+        for e in obj["tiers"]:
+            fit = LinkFit(
+                alpha_s=float(e["alpha_s"]),
+                beta_s_per_byte=float(e["beta_s_per_byte"]),
+                alpha_err_s=float(e["alpha_err_s"]),
+                beta_err_s_per_byte=float(e["beta_err_s_per_byte"]),
+                r2=float(e["r2"]), rms_s=float(e["rms_s"]),
+                n_samples=int(e["n_samples"]),
+                degenerate=bool(e["degenerate"]))
+            tiers.append(Tier(e["name"], int(e["size"]), fit.link,
+                              link_name="calibrated", fit=fit))
+            fits.append((e["name"], fit))
+        samples = tuple((s["tier"], s["algo"], int(s["p"]),
+                         float(s["n_bytes"]), float(s["seconds"]))
+                        for s in obj.get("samples", []))
+        return cls(topology=Topology(tuple(tiers)), fits=tuple(fits),
+                   samples=samples)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "CalibratedTopology":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def _collective_timer(mesh, repeats: int) -> Callable[..., float]:
+    """The default ``timer``: min-of-N wall time of one jitted
+    ``shard_map`` allreduce over ONE mesh axis — the exact edge
+    ``collectives.api.allreduce`` dispatches during training, replicated
+    input so every rank holds the full payload."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives.api import allreduce
+
+    def timer(algo: str, axis: str, p: int, n_bytes: float) -> float:
+        n_elems = max(int(n_bytes // 4), 1)
+        x = jnp.arange(n_elems, dtype=jnp.float32)
+        fn = jax.jit(jax.shard_map(
+            lambda v: allreduce(v, algo, (axis,)), mesh=mesh,
+            in_specs=P(), out_specs=P(), axis_names={axis},
+            check_vma=False))
+        return _time_best_s(fn, x, repeats=repeats)
+
+    return timer
+
+
+def calibrate_topology(topology: Optional[Topology] = None, *,
+                       mesh=None,
+                       sizes: Sequence[int] = CAL_LINK_SIZES,
+                       algos: Sequence[str] = CAL_LINK_ALGOS,
+                       repeats: int = CAL_LINK_REPEATS,
+                       timer: Optional[Callable[..., float]] = None
+                       ) -> CalibratedTopology:
+    """Time real collectives per (tier axis × algorithm × payload size)
+    and fit per-tier (α, β) by joint least squares over the phase
+    formulas of ``cost.allreduce_phases`` (DESIGN.md §13).
+
+    ``topology`` names the tiers to calibrate (default: the flat
+    single-tier fabric over every local device, axis ``"data"``).  With
+    the default timer the topology's world must equal the local device
+    count — calibration measures the fabric it runs on, not a model of
+    another one.  ``timer(algo, axis, p, n_bytes) -> seconds`` injects a
+    fake fabric for tests and for replaying recorded samples (the
+    deterministic CI suite); injected timers skip mesh construction, so
+    any topology can be refitted offline.
+    """
+    if topology is None:
+        topology = Topology.flat(len(jax.devices()), LinkParams(),
+                                 name="data")
+    if timer is None:
+        n_dev = len(jax.devices())
+        if topology.world != n_dev:
+            raise ValueError(
+                f"cannot calibrate {topology.spec()} (world "
+                f"{topology.world}) on {n_dev} local device(s): "
+                f"calibration times the fabric it runs on — pass a "
+                f"topology matching the host, or inject a timer")
+        if mesh is None:
+            from repro.launch.mesh import make_topology_mesh
+            mesh = make_topology_mesh(topology)
+        timer = _collective_timer(mesh, repeats)
+
+    fits: List[Tuple[str, LinkFit]] = []
+    tiers: List[Tier] = []
+    samples: List[Tuple[str, str, int, float, float]] = []
+    for tier in topology.tiers:
+        p = int(tier.size)
+        rows: List[Tuple[float, float, float]] = []
+        raw: List[Tuple[float, float]] = []
+        for algo in algos:
+            for n in sizes:
+                n_bytes = float(int(n) * 4)
+                coeffs = _phase_coeffs(algo, p, n_bytes)
+                if p > 1 and coeffs is None:
+                    continue          # algo unusable on this axis (tree)
+                t = float(timer(algo, tier.name, p, n_bytes))
+                samples.append((tier.name, algo, p, n_bytes, t))
+                raw.append((n_bytes, t))
+                if coeffs is not None:
+                    rows.append((coeffs[0], coeffs[1], t))
+        fit = _fit_link(rows) if rows else _fit_degenerate_tier(raw)
+        fits.append((tier.name, fit))
+        tiers.append(Tier(tier.name, p, fit.link, link_name="calibrated",
+                          fit=fit))
+    return CalibratedTopology(topology=Topology(tuple(tiers)),
+                              fits=tuple(fits), samples=tuple(samples))
+
+
+def resolve_calibration(spec) -> Optional[CalibratedTopology]:
+    """Coerce a ``calibration`` argument — ``None``, an existing
+    :class:`CalibratedTopology`, or a path to a saved one — into the
+    object ``plan_auto`` consumes."""
+    if spec is None or isinstance(spec, CalibratedTopology):
+        return spec
+    return CalibratedTopology.load(spec)
+
+
+# ---------------------------------------------------------------------------
+# Modeled-vs-measured drift (plan records, --replan-drift-pct)
+# ---------------------------------------------------------------------------
+
+def drift_fraction(modeled_s: float, measured_s: float) -> float:
+    """measured/modeled − 1: +0.25 means the measured step ran 25% slower
+    than the model predicted.  The drift-report quantity and the
+    re-planning trigger."""
+    if not modeled_s > 0.0:
+        raise ValueError(f"modeled time must be > 0, got {modeled_s}")
+    return measured_s / modeled_s - 1.0
+
+
+def modeled_wall_step_s(modeled_step_s: float, t_backward_s: float) -> float:
+    """The plan's prediction of one WALL-CLOCK step.  ``modeled_step_s``
+    prices the backward+sync window only (the overlap objective); the
+    forward pass runs outside it and costs half the backward under the
+    standard bwd = 2·fwd ratio ``profile_backward`` assumes — so the
+    wall-step prediction adds ``t_backward_s / 2``.  Optimizer update and
+    host dispatch stay unmodeled; they land in the drift number, which is
+    the point of reporting it."""
+    return float(modeled_step_s) + 0.5 * float(t_backward_s)
+
+
+def plan_comm_error_s(plan, calibration: Optional[CalibratedTopology]
+                      ) -> float:
+    """1-σ propagated link-fit error of a ``CommPlan``'s wire time: the
+    per-bucket ring-formula error (``allreduce_error_s``) summed over
+    buckets.  0 without a calibration (preset links carry no error
+    model)."""
+    if calibration is None:
+        return 0.0
+    return sum(calibration.allreduce_error_s(b.bucket_bytes, plan.world)
+               for b in plan.buckets)

@@ -274,9 +274,21 @@ class CompressionCostTable:
     recorded by ``benchmarks/bench_collectives.py``); consumed by
     :func:`bucket_sync_phases` via the ``cost_table`` argument, replacing
     the hand-waved ``COMPRESS_PROC_BW`` term for compressors it covers.
+
+    ``quality`` carries per-key fit diagnostics — ``(key, rms_s, r2,
+    degenerate)`` — so a table whose fits degenerated under timing noise
+    says so (DESIGN.md §13); it rides separately from ``entries`` to keep
+    every existing 3-tuple consumer intact.  Recorded files are VERSIONED
+    (``SCHEMA_VERSION``): v2+ files require ``cal_world`` — the
+    gather-decode rescale in :func:`_compute_cost_s` is wrong at any
+    other world, so a stale hand-edited file must fail loudly; legacy
+    unversioned files warn and keep the historical default.
     """
+    SCHEMA_VERSION = 2
+
     entries: Tuple[Tuple[str, float, float], ...] = ()
     cal_world: int = 8
+    quality: Tuple[Tuple[str, float, float, bool], ...] = ()
 
     def stage_s(self, compressor: str, stage: str,
                 n_bytes: float) -> Optional[float]:
@@ -286,18 +298,58 @@ class CompressionCostTable:
                 return float(n_bytes) / bw + c0
         return None
 
+    def fit_quality(self, key: str) -> Optional[Tuple[float, float, bool]]:
+        """(rms_s, r2, degenerate) of the fit behind ``key``, if the
+        table recorded it."""
+        for k, rms, r2, deg in self.quality:
+            if k == key:
+                return rms, r2, deg
+        return None
+
     def to_json(self) -> Dict[str, Any]:
-        return {"cal_world": self.cal_world,
-                "entries": [{"key": k, "bw_bytes_per_s": bw,
-                             "overhead_s": c0}
-                            for k, bw, c0 in self.entries]}
+        q = {k: (rms, r2, deg) for k, rms, r2, deg in self.quality}
+        entries = []
+        for k, bw, c0 in self.entries:
+            e: Dict[str, Any] = {"key": k, "bw_bytes_per_s": bw,
+                                 "overhead_s": c0}
+            if k in q:
+                rms, r2, deg = q[k]
+                e.update(fit_rms_s=rms, fit_r2=r2, fit_degenerate=deg)
+            entries.append(e)
+        return {"version": self.SCHEMA_VERSION,
+                "cal_world": self.cal_world, "entries": entries}
 
     @classmethod
     def from_json(cls, obj: Dict[str, Any]) -> "CompressionCostTable":
-        return cls(entries=tuple(
-            (e["key"], float(e["bw_bytes_per_s"]), float(e["overhead_s"]))
-            for e in obj.get("entries", [])),
-            cal_world=int(obj.get("cal_world", 8)))
+        import warnings
+        version = int(obj.get("version", 1))
+        if version >= 2:
+            if "cal_world" not in obj:
+                raise ValueError(
+                    "compression cost table (schema v2+) is missing the "
+                    "required 'cal_world' field; the gather-decode rescale "
+                    "is wrong without the calibration world — re-record "
+                    "with bench_collectives --write-compression-costs")
+            cal_world = int(obj["cal_world"])
+        elif "cal_world" in obj:
+            cal_world = int(obj["cal_world"])
+        else:
+            warnings.warn(
+                "legacy compression-cost table has no 'cal_world'; "
+                "assuming the historical default 8 — gather-decode costs "
+                "may be rescaled from the wrong world, re-record the "
+                "table", stacklevel=2)
+            cal_world = 8
+        entries, quality = [], []
+        for e in obj.get("entries", []):
+            entries.append((e["key"], float(e["bw_bytes_per_s"]),
+                            float(e["overhead_s"])))
+            if "fit_rms_s" in e:
+                quality.append((e["key"], float(e["fit_rms_s"]),
+                                float(e.get("fit_r2", float("nan"))),
+                                bool(e.get("fit_degenerate", False))))
+        return cls(entries=tuple(entries), cal_world=cal_world,
+                   quality=tuple(quality))
 
     def save(self, path: str) -> None:
         import json

@@ -25,16 +25,24 @@ runs on the fast tier exactly as the cost model prices it.  DESIGN.md §10.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
 class Tier:
-    """One level of the network: ``size`` members joined by ``link``."""
+    """One level of the network: ``size`` members joined by ``link``.
+
+    ``fit`` (a ``schedule.calibration.LinkFit``) is attached when the
+    link was FITTED from measured collectives rather than taken from a
+    preset — it carries the confidence bounds and residual the drift
+    report propagates; it never participates in equality (two tiers with
+    the same (α, β) price identically regardless of provenance)."""
     name: str
     size: int
     link: "LinkParams"              # repro.core.schedule.cost.LinkParams
     link_name: str = dataclasses.field(default="", compare=False)
+    fit: Optional[object] = dataclasses.field(default=None, compare=False,
+                                              repr=False)
 
     def describe(self) -> str:
         ln = self.link_name or (f"a={self.link.alpha_s:.0e}:"
@@ -185,15 +193,16 @@ class Topology:
         if axis_size < 1 or t.size % axis_size != 0:
             raise ValueError(f"axis of {axis_size} does not divide tier "
                              f"{t.name}:{t.size}")
-        placed = Tier(t.name, int(axis_size), t.link, t.link_name)
+        placed = Tier(t.name, int(axis_size), t.link, t.link_name, t.fit)
         rest = t.size // axis_size
         tiers = list(self.tiers)
         if rest == 1:
             del tiers[tier_index]
         else:
-            tiers[tier_index] = Tier(t.name, rest, t.link, t.link_name)
+            tiers[tier_index] = Tier(t.name, rest, t.link, t.link_name,
+                                     t.fit)
         if not tiers:        # fully consumed: a 1-rank degenerate network
-            tiers = [Tier(t.name, 1, t.link, t.link_name)]
+            tiers = [Tier(t.name, 1, t.link, t.link_name, t.fit)]
         return placed, Topology(tuple(tiers))
 
 
@@ -201,7 +210,13 @@ def as_topology(net: Union[Topology, "LinkParams"], world: int) -> Topology:
     """Normalize the ``net`` argument every cost function takes: a
     ``Topology`` must agree with ``world`` (the deprecated ``--plan-world``
     path resolves the disagreement BEFORE pricing — see train.py); a bare
-    ``LinkParams`` becomes the flat single-tier topology."""
+    ``LinkParams`` becomes the flat single-tier topology.  A
+    ``schedule.calibration.CalibratedTopology`` (anything carrying a
+    ``.topology``) unwraps to its fitted topology, so calibrated fabrics
+    drop into every cost function unchanged."""
+    inner = getattr(net, "topology", None)
+    if isinstance(inner, Topology):
+        net = inner
     if isinstance(net, Topology):
         if net.world != int(world):
             raise ValueError(

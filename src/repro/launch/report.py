@@ -261,9 +261,12 @@ def save_comm_plan(plan, arch: str) -> str:
     return _write_plan_record(comm_plan_record(plan), arch)
 
 
-def save_strategy_plan(sp, arch: str) -> str:
+def save_strategy_plan(sp, arch: str, calibration=None, drift=None) -> str:
     """Write the composite-strategy record (rounds schedule + comm plan)
-    under artifacts/comm_plans/; returns the file path."""
+    under artifacts/comm_plans/; returns the file path.  ``calibration``
+    (a ``CalibratedTopology``) and ``drift`` (``TrainSession.
+    drift_report()``) add their blocks ONLY when present, so records
+    written without them keep the exact pre-calibration schema."""
     rec = comm_plan_record(sp.comm)
     rec["schedule"] = {"kind": sp.schedule.kind, "period": sp.schedule.period}
     rec["modeled_step_s"] = sp.modeled_step_s
@@ -279,7 +282,46 @@ def save_strategy_plan(sp, arch: str) -> str:
             rec["pipeline"]["pipe_tier"] = sp.pipe_tier
     if sp.opt_mem_bytes == sp.opt_mem_bytes:   # not NaN
         rec["opt_mem_bytes_per_worker"] = sp.opt_mem_bytes
+    if calibration is not None:
+        cal = calibration.to_json()
+        cal.pop("samples", None)    # raw timings live in the .cal file
+        rec["calibration"] = cal
+    if drift is not None:
+        rec["drift"] = drift
     return _write_plan_record(rec, arch)
+
+
+def render_drift_table(drift: dict) -> str:
+    """The modeled↔measured closing table (``--calibrate`` /
+    ``--replan-drift-pct`` epilogue): per-arm predicted wall step vs this
+    run's measured median, drift %, and the error-budget verdict."""
+    meas = drift["measured_step_s"]
+    lines = [f"modeled vs measured ({drift['steps_measured']} steps, "
+             f"median {meas * 1e3:.1f} ms/step):",
+             "| arm | modeled ms | wall ms | measured ms | drift |",
+             "|---|---|---|---|---|"]
+    chosen = drift["plan_key"]
+    for key, a in sorted(drift["arms"].items(),
+                         key=lambda kv: kv[1]["modeled_wall_step_s"]):
+        mark = " ←" if key == chosen else ""
+        lines.append(f"| {key}{mark} | {a['modeled_step_s'] * 1e3:.1f} | "
+                     f"{a['modeled_wall_step_s'] * 1e3:.1f} | "
+                     f"{meas * 1e3:.1f} | {a['drift_pct']:+.1f}% |")
+    err = drift["fit_error_s"]
+    verdict = "within" if drift["within_fit_error"] else "OUTSIDE"
+    lines.append(
+        f"chosen arm drift {drift['drift_pct']:+.1f}% — {verdict} the "
+        f"±{err * 1e3:.1f} ms error budget (comm fit "
+        f"{drift['comm_fit_err_s'] * 1e3:.2f} + backward spread "
+        f"{drift['t_backward_err_s'] * 1e3:.1f} + measurement spread "
+        f"{drift['measured_spread_s'] * 1e3:.1f})")
+    if drift["replans"]:
+        for e in drift["replan_events"]:
+            lines.append(f"replan @step {e['step']}: drift "
+                         f"{e['drift_frac'] * 100:+.1f}% → {e['new_key']}"
+                         + (" (installed)" if e["applied"]
+                            else f" ({e['note']})"))
+    return "\n".join(lines)
 
 
 def render_sharded_memory(layout, opt_name: str, moments=None) -> str:

@@ -122,6 +122,21 @@ def parse_args(argv=None):
                     metavar=("N_PUSH", "N_FETCH"),
                     help="push gradients every N_PUSH steps, fetch (average) "
                          "parameters every N_FETCH steps")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="time real collectives on this host's mesh before "
+                         "planning and fit per-tier α/β (with confidence "
+                         "bounds) — --sync auto then prices every arm on "
+                         "the FITTED fabric instead of the presets, and "
+                         "the plan record gains calibration + drift blocks")
+    ap.add_argument("--replan-drift-pct", type=float, default=0.0,
+                    metavar="PCT",
+                    help="re-run the planner mid-training when the "
+                         "measured step time drifts more than PCT%% from "
+                         "the modeled wall step (checked every "
+                         "--replan-every steps; 0 = off, the default)")
+    ap.add_argument("--replan-every", type=int, default=25,
+                    help="steps between drift checks for "
+                         "--replan-drift-pct (default 25)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=10)
     return ap.parse_args(argv)
@@ -203,6 +218,10 @@ def main(argv=None):
         if ignored:
             print(f"warning: --sync auto chooses per-bucket strategies; "
                   f"ignoring {', '.join(ignored)}", flush=True)
+        cal = None
+        if args.calibrate:
+            cal = session.calibrate()
+            print(cal.describe(), flush=True)
         sp = session.plan_auto(
             link=args.link, alpha=args.alpha, beta_gbps=args.beta_gbps,
             plan_world=args.plan_world, scheduler=scheduler,
@@ -212,7 +231,8 @@ def main(argv=None):
             memory_budget_gb=args.memory_budget_gb,
             pipeline_stages=(pipe if pipe > 1 else None),
             micro_batches=(micro if pipe > 1 else None),
-            compression_costs=args.compression_costs or None)
+            compression_costs=args.compression_costs or None,
+            calibration=cal)
         if pipe <= 1 and micro > 1:
             # S=1 accumulation rides the winning arm when it composes
             session.apply_micro_batching(micro)
@@ -259,9 +279,33 @@ def main(argv=None):
         session.strategy = SyncStrategy(scheduler=scheduler)
     # else: strategy None -> vanilla BSP (pjit, XLA collectives)
 
+    if args.calibrate and args.sync != "auto":
+        print("warning: --calibrate fits the link model --sync auto plans "
+              "with; without --sync auto the fit is printed but unused",
+              flush=True)
+        print(session.calibrate().describe(), flush=True)
+    if args.replan_drift_pct > 0:
+        if args.sync != "auto" or scheduler is not None or pipe_mode \
+                or args.shard_state:
+            raise SystemExit("--replan-drift-pct re-runs the free planner "
+                             "search; it requires --sync auto without a "
+                             "pinned scheduler/pipeline/shard axis")
+        session.enable_replan(args.replan_drift_pct,
+                              check_every=args.replan_every)
     if session.strategy is not None:
         print(f"strategy: {session.strategy.describe()}", flush=True)
     losses = session.run(args.steps, log_every=args.log_every)
+    drift = session.drift_report()
+    if drift is not None and (args.calibrate or args.replan_drift_pct > 0):
+        from repro.launch.report import render_drift_table
+        print(render_drift_table(drift), flush=True)
+        if args.sync == "auto":
+            # re-write the record with the post-run calibration + drift
+            # blocks (the pre-run write keeps the base schema)
+            plan_path = save_strategy_plan(
+                session.planned["strategy_plan"], args.arch,
+                calibration=session.calibration, drift=drift)
+            print(f"plan record (with drift): {plan_path}", flush=True)
     if getattr(session, "layout", None) is not None:
         from repro.launch.report import render_sharded_memory
         print(render_sharded_memory(session.layout, args.optimizer,

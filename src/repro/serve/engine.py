@@ -114,11 +114,14 @@ class Completion:
 
     @property
     def first_token_s(self) -> float:
-        return self.emit_s[0]
+        """First emission, or the admit time for a zero-token completion
+        (``max_new=0`` requests emit nothing; the request still occupied
+        the engine until admission finished)."""
+        return self.emit_s[0] if self.emit_s else self.admit_s
 
     @property
     def finish_s(self) -> float:
-        return self.emit_s[-1]
+        return self.emit_s[-1] if self.emit_s else self.admit_s
 
     @property
     def ttft_s(self) -> float:
@@ -276,8 +279,8 @@ class Engine:
     # -- bookkeeping --------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if req.max_new < 1:
-            raise ValueError("max_new must be >= 1")
+        if req.max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {req.max_new}")
         if req.prompt_len + req.max_new > self.cfg.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + max_new "
@@ -340,15 +343,18 @@ class Engine:
         self.prefills += 1
         s = _Slot(req, admit_s)
         s.last = first
-        s.tokens.append(first)
-        s.emit_s.append(self.clock.now())
+        if req.max_new >= 1:
+            # max_new counts the prefill token; max_new=0 requests admit
+            # (and pay prefill) but emit nothing
+            s.tokens.append(first)
+            s.emit_s.append(self.clock.now())
         self._slots[slot] = s
         return self._retire_if_done(slot)
 
     def _retire_if_done(self, slot: int) -> List[Completion]:
         s = self._slots[slot]
         done = (len(s.tokens) >= s.req.max_new
-                or (self.cfg.eos_id is not None
+                or (self.cfg.eos_id is not None and s.tokens
                     and s.tokens[-1] == self.cfg.eos_id))
         if not done:
             return []
@@ -492,8 +498,9 @@ def run_static(model, params, requests: Sequence[Request], max_batch: int,
             clock.advance(sum(r.prompt_len for r in batch)
                           * sim.prefill_s_per_token)
             for i, r in enumerate(batch):
-                toks[i].append((r.rid * 997) % 1000)
-                emit[i].append(clock.now())
+                if r.max_new >= 1:
+                    toks[i].append((r.rid * 997) % 1000)
+                    emit[i].append(clock.now())
             for step in range(1, gen):
                 clock.advance(sim.decode_step_s)
                 now = clock.now()
@@ -509,9 +516,10 @@ def run_static(model, params, requests: Sequence[Request], max_batch: int,
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             host = np.asarray(tok[:, 0])
             now = clock.now()
-            for i in range(len(batch)):
-                toks[i].append(int(host[i]))
-                emit[i].append(now)
+            for i, r in enumerate(batch):
+                if r.max_new >= 1:
+                    toks[i].append(int(host[i]))
+                    emit[i].append(now)
             for step in range(1, gen):
                 logits, cache = decode(params, tok, cache,
                                        jnp.asarray(P + step - 1, jnp.int32))

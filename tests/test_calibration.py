@@ -1,0 +1,405 @@
+"""Collective calibration + modeled↔measured drift (ISSUE 8).
+
+Covers: the least-squares affine fit with confidence bounds (and the
+regression pin on the old two-point ``_fit`` silently clamping noisy
+fits to a through-origin model), the per-tier α/β link fit recovering a
+synthetic fabric's ground truth within its reported bounds, the
+versioned ``CompressionCostTable`` schema (v2+ requires ``cal_world``,
+legacy files warn), the drift-report math, and the plan-record schema
+staying byte-compatible when no calibration rode along.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import (AffineFit, CalibratedTopology,
+                                 CompressionCostTable, LinkParams, Topology,
+                                 allreduce_cost_s, calibrate_topology,
+                                 drift_fraction, fit_affine,
+                                 modeled_wall_step_s, plan_comm_error_s,
+                                 resolve_calibration)
+from repro.core.schedule.calibration import (CAL_LINK_SIZES, _fit,
+                                             _phase_coeffs)
+
+TWO_TIER = "node:4@datacenter,device:8@fast_ici"
+
+
+def _fabric_timer(links, noise_s=0.0, seed=0):
+    """A fake collective fabric: exact phase-formula timings from known
+    per-tier (α, β), plus seeded ADDITIVE gaussian noise of ``noise_s``
+    seconds — additive because that is the homoscedastic error model the
+    least-squares confidence bounds assume (what a min-of-N timing floor
+    approximates)."""
+    rng = np.random.RandomState(seed)
+
+    def timer(algo, tier, p, n_bytes):
+        a, b = links[tier]
+        ca, cb = _phase_coeffs(algo, p, n_bytes) or (1.0, 0.0)
+        return ca * a + cb * b + (rng.normal(0.0, noise_s)
+                                  if noise_s else 0.0)
+
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# fit_affine / _fit: least squares over >=3 sizes, with a residual
+# ---------------------------------------------------------------------------
+
+def test_fit_affine_recovers_line():
+    pts = [(x, 2e-10 * x + 5e-5) for x in (1e4, 1e5, 1e6, 1e7)]
+    f = fit_affine(pts)
+    assert f.slope == pytest.approx(2e-10, rel=1e-9)
+    assert f.intercept == pytest.approx(5e-5, rel=1e-6)
+    assert f.rms_s == pytest.approx(0.0, abs=1e-12)
+    assert f.r2 == pytest.approx(1.0)
+    assert not f.degenerate
+    # noise-free overdetermined fit: tiny but FINITE standard errors
+    assert math.isfinite(f.slope_err) and math.isfinite(f.intercept_err)
+
+
+def test_fit_affine_noisy_errors_cover_truth():
+    rng = np.random.RandomState(7)
+    slope, icpt = 1e-10, 2e-4
+    xs = np.logspace(4, 7, 12)
+    pts = [(x, slope * x + icpt + rng.normal(0, 2e-5)) for x in xs]
+    f = fit_affine(pts)
+    # property: the reported 1-sigma bounds cover the truth within 4 sigma
+    assert abs(f.slope - slope) < 4 * f.slope_err
+    assert abs(f.intercept - icpt) < 4 * f.intercept_err
+    assert f.rms_s > 0
+
+
+def test_fit_affine_two_points_has_infinite_errors():
+    f = fit_affine([(1.0, 1.0), (2.0, 2.0)])
+    assert f.slope == pytest.approx(1.0)
+    assert f.slope_err == float("inf") and f.intercept_err == float("inf")
+
+
+def test_fit_clamp_warns_and_flags():
+    # regression: non-monotone timings (noise swamps size) used to clamp
+    # silently to a through-origin model reported as if measured.  Now the
+    # clamp still happens (the planner needs positive bandwidth) but it
+    # WARNS and the returned fit is flagged degenerate.
+    pts = [(1e6, 3e-3), (2e6, 2e-3), (8e6, 2.5e-3)]   # non-monotone
+    with pytest.warns(UserWarning, match="degenerated"):
+        bw, c0, fit = _fit(pts)
+    assert c0 == 0.0                    # through-origin fallback
+    assert bw == pytest.approx(8e6 / 2.5e-3)
+    assert fit.degenerate
+    # a clean monotone set neither warns nor flags
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        bw, c0, fit = _fit([(x, 1e-10 * x + 1e-4)
+                            for x in (1e6, 2e6, 8e6)])
+    assert not fit.degenerate and c0 > 0
+
+
+def test_measure_compression_costs_records_quality():
+    from repro.core.schedule import measure_compression_costs
+    tab = measure_compression_costs(compressors=(("int8", ()),),
+                                    sizes=(1 << 12, 1 << 13, 1 << 14),
+                                    repeats=1)
+    assert tab.stage_s("int8", "encode", 1e6) is not None
+    q = tab.fit_quality("int8/encode")
+    assert q is not None
+    rms, r2, deg = q
+    assert rms >= 0 and isinstance(deg, bool)
+
+
+# ---------------------------------------------------------------------------
+# CompressionCostTable: versioned schema (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_cost_table_roundtrip_v2():
+    tab = CompressionCostTable(
+        entries=(("int8/encode", 1e9, 1e-5),),
+        cal_world=16,
+        quality=(("int8/encode", 1e-6, 0.99, False),))
+    obj = tab.to_json()
+    assert obj["version"] == CompressionCostTable.SCHEMA_VERSION == 2
+    assert obj["cal_world"] == 16
+    back = CompressionCostTable.from_json(obj)
+    assert back.entries == tab.entries
+    assert back.cal_world == 16
+    assert back.fit_quality("int8/encode") == (1e-6, 0.99, False)
+
+
+def test_cost_table_v2_requires_cal_world():
+    obj = {"version": 2, "entries": [
+        {"key": "int8/encode", "bw_bytes_per_s": 1e9, "overhead_s": 0.0}]}
+    with pytest.raises(ValueError, match="cal_world"):
+        CompressionCostTable.from_json(obj)
+
+
+def test_cost_table_legacy_warns_and_defaults():
+    legacy = {"entries": [{"key": "int8/encode", "bw_bytes_per_s": 1e9,
+                           "overhead_s": 0.0}]}          # no version field
+    with pytest.warns(UserWarning, match="legacy"):
+        tab = CompressionCostTable.from_json(legacy)
+    assert tab.cal_world == 8
+    # legacy file that DOES carry cal_world: used, no warning
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        tab = CompressionCostTable.from_json(dict(legacy, cal_world=4))
+    assert tab.cal_world == 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: per-tier link fit recovers a synthetic fabric (satellite 4)
+# ---------------------------------------------------------------------------
+
+TRUTH = {"node": (5e-6, 1e-10), "device": (1e-6, 2e-11)}
+
+
+def test_calibrate_recovers_ground_truth_exactly():
+    cal = calibrate_topology(Topology.from_spec(TWO_TIER),
+                             timer=_fabric_timer(TRUTH))
+    assert cal.world == 32
+    assert [t.link_name for t in cal.topology.tiers] == ["calibrated"] * 2
+    for name, (a, b) in TRUTH.items():
+        fit = cal.fit_for(name)
+        assert fit.alpha_s == pytest.approx(a, rel=1e-6)
+        assert fit.beta_s_per_byte == pytest.approx(b, rel=1e-6)
+        assert fit.r2 == pytest.approx(1.0)
+        assert not fit.degenerate
+    # samples were kept for offline refits (the CI suite replays these)
+    assert len(cal.samples) == 2 * 2 * len(CAL_LINK_SIZES)
+
+
+def test_calibrate_noisy_within_reported_bounds():
+    # property: with 1% multiplicative noise the fitted coefficients land
+    # within 4 reported sigmas of the truth — confidence bounds are
+    # honest, not decorative
+    cal = calibrate_topology(Topology.from_spec(TWO_TIER),
+                             timer=_fabric_timer(TRUTH, noise_s=2e-7))
+    for name, (a, b) in TRUTH.items():
+        fit = cal.fit_for(name)
+        assert math.isfinite(fit.alpha_err_s)
+        assert abs(fit.alpha_s - a) < 4 * max(fit.alpha_err_s, 1e-12)
+        assert abs(fit.beta_s_per_byte - b) < \
+            4 * max(fit.beta_err_s_per_byte, 1e-18)
+        assert fit.rms_s > 0
+
+
+def test_calibrated_topology_prices_and_errors():
+    cal = calibrate_topology(Topology.from_spec(TWO_TIER),
+                             timer=_fabric_timer(TRUTH))
+    # a CalibratedTopology IS a net: as_topology unwraps it
+    t = allreduce_cost_s("ring", 1 << 20, 32, cal)
+    a, b = TRUTH["node"]               # bottleneck: the slow fabric
+    expect = 2 * 31 * (a + (1 << 20) / 32 * b)
+    assert t == pytest.approx(expect, rel=1e-6)
+    # noise-free fit: propagated error is ~0 but well-defined
+    assert cal.allreduce_error_s(1 << 20, 32) >= 0.0
+    assert cal.allreduce_error_s(1 << 20, 1) == 0.0
+
+
+def test_calibrated_topology_json_roundtrip(tmp_path):
+    cal = calibrate_topology(Topology.from_spec(TWO_TIER),
+                             timer=_fabric_timer(TRUTH, noise_s=2e-7))
+    path = str(tmp_path / "fabric.cal.json")
+    cal.save(path)
+    back = resolve_calibration(path)
+    assert back.topology == cal.topology
+    assert back.fits == cal.fits
+    assert back.samples == cal.samples
+
+
+def test_one_rank_tier_fits_degenerate():
+    cal = calibrate_topology(Topology.flat(1, LinkParams(), name="solo"),
+                             timer=lambda algo, tier, p, n: 1e-5 + n * 1e-12)
+    fit = cal.fit_for("solo")
+    assert fit.degenerate                 # 1-rank: no wire signal
+    assert fit.alpha_s == pytest.approx(1e-5, rel=1e-6)
+
+
+def test_calibrate_world_mismatch_raises():
+    import jax
+    big = Topology.flat(len(jax.devices()) + 1, LinkParams(), name="data")
+    with pytest.raises(ValueError, match="cannot calibrate"):
+        calibrate_topology(big)           # default timer, wrong world
+
+
+# ---------------------------------------------------------------------------
+# drift math (satellite 4): exact on canned records
+# ---------------------------------------------------------------------------
+
+def test_drift_fraction_exact():
+    assert drift_fraction(10e-3, 12e-3) == pytest.approx(0.2)
+    assert drift_fraction(10e-3, 12e-3) * 100 == pytest.approx(20.0)
+    assert drift_fraction(2.0, 1.5) == pytest.approx(-0.25)
+    assert drift_fraction(1.0, 1.0) == 0.0
+    with pytest.raises(ValueError):
+        drift_fraction(0.0, 1.0)
+
+
+def test_modeled_wall_step_exact():
+    # wall step = overlap-window model + fwd (= backward / 2)
+    assert modeled_wall_step_s(8e-3, 4e-3) == pytest.approx(0.01)
+    assert modeled_wall_step_s(0.0, 1.0) == pytest.approx(0.5)
+
+
+def test_plan_comm_error_sums_buckets():
+    from repro.core.schedule import LayerProfile, plan
+    cal = calibrate_topology(Topology.from_spec(TWO_TIER),
+                             timer=_fabric_timer(TRUTH, noise_s=2e-7))
+    profiles = [LayerProfile(t_backward_s=1e-3, grad_bytes=4 << 20)
+                for _ in range(4)]
+    cp = plan(profiles, cal.topology, 32)
+    err = plan_comm_error_s(cp, cal)
+    assert err == pytest.approx(sum(
+        cal.allreduce_error_s(b.bucket_bytes, cp.world)
+        for b in cp.buckets))
+    assert err > 0
+    assert plan_comm_error_s(cp, None) == 0.0
+
+
+def test_render_drift_table():
+    from repro.launch.report import render_drift_table
+    drift = {
+        "plan_key": "every_step", "modeled_step_s": 8e-3,
+        "modeled_wall_step_s": 10e-3, "measured_step_s": 12e-3,
+        "steps_measured": 5, "drift_frac": 0.2, "drift_pct": 20.0,
+        "comm_fit_err_s": 1e-4, "t_backward_err_s": 5e-4,
+        "measured_spread_s": 2e-3, "fit_error_s": 2.6e-3,
+        "within_fit_error": True, "replans": 1,
+        "replan_events": [{"step": 25, "drift_frac": 0.2,
+                           "new_key": "every_step", "applied": False,
+                           "note": "re-plan kept the incumbent arm"}],
+        "arms": {"every_step": {"modeled_step_s": 8e-3,
+                                "modeled_wall_step_s": 10e-3,
+                                "drift_pct": 20.0}}}
+    txt = render_drift_table(drift)
+    assert "+20.0%" in txt and "within" in txt
+    assert "every_step ←" in txt
+    assert "replan @step 25" in txt
+
+
+# ---------------------------------------------------------------------------
+# session integration: --calibrate leaves the plan-record schema intact
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def planned_session():
+    from repro.api import SessionConfig, TrainSession
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True,
+                                      batch=2, seq=16, steps=4))
+    cal = calibrate_topology(
+        Topology.flat(sess.world, LinkParams(), name="data"),
+        timer=_fabric_timer({"data": (5e-6, 1e-10)}))
+    sess.plan_auto(calibration=cal)
+    sess.run(steps=3)
+    return sess
+
+
+def test_plan_auto_consumes_calibration(planned_session):
+    sess = planned_session
+    assert sess.calibration is not None
+    assert sess.topology is not None
+    assert sess.topology.innermost.link_name == "calibrated"
+    # the plan was priced on the fitted link, not a preset
+    lk = sess.planned["strategy_plan"].comm.link
+    fitted = sess.calibration.topology.innermost.link
+    assert Topology.flat(sess.world, fitted) == \
+        Topology.flat(sess.world, lk.innermost.link
+                      if isinstance(lk, Topology) else lk)
+
+
+def test_drift_report_math(planned_session):
+    sess = planned_session
+    d = sess.drift_report()
+    sp = sess.planned["strategy_plan"]
+    wall = modeled_wall_step_s(sp.modeled_step_s, sp.t_backward_s)
+    assert d["modeled_wall_step_s"] == pytest.approx(wall)
+    assert d["drift_frac"] == pytest.approx(
+        drift_fraction(wall, d["measured_step_s"]))
+    assert d["drift_pct"] == pytest.approx(d["drift_frac"] * 100)
+    assert d["steps_measured"] >= 1
+    assert d["fit_error_s"] >= d["comm_fit_err_s"]
+    assert set(d["arms"]) == set(sess.planned["arms"])
+    for key, arm in d["arms"].items():
+        a = sess.planned["arms"][key]
+        w = modeled_wall_step_s(a.modeled_step_s, a.t_backward_s)
+        assert arm["drift_pct"] == pytest.approx(
+            drift_fraction(w, d["measured_step_s"]) * 100)
+
+
+def test_plan_record_schema_unchanged_without_calibration(
+        planned_session, tmp_path):
+    # acceptance criterion: records written WITHOUT calibration keep the
+    # exact pre-calibration key set; calibration/drift are purely additive
+    from repro.launch import report
+    import repro.launch.paths as paths
+    sess = planned_session
+    sp = sess.planned["strategy_plan"]
+    old = paths.COMM_PLANS
+    paths.COMM_PLANS = str(tmp_path)
+    try:
+        with open(report.save_strategy_plan(sp, "base")) as f:
+            base = json.load(f)
+        with open(report.save_strategy_plan(
+                sp, "cal", calibration=sess.calibration,
+                drift=sess.drift_report())) as f:
+            cal_rec = json.load(f)
+    finally:
+        paths.COMM_PLANS = old
+    expect = {"world", "modeled_step_s", "shard_state", "n_buckets",
+              "buckets", "schedule", "round_cost_s", "t_backward_s"}
+    assert expect <= set(base)
+    assert set(base) <= expect | {"opt_mem_bytes_per_worker", "pipeline",
+                                  "topology"}
+    assert set(cal_rec) == set(base) | {"calibration", "drift"}
+    assert cal_rec["calibration"]["tiers"][0]["alpha_s"] == \
+        pytest.approx(5e-6, rel=1e-6)
+    assert "samples" not in cal_rec["calibration"]
+    assert cal_rec["drift"]["measured_step_s"] > 0
+    assert {k: v for k, v in cal_rec.items()
+            if k not in ("calibration", "drift")} == base
+
+
+def test_bench_ci_calibration_gate():
+    # the CI calibration suite refits COMMITTED timing fixtures (never
+    # live timings): bit-deterministic, green against the committed
+    # baseline, and the gate trips on an injected 20% regression
+    import copy
+    import os
+    import sys
+    scripts = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        import bench_ci
+    finally:
+        sys.path.remove(scripts)
+    recs = bench_ci.collect_calibration()
+    assert recs == bench_ci.collect_calibration()    # bit-deterministic
+    assert recs["drift/canned_20pct"]["drift_pct"] == pytest.approx(20.0)
+    assert recs["drift/modeled_wall"]["modeled_wall_ms"] == 10.0
+    # the refit recovers the fixture's documented ground truth
+    assert recs["node:4@datacenter,device:8@fast_ici/node/alpha"][
+        "alpha_us"] == pytest.approx(5.0, rel=0.05)
+    basedir = os.path.join(os.path.dirname(scripts), "benchmarks",
+                           "baselines")
+    assert not bench_ci.gate({"calibration": recs}, basedir, 0.10)
+    bad = copy.deepcopy(recs)
+    for r in bad.values():
+        r[r["metric"]] *= 1.2
+    assert bench_ci.gate({"calibration": bad}, basedir, 0.10)
+
+
+def test_plan_auto_topology_mismatch_keeps_presets(capsys):
+    from repro.api import SessionConfig, TrainSession
+    sess = TrainSession(SessionConfig(arch="xlstm-125m", reduced=True,
+                                      batch=2, seq=16, steps=4))
+    sess.apply_topology(TWO_TIER)
+    cal = calibrate_topology(
+        Topology.flat(8, LinkParams(), name="data"),
+        timer=_fabric_timer({"data": (5e-6, 1e-10)}))
+    sess.plan_auto(calibration=cal, t_backward_s=0.02)
+    out = capsys.readouterr().out
+    assert "fitted links apply only" in out
+    assert sess.topology.innermost.link_name != "calibrated"

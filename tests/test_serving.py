@@ -158,6 +158,38 @@ def test_engine_bit_identical_midstream_admission(gemma):
     assert eng.compile_counts() == {"prefill": 1, "admit": 1, "decode": 1}
 
 
+def test_zero_token_completion(gemma):
+    # regression: max_new=0 requests used to crash Completion.finish_s
+    # (emit_s[-1] on an empty list) — they must complete with no tokens,
+    # finish at admit time, and keep latency_summary finite, mixed into a
+    # batch with normal requests
+    cfg, model, _ = gemma
+    eng = Engine(model, None,
+                 ServeConfig(max_batch=2, max_len=16, page_size=4),
+                 sim=SimCosts())
+    reqs = [Request(rid=0, prompt=_prompts(cfg, 1, 8)[0], max_new=0),
+            Request(rid=1, prompt=_prompts(cfg, 1, 8)[0], max_new=4)]
+    out = {c.rid: c for c in eng.run(reqs)}
+    assert len(out) == 2
+    empty = out[0]
+    assert len(empty.tokens) == 0 and empty.emit_s == []
+    assert empty.finish_s == empty.admit_s
+    assert empty.first_token_s == empty.admit_s
+    assert np.isfinite(empty.per_token_latency_s)
+    assert len(out[1].tokens) == 4
+    summ = latency_summary(list(out.values()))
+    assert summ["tokens"] == 4
+    assert all(np.isfinite(v) for v in summ.values())
+
+    # the static baseline takes the same degenerate request
+    stat = run_static(model, None, reqs, max_batch=2, max_len=16,
+                      sim=SimCosts())
+    stat = {c.rid: c for c in stat}
+    assert len(stat[0].tokens) == 0 and stat[0].emit_s == []
+    assert stat[0].finish_s == stat[0].admit_s
+    assert len(stat[1].tokens) == 4
+
+
 def test_run_static_matches_generate(gemma):
     from repro.launch.serve import generate
     cfg, model, params = gemma
