@@ -1,0 +1,174 @@
+"""TP × PP × DP × EP placement search: modeled planner arms (ISSUE 9).
+
+All rows are ``name,us_per_call,derived``:
+
+  * ``parallelism/modeled/<arch>/<topology>/...`` — for each tracked
+    (arch, tiered-topology) point, the best budget-eligible arm of each
+    family under a half-replicated optimizer-memory budget: ``dp_best``
+    (rounds × bits × shard axes only), ``pp_best`` (pipeline arms),
+    ``model_best`` (tp/ep arms), and ``auto_budget`` (what
+    ``plan_rounds`` actually picks).  The budget is the regime where
+    model axes earn their keep — replicated every-step and local-SGD
+    carry full moments and drop out, so the contest is sharded-DP's
+    params-gather tail vs the pipeline bubble vs the tp/ep activation
+    edges on the PLACED tier.
+
+  * Acceptance (the tentpole criterion): on every point marked
+    ``must_win`` — and at least two points overall — the best tp/ep arm
+    is STRICTLY faster than both the best DP-only arm and the best
+    PP-only arm.  The winning points are MoE-shaped archs: ~30 GB of
+    expert-heavy parameters behind a 2k-wide activation stream, so the
+    DP gradient edge and the pipeline bubble both scale with the fat
+    parameter tensor while the tp/ep activation edges ride the thin
+    token stream on the fastest tier.
+
+  * Tier-awareness: for every model-axis family the fast-tier placement
+    must price at or below every slow-tier placement of the same size
+    (``ep(8)@device`` vs ``ep(8)@node`` differ ~10× on the commodity
+    cluster — the placement axis is load-bearing, not cosmetic).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.schedule import (ExpertAxis, PipelineAxis, TensorAxis,
+                                 Topology, plan_rounds, profiles_from_grads)
+
+PEAK_FLOPS = 197e12
+TOKENS = 4096
+OPT = "adam"
+
+# (arch, topology spec, must_win).  The two commodity-cluster MoE points
+# and the multi-pod point are the acceptance wins; jamba rides along as
+# the hybrid-MoE data point.
+POINTS = (
+    ("qwen3-moe-30b-a3b", "node:32@commodity,device:8@fast_ici", True),
+    ("qwen3-moe-30b-a3b", "pod:2@datacenter,chip:256@fast_ici", True),
+    ("deepseek-v2-lite-16b", "node:32@commodity,device:8@fast_ici", True),
+    ("jamba-v0.1-52b", "node:32@commodity,device:8@fast_ici", False),
+)
+
+
+def _moe_axis_stats(params):
+    """(expert_fraction, n_moe_layers) from the abstract param tree: the
+    expert weights are the stacked ``(layers, experts, d, f)`` leaves
+    under ``ffn`` (scanned layer stacks), everything else is dense."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    total = sum(int(np.prod(p.shape)) for _, p in leaves)
+    expert, n_layers = 0, 0
+    for path, p in leaves:
+        if "ffn" in jax.tree_util.keystr(path) and p.ndim == 4:
+            expert += int(np.prod(p.shape))
+            n_layers = max(n_layers, int(p.shape[0]))
+    return expert / total, n_layers
+
+
+def build_point(arch: str, spec: str):
+    """(profiles, topology, axes-kwargs) for one tracked point — shared
+    with scripts/bench_ci.py so the gated numbers are these numbers."""
+    from repro.models import Model
+    cfg = get_config(arch)
+    params = Model(cfg).abstract_params()
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    t_backward = 4.0 * n_params * TOKENS / PEAK_FLOPS
+    profiles = profiles_from_grads(params, t_backward)
+    topo = Topology.from_spec(spec)
+    gt = float(TOKENS * topo.world)
+    axes = {
+        "pipeline": PipelineAxis(global_tokens=gt,
+                                 bytes_per_token=float(cfg.d_model * 4)),
+        "tensor": TensorAxis(global_tokens=gt,
+                             bytes_per_token=float(cfg.d_model * 4),
+                             n_layers=cfg.num_layers),
+    }
+    frac, n_moe = _moe_axis_stats(params)
+    if n_moe:
+        axes["expert"] = ExpertAxis(
+            global_tokens=gt,
+            bytes_per_token=float(cfg.top_k * cfg.d_model * 4),
+            n_moe_layers=n_moe, expert_fraction=frac)
+    return profiles, topo, axes
+
+
+def best_by_family(arms, budget):
+    """Best budget-eligible arm per family: (dp, pp, model) — any may be
+    ``None`` when nothing in the family fits."""
+    fits = [a for a in arms.values() if a.opt_mem_bytes <= budget]
+
+    def pick(pred):
+        sel = [a for a in fits if pred(a)]
+        return min(sel, key=lambda a: a.modeled_step_s) if sel else None
+
+    dp = pick(lambda a: a.pipeline_stages == 1 and a.tp == 1 and a.ep == 1)
+    pp = pick(lambda a: a.pipeline_stages > 1)
+    model = pick(lambda a: a.tp > 1 or a.ep > 1)
+    return dp, pp, model
+
+
+def _modeled():
+    wins = []
+    for arch, spec, must_win in POINTS:
+        profiles, topo, axes = build_point(arch, spec)
+        key = f"{arch}/{topo.spec()}"
+        best, arms = plan_rounds(profiles, topo, topo.world, opt_name=OPT,
+                                 **axes)
+        # planner invariant carries over to the model axes
+        assert all(best.modeled_step_s <= a.modeled_step_s + 1e-12
+                   for a in arms.values()), key
+
+        # tier-awareness: same-size model-axis arms, fast tier vs slow
+        placed = {}
+        for a in arms.values():
+            ax = ("tp", a.tp) if a.tp > 1 else (("ep", a.ep) if a.ep > 1
+                                                else None)
+            if ax and (a.tp_tier or a.ep_tier):
+                placed.setdefault(ax, []).append(a)
+        for (ax, size), group in placed.items():
+            group.sort(key=lambda a: a.modeled_step_s)
+            fast = group[0]
+            assert all(fast.modeled_step_s <= a.modeled_step_s + 1e-12
+                       for a in group), (key, ax, size)
+            if len(group) > 1:
+                emit(f"parallelism/modeled/{key}/{ax}({size})_placement",
+                     fast.modeled_step_s * 1e6,
+                     f"fast={fast.key} slowest={group[-1].key} "
+                     f"ratio={group[-1].modeled_step_s / fast.modeled_step_s:.1f}x")
+
+        budget = arms["every_step"].opt_mem_bytes * 0.5
+        dp, pp, model = best_by_family(arms, budget)
+        assert dp is not None and pp is not None and model is not None, key
+        for tag, a in (("dp_best", dp), ("pp_best", pp),
+                       ("model_best", model)):
+            emit(f"parallelism/modeled/{key}/{tag}",
+                 a.modeled_step_s * 1e6,
+                 f"arm={a.key} opt_mem_mib={a.opt_mem_bytes / 2**20:.0f}")
+        tight, _ = plan_rounds(profiles, topo, topo.world, opt_name=OPT,
+                               memory_budget_bytes=budget, **axes)
+        emit(f"parallelism/modeled/{key}/auto_budget",
+             tight.modeled_step_s * 1e6,
+             f"arm={tight.key} budget_mib={budget / 2**20:.0f}")
+
+        won = (model.modeled_step_s < dp.modeled_step_s
+               and model.modeled_step_s < pp.modeled_step_s)
+        if must_win:
+            # the tentpole acceptance: the 3D placement strictly beats
+            # the best DP-only AND the best PP-only arm at this point
+            assert won, (key, model.key, dp.key, pp.key)
+        if won:
+            # the budgeted auto pick must then BE a model-axis arm
+            assert tight.tp > 1 or tight.ep > 1, (key, tight.key)
+            wins.append(key)
+    assert len(wins) >= 2, f"model axes won only at {wins}"
+    emit("parallelism/modeled/wins", float(len(wins)), ";".join(wins))
+
+
+def run():
+    _modeled()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -10,9 +10,10 @@ import sys
 import traceback
 
 from benchmarks import (bench_collectives, bench_compression,
-                        bench_large_batch, bench_overlap, bench_periodic,
-                        bench_pipeline, bench_planner, bench_protocols,
-                        bench_serving, bench_sharded, bench_topology)
+                        bench_large_batch, bench_overlap, bench_parallelism,
+                        bench_periodic, bench_pipeline, bench_planner,
+                        bench_protocols, bench_serving, bench_sharded,
+                        bench_topology)
 
 SUITES = {
     "table1": bench_large_batch,
@@ -24,6 +25,7 @@ SUITES = {
     "planner": bench_planner,
     "sharded": bench_sharded,
     "pipeline": bench_pipeline,
+    "parallelism": bench_parallelism,
     "topology": bench_topology,
     "serving": bench_serving,
 }

@@ -26,7 +26,9 @@ A record may name a different gated quantity via ``"metric": "<key>"``
 Tracked points are the acceptance quantities of each execution mode: the
 auto plan and the fixed baselines it must beat (planner), the
 replicated/sharded fixed modes and the budget flip (sharded), the fixed DP
-arms vs the best pipeline arm and the budget pick (pipeline), on the
+arms vs the best pipeline arm and the budget pick (pipeline), the
+per-family budget-eligible bests of the TP×PP×DP×EP placement search on
+the acceptance points (parallelism, ISSUE 9), on the
 tiered networks (ISSUE 5) the flat-ring bound vs the hierarchical fixed
 plan vs the tier-aware auto pick per topology (topology) — and the fused
 Pallas wires (DESIGN.md §11, the ``kernels`` suite): the only MEASURED
@@ -45,6 +47,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)  # benchmarks.* (shared point definitions)
 
 ARCHS = ("xlstm-125m", "gemma-2b", "chameleon-34b")
 REGIMES = ("fast_ici", "commodity")
@@ -293,6 +296,38 @@ def collect_calibration() -> dict:
     return out
 
 
+def collect_parallelism() -> dict:
+    """Parallelism suite (DESIGN.md §14): fully deterministic — the
+    TP×PP×DP×EP placement search on the acceptance (arch, topology)
+    points of ``benchmarks/bench_parallelism.py`` (the ``must_win``
+    rows).  Gated per point: the best budget-eligible arm of each
+    family (DP-only, PP-only, tp/ep) and the budgeted auto pick.  A
+    drift in ``model_best`` or ``auto_budget`` means the model-axis
+    pricing moved; the DP/PP rows pin the baselines it must keep
+    beating."""
+    from benchmarks.bench_parallelism import (OPT, POINTS, best_by_family,
+                                              build_point)
+    from repro.core.schedule import plan_rounds
+
+    out: dict = {}
+    for arch, spec, must_win in POINTS:
+        if not must_win:
+            continue
+        profiles, topo, axes = build_point(arch, spec)
+        _, arms = plan_rounds(profiles, topo, topo.world, opt_name=OPT,
+                              **axes)
+        budget = arms["every_step"].opt_mem_bytes * 0.5
+        dp, pp, model = best_by_family(arms, budget)
+        tight, _ = plan_rounds(profiles, topo, topo.world, opt_name=OPT,
+                               memory_budget_bytes=budget, **axes)
+        key = f"{arch}/{topo.spec()}"
+        for tag, a in (("dp_best", dp), ("pp_best", pp),
+                       ("model_best", model), ("auto_budget", tight)):
+            out[f"{key}/{tag}"] = {
+                "modeled_step_ms": a.modeled_step_s * 1e3, "arm": a.key}
+    return out
+
+
 def collect() -> dict:
     """All tracked records, keyed by suite name."""
     from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
@@ -392,8 +427,8 @@ def collect() -> dict:
                 "modeled_step_ms": tbest.modeled_step_s * 1e3,
                 "arm": tbest.key}
     return {"planner": planner, "sharded": sharded, "pipeline": pipeline,
-            "topology": topology, "kernels": collect_kernels(),
-            "serving": collect_serving(),
+            "topology": topology, "parallelism": collect_parallelism(),
+            "kernels": collect_kernels(), "serving": collect_serving(),
             "calibration": collect_calibration()}
 
 

@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Smoke suite: tier-1 tests (fast selection — pytest.ini excludes the
 # `slow` marker, which runs as its own CI matrix job) + quickstart example
-# + a 5-step `--sync auto` train + a 3-step `--shard-state` train + a
-# 3-step micro-batched pipeline train on reduced configs.  Run from the
-# repo root:
+# + a 5-step `--sync auto` train + a 3-step sharded train + a 3-step
+# `--parallelism dp=2,tp=2` MoE train + a 3-step micro-batched pipeline
+# train on reduced configs.  Run from the repo root:
 #
 #     bash scripts/ci.sh [--fast]
 #
@@ -39,13 +39,36 @@ if [[ "${1:-}" != "--fast" ]]; then
   # --plan-backward-ms models a TPU backward so the rounds axis is live on
   # CPU (the measured CPU backward would dwarf modeled comm and pin the
   # planner to every_step); expected pick: local_sgd τ + compressed rounds.
+  # the commodity_cluster preset (world 256) replaces the removed
+  # --plan-world 256 flag: the topology's tier product IS the world
   python -m repro.launch.train --arch xlstm-125m --reduced \
       --steps 5 --batch 2 --seq 32 --sync auto \
-      --plan-world 256 --link commodity --plan-backward-ms 20 --log-every 1
+      --topology commodity_cluster --plan-backward-ms 20 --log-every 1
 
-  step "smoke: 3-step sharded-DP train (--shard-state)"
+  step "smoke: 3-step sharded-DP train (--parallelism shard)"
   python -m repro.launch.train --arch xlstm-125m --reduced \
-      --steps 3 --batch 2 --seq 32 --shard-state --log-every 1
+      --steps 3 --batch 2 --seq 32 --parallelism shard --log-every 1
+
+  step "smoke: 3-step --parallelism dp=2,tp=2 --sync auto (reduced qwen3-moe)"
+  # the unified spec end to end on an MoE stack (DESIGN.md §14): the
+  # planner prices tp/ep/pp arms on the world-4 topology, the pinned
+  # dp=2,tp=2 spec filters the pool, and the plan record must carry the
+  # additive parallelism block (absent from pure-dp records — PR 8 rule)
+  python -m repro.launch.train --arch qwen3-moe-30b-a3b --reduced \
+      --steps 3 --batch 2 --seq 32 --sync auto \
+      --parallelism dp=2,tp=2 \
+      --topology node:2@datacenter,device:2@fast_ici \
+      --plan-backward-ms 20 --log-every 1
+  python - <<'PY'
+import json
+with open("artifacts/comm_plans/qwen3-moe-30b-a3b.json") as f:
+    rec = json.load(f)
+par = rec.get("parallelism")
+assert par, f"plan record missing the parallelism block: {sorted(rec)}"
+assert (par["dp"], par["tp"]) == (2, 2), f"wrong parallelism block: {par}"
+assert par["spec"].startswith("dp=2,tp=2"), par
+print(f"parallelism block OK: {par}")
+PY
 
   step "smoke: 3-step fused-wire train (int8_fused/ring, DESIGN.md §11)"
   # the fused one-pass compressed wire in a REAL training loop: EF +
@@ -91,18 +114,18 @@ print(f"drift block OK: modeled {d['modeled_wall_step_s']*1e3:.1f} ms vs "
 PY
 
   if (( DEVICES % 2 == 0 && DEVICES >= 2 )); then
-    step "smoke: 3-step pipeline train (S=2, M=2, reduced gemma-2b)"
+    step "smoke: 3-step pipeline train (pp=2, micro=2, reduced gemma-2b)"
     python -m repro.launch.train --arch gemma-2b --reduced \
         --steps 3 --batch $(( 2 * DEVICES )) --seq 32 \
-        --pipeline-stages 2 --micro-batches 2 --log-every 1
+        --parallelism pp=2,micro=2 --log-every 1
   else
-    step "smoke: 3-step micro-batched pipeline path (S=1, M=2)"
+    step "smoke: 3-step micro-batched pipeline path (S=1, micro=2)"
     # one device: the 1F1B executor still runs (degenerate pipe), covering
     # micro-batching, the per-row DP edge and the stage reports; S>=2 is
     # exercised by the multi-device CI job (tests/multi_device_checks.py)
     python -m repro.launch.train --arch gemma-2b --reduced \
         --steps 3 --batch 2 --seq 32 \
-        --pipeline-stages 1 --micro-batches 2 --log-every 1
+        --parallelism micro=2 --log-every 1
   fi
 fi
 

@@ -44,14 +44,15 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save as save_ckpt
 from repro.configs import get_config, reduced
-from repro.core import (GradientSynchronizer, PlanExecutor, ShardLayout,
-                        SyncConfig, SyncStrategy, get_scheduler)
+from repro.core import (GradientSynchronizer, ParallelismSpec, PlanExecutor,
+                        ShardLayout, SyncConfig, SyncStrategy, get_scheduler)
 from repro.core.grad_sync import sharded_plan_from_config
 from repro.core.pipeline import StagedModel
 from repro.core.collectives import axes_for_topology
 from repro.core.schedule import (LINK_PRESETS, CalibratedTopology,
-                                 LinkParams, PipelineAxis, RoundSchedule,
-                                 StrategyPlan, Topology, calibrate_topology,
+                                 ExpertAxis, LinkParams, PipelineAxis,
+                                 RoundSchedule, StrategyPlan, TensorAxis,
+                                 Topology, calibrate_topology,
                                  drift_fraction, fixed_config_plan,
                                  modeled_wall_step_s, pipeline_arm,
                                  pipeline_placements, plan, plan_comm_error_s,
@@ -109,11 +110,14 @@ def strategy_from_plan(sp: StrategyPlan,
                 SyncConfig(compressor=dom.compressor,
                            compressor_args=dom.compressor_args,
                            algo=dom.algo, bucket_bytes=0), tuple(axes)),
-            pipeline_stages=sp.pipeline_stages,
-            micro_batches=sp.micro_batches)
+            parallelism=sp.parallelism)
+    # tp/ep winners execute their DP edge here (the model axes need a
+    # tp×data / ep×data mesh; on this host they are planning + record
+    # axes, validated bit-exactly by the multi-device checks) — the
+    # strategy still CARRIES the spec so records and describe() are honest
     return SyncStrategy(scheduler=get_scheduler("every_step"),
                         grad_reducer=PlanExecutor(sp.comm, tuple(axes)),
-                        shard_state=sp.shard_state)
+                        parallelism=sp.parallelism)
 
 
 class TrainSession:
@@ -166,6 +170,14 @@ class TrainSession:
         self.grad_rounds = 0
         self.param_rounds = 0
         self.control_rounds = 0
+        # MoE capacity overflow must not vanish silently (DESIGN.md §14):
+        # arm the host-side tap BEFORE the first trace bakes the callback
+        # into the step program; step_once drains it per step.
+        self.dropped_tokens = 0.0
+        self.routed_tokens = 0.0
+        if model_cfg.num_experts:
+            from repro.models.moe import enable_drop_tap
+            enable_drop_tap(True)
         self.planned: Optional[Dict[str, Any]] = None
         self.layout: Optional[ShardLayout] = None   # set by sharded builds
         self.staged: Optional[StagedModel] = None   # set by pipeline builds
@@ -324,6 +336,31 @@ class TrainSession:
             return False
         return True
 
+    def _model_axes(self, pipe_axis: PipelineAxis
+                    ) -> Tuple[TensorAxis, Optional[ExpertAxis]]:
+        """The tp/ep pricing axes for THIS model (DESIGN.md §14): tp pays
+        4 activation allreduces per layer (Megatron wire); ep exists only
+        for MoE stacks, dispatching top-k activation rows per token with
+        ``expert_fraction`` measured from the analytic param count."""
+        mc = self.model_cfg
+        tensor_axis = TensorAxis(
+            global_tokens=pipe_axis.global_tokens,
+            bytes_per_token=pipe_axis.bytes_per_token,
+            n_layers=mc.num_layers)
+        expert_axis = None
+        if mc.num_experts:
+            n_moe = sum(1 for i in range(mc.num_layers)
+                        if mc.layer_spec(i).ffn == "moe")
+            if n_moe:
+                ffm = mc.moe_d_ff or mc.d_ff
+                expert_params = n_moe * 3 * mc.num_experts * mc.d_model * ffm
+                frac = min(0.99, expert_params / max(mc.num_params(), 1))
+                expert_axis = ExpertAxis(
+                    global_tokens=pipe_axis.global_tokens,
+                    bytes_per_token=float(mc.top_k * mc.d_model * 4),
+                    n_moe_layers=n_moe, expert_fraction=frac)
+        return tensor_axis, expert_axis
+
     def plan_auto(self, link="fast_ici", *, alpha=None, beta_gbps=None,
                   plan_world: int = 0, tau_grid=None, candidates=None,
                   scheduler=None, t_backward_s: Optional[float] = None,
@@ -331,6 +368,7 @@ class TrainSession:
                   memory_budget_gb: Optional[float] = None,
                   pipeline_stages: Optional[int] = None,
                   micro_batches: Optional[int] = None,
+                  parallelism=None,
                   topology=None,
                   compression_costs=None,
                   calibration=None) -> StrategyPlan:
@@ -362,9 +400,29 @@ class TrainSession:
         calibration becomes the pricing topology outright; a flat one
         supplies the measured link (so an explicit ``plan_world`` still
         prices a hypothetical pod, on real α/β).  Stashes the full
-        decision record in ``self.planned`` for reporting."""
+        ``parallelism`` — a :class:`~repro.core.ParallelismSpec` or spec
+        string (``"dp=4,tp=2@device"``) pinning the whole parallelism
+        axis at once: the free search prices every arm but only arms
+        matching the spec may win (impossible specs fail loudly inside
+        ``plan_rounds``).  It subsumes the single-axis pins, so combining
+        it with ``shard_state``/``pipeline_stages``/``micro_batches`` or
+        a pinned ``scheduler`` is an error.  Stashes the full decision
+        record in ``self.planned`` for reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
+        if parallelism is not None:
+            if (shard_state is not None or pipeline_stages is not None
+                    or micro_batches is not None):
+                raise ValueError(
+                    "parallelism= subsumes shard_state/pipeline_stages/"
+                    "micro_batches — fold them into the spec "
+                    "(e.g. 'dp=4,pp=2,micro=8,shard')")
+            if scheduler is not None:
+                raise ValueError(
+                    "parallelism= pins arms of the planner's FREE search; "
+                    "a pinned rounds scheduler bypasses that search — "
+                    "drop one")
+            parallelism = ParallelismSpec.coerce(parallelism)
         if topology is not None:
             self.apply_topology(topology)
         cal = resolve_calibration(calibration)
@@ -382,7 +440,7 @@ class TrainSession:
             elif cal.topology.is_flat and self.topology is None \
                     and plan_world and plan_world != cal.world:
                 # hypothetical world, measured link: the fitted flat α/β
-                # price the requested --plan-world
+                # price the requested plan_world
                 cal_link = cal.topology.innermost.link
             else:
                 self.apply_topology(cal.topology)
@@ -402,9 +460,9 @@ class TrainSession:
             lp = self.topology
             world = lp.world
             if plan_world and plan_world != world:
-                print(f"warning: --plan-world {plan_world} disagrees with "
+                print(f"warning: plan_world={plan_world} disagrees with "
                       f"the topology ({lp.spec()} = world {world}); "
-                      f"planning for the topology — --plan-world is "
+                      f"planning for the topology — plan_world is "
                       f"deprecated, the tier-size product wins", flush=True)
         else:
             lp = cal_link if cal_link is not None \
@@ -423,6 +481,7 @@ class TrainSession:
         pipe_axis = PipelineAxis(
             global_tokens=float(self.cfg.batch * self.cfg.seq),
             bytes_per_token=float(self.model_cfg.d_model * 4))
+        tensor_axis, expert_axis = self._model_axes(pipe_axis)
 
         arms: Dict[str, StrategyPlan]
         if pipeline_stages is not None and pipeline_stages > 1:
@@ -461,8 +520,9 @@ class TrainSession:
                 "memory_budget_bytes": (memory_budget_gb * 2**30
                                         if memory_budget_gb is not None
                                         else None),
-                "pipe_axis": pipe_axis, "kw": dict(kw),
-                "tau_grid": tau_grid}
+                "pipe_axis": pipe_axis, "tensor_axis": tensor_axis,
+                "expert_axis": expert_axis, "parallelism": parallelism,
+                "kw": dict(kw), "tau_grid": tau_grid}
             best, arms = plan_rounds(
                 profiles, lp, world,
                 opt_name=self.cfg.optimizer, shard_grid=shard_grid,
@@ -470,7 +530,8 @@ class TrainSession:
                 memory_budget_bytes=(memory_budget_gb * 2**30
                                      if memory_budget_gb is not None
                                      else None),
-                pipeline=pipe_axis,
+                pipeline=pipe_axis, tensor=tensor_axis, expert=expert_axis,
+                parallelism=parallelism,
                 **dict(kw, **({"tau_grid": tau_grid}
                               if tau_grid is not None else {})))
             exec_best = best
@@ -554,8 +615,9 @@ class TrainSession:
                            compressor_args=dom.compressor_args,
                            algo=dom.algo, bucket_bytes=0),
                 tuple(self.axes))
-        self.strategy = SyncStrategy(scheduler=sched, grad_reducer=reducer,
-                                     micro_batches=M)
+        self.strategy = SyncStrategy(
+            scheduler=sched, grad_reducer=reducer,
+            parallelism=ParallelismSpec(micro_batches=M))
         return True
 
     # -- program construction ------------------------------------------------
@@ -759,6 +821,7 @@ class TrainSession:
             loss = float(loss)
             self.losses.append(loss)
             self.step += 1
+            self._drain_drops()
             return loss
 
         sched = self.strategy.scheduler
@@ -801,7 +864,26 @@ class TrainSession:
         loss = float(loss)
         self.losses.append(loss)
         self.step += 1
+        self._drain_drops()
         return loss
+
+    def _drain_drops(self) -> None:
+        """Collect the MoE capacity-overflow counts the step's debug
+        callbacks reported (``float(loss)`` already blocked on the step,
+        so they have fired)."""
+        if not self.model_cfg.num_experts:
+            return
+        from repro.models.moe import drain_drop_tap
+        d, r = drain_drop_tap()
+        self.dropped_tokens += d
+        self.routed_tokens += r
+
+    @property
+    def drop_fraction(self) -> float:
+        """Fraction of routed token-choices dropped to capacity overflow
+        so far (0.0 for dense models or before any step)."""
+        return self.dropped_tokens / self.routed_tokens \
+            if self.routed_tokens else 0.0
 
     def run(self, steps: Optional[int] = None, log_every: int = 0,
             log=print) -> List[float]:
@@ -823,9 +905,11 @@ class TrainSession:
             out.append(loss)
             if log_every and i % log_every == 0:
                 dt = (time.time() - t0) / max(i, 1)
+                drops = (f", dropped {self.drop_fraction * 100:.1f}%"
+                         if self.routed_tokens else "")
                 log(f"step {self.step - 1:5d} loss {loss:.4f} "
                     f"({dt * 1e3:.0f} ms/step, comm rounds "
-                    f"{self.comm_rounds})", flush=True)
+                    f"{self.comm_rounds}{drops})", flush=True)
         self.wall_s = time.time() - t0
         self.steps_run = self.step - start
         return out
@@ -901,7 +985,9 @@ class TrainSession:
             profiles, pk["lp"], pk["world"], opt_name=pk["opt_name"],
             shard_grid=pk["shard_grid"], opt_moments=pk["opt_moments"],
             memory_budget_bytes=pk["memory_budget_bytes"],
-            pipeline=pk["pipe_axis"], **extra)
+            pipeline=pk["pipe_axis"], tensor=pk["tensor_axis"],
+            expert=pk["expert_axis"], parallelism=pk["parallelism"],
+            **extra)
         event["new_key"] = best.key
         old = self.strategy
         old_plain = (old is not None
@@ -985,6 +1071,11 @@ class TrainSession:
                  f"(grad {self.grad_rounds}, param {self.param_rounds}"
                  + (f", control probes {self.control_rounds}"
                     if self.control_rounds else "") + ")"]
+        if self.routed_tokens:
+            parts.append(
+                f"moe dropped {self.dropped_tokens:.0f}/"
+                f"{self.routed_tokens:.0f} token-choices "
+                f"({self.drop_fraction * 100:.1f}%)")
         if self.strategy is not None:
             parts.append(self.strategy.describe())
         else:

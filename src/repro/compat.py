@@ -62,7 +62,14 @@ def _install_shard_map() -> None:
         if axis_names is None:
             auto = frozenset()
         else:
-            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            # Size-1 leftover axes are promoted into the manual set: a
+            # one-shard axis is manual/auto-indistinguishable semantically,
+            # but leaving it auto makes the shard_map PARTIAL-manual, and
+            # XLA aborts (hlo_sharding.cc IsManual check) on any host
+            # callback baked into a partial-manual body — e.g. the MoE
+            # drop tap on the standard data(N) x model(1) session mesh.
+            auto = frozenset(a for a in mesh.axis_names
+                             if a not in axis_names and mesh.shape[a] > 1)
         # check_vma=False maps to the old check_rep=False (skip the
         # replication-invariance check)
         return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,

@@ -10,6 +10,7 @@ from repro.core.local_sgd import (  # noqa: F401
     AsymmetricPushPullConfig, LocalSGDConfig, average_params,
     communication_rounds, should_sync)
 from repro.core.lag import LAGConfig, init_lag_state, lag_trigger, lag_update_state  # noqa: F401
+from repro.core.parallelism import ParallelismSpec  # noqa: F401
 from repro.core.strategy import (  # noqa: F401
     EveryStepScheduler, LAGScheduler, LocalSGDScheduler, PushPullScheduler,
     RoundAction, RoundScheduler, SCHEDULERS, SyncStrategy, get_scheduler,

@@ -89,6 +89,58 @@ def allreduce(x, algo: str, axes: Sequence[str]):
 
 
 # ---------------------------------------------------------------------------
+# Expert-parallel edge: all-to-all along the ep axis (survey §4, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+A2A_VARIANTS = ("direct", "ring")
+
+
+def all_to_all(x, axis: str, variant: str = "direct"):
+    """The expert-dispatch edge: transpose the leading dim of ``x`` across
+    the manual ``axis``.  ``x`` is ``(p, m, ...)`` per rank — chunk ``j``
+    is this rank's payload FOR rank ``j`` — and the output is ``(p, m,
+    ...)`` where row ``j`` is the chunk received FROM rank ``j``.  Chunks
+    move verbatim (no arithmetic), so both variants are bit-identical to
+    the gather-and-slice reference and to each other; they differ only in
+    wire schedule (``cost.all_to_all_cost_s`` prices the difference).
+
+      * ``direct`` — XLA's fused all-to-all (one launch, all pairs
+        exchange concurrently);
+      * ``ring`` — p-1 explicit ``ppermute`` rotations, each moving one
+        chunk one rotation further (the schedule a torus without all-pair
+        connectivity executes; lowers to collective-permute, which the
+        HLO conformance checks assert).
+
+    jit-only, inside shard_map, like every collective in this module.
+    Autodiff transposes to the reverse all-to-all — exactly the combine
+    edge — so expert backward passes need no extra wiring."""
+    p = jax.lax.axis_size(axis)
+    if x.shape[0] != p:
+        raise ValueError(f"all_to_all wants a leading chunk dim of "
+                         f"axis_size {p}, got shape {x.shape}")
+    if variant == "direct":
+        return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+    if variant != "ring":
+        raise ValueError(f"unknown all_to_all variant {variant!r}; "
+                         f"known: {A2A_VARIANTS}")
+    if p == 1:
+        return x
+    i = jax.lax.axis_index(axis)
+    out = x                      # own chunk x[i] is already in place
+    for s in range(1, p):
+        # rotation s: rank r sends its chunk for rank (r+s)%p and
+        # receives, from rank (r-s)%p, that rank's chunk for r
+        perm = [(r, (r + s) % p) for r in range(p)]
+        send = jax.lax.dynamic_index_in_dim(x, (i + s) % p, axis=0,
+                                            keepdims=True)
+        recv = jax.lax.ppermute(send, axis, perm)
+        out = jax.lax.dynamic_update_index_in_dim(out, recv, (i - s) % p,
+                                                  axis=0)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Pipeline edge: neighbour send/recv along the pipe axis (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 

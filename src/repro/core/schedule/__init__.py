@@ -1,9 +1,9 @@
 from repro.core.schedule.cost import (  # noqa: F401
     DECODE_HBM_BW, LINK_PRESETS, CompressionCostTable, LinkParams,
-    allgather_cost_s, allreduce_cost_s, allreduce_phases,
-    bucket_sync_cost_s, bucket_sync_phases, compressed_wire_bytes,
-    decode_step_cost_s, p2p_cost_s, reduce_scatter_cost_s,
-    shard_gather_cost_s)
+    all_to_all_cost_s, allgather_cost_s, allreduce_cost_s,
+    allreduce_phases, bucket_sync_cost_s, bucket_sync_phases,
+    compressed_wire_bytes, decode_step_cost_s, p2p_cost_s,
+    reduce_scatter_cost_s, shard_gather_cost_s)
 from repro.core.schedule.calibration import (  # noqa: F401
     CALIBRATION_SET, AffineFit, CalibratedTopology, LinkFit,
     calibrate_topology, drift_fraction, fit_affine,
@@ -17,12 +17,14 @@ from repro.core.schedule.perf_model import (  # noqa: F401
     iteration_time_tac, wfbp_case)
 from repro.core.schedule.planner import (  # noqa: F401
     BUCKET_GRID, BucketPlan, Candidate, CommPlan, DEFAULT_CANDIDATES,
-    DENSE_SMALL_BYTES, LOCAL_SGD_STEP_INFLATION, MICRO_GRID, OPT_MOMENTS,
-    PIPE_GRID, PipelineAxis, RoundSchedule, ServingPlan, StrategyPlan,
-    TAU_GRID, fixed_config_plan, opt_state_bytes_per_worker,
-    pipeline_arm, pipeline_placements, plan, plan_cost_s, plan_rounds,
-    plan_serving, profiles_from_grads, profiles_from_sizes,
-    serial_round_plan, serving_placements, shard_gather_tail_s)
+    DENSE_SMALL_BYTES, EP_GRID, ExpertAxis, LOCAL_SGD_STEP_INFLATION,
+    MICRO_GRID, OPT_MOMENTS, PIPE_GRID, PipelineAxis, RoundSchedule,
+    ServingPlan, StrategyPlan, TAU_GRID, TP_GRID, TensorAxis,
+    expert_parallel_arm, fixed_config_plan, model_axis_placements,
+    opt_state_bytes_per_worker, pipeline_arm, pipeline_placements, plan,
+    plan_cost_s, plan_rounds, plan_serving, profiles_from_grads,
+    profiles_from_sizes, serial_round_plan, serving_placements,
+    shard_gather_tail_s, tensor_parallel_arm)
 from repro.core.pipeline import (  # noqa: F401
     PIPE_FWD_FRACTION, StagedModel, aligned_order, aligned_ticks,
     balanced_cuts, bubble_fraction, schedule_1f1b, simulate_1f1b,

@@ -200,6 +200,61 @@ def allgather_cost_s(n_bytes: float, p: int, net: Net) -> float:
     return (p - 1) * (link.alpha_s + n_bytes * link.beta_s_per_byte)
 
 
+def _resolve_tier(topo: Topology, tier: Optional[Union[int, str]],
+                  m_bytes: float) -> Tier:
+    """Tier selection shared by the placed-axis cost functions: by index
+    or name when the caller placed the axis, else the bottleneck tier of
+    a flat traversal moving ``m_bytes`` per step."""
+    if tier is None:
+        return topo.bottleneck(m_bytes)
+    if isinstance(tier, str):
+        match = [t for t in topo.tiers if t.name == tier]
+        if not match:
+            raise ValueError(f"no tier named {tier!r} in {topo.spec()}")
+        return match[0]
+    return topo.tiers[tier]
+
+
+def all_to_all_cost_s(n_bytes: float, p: int, net: Net,
+                      variant: str = "direct",
+                      tier: Optional[Union[int, str]] = None) -> float:
+    """One all-to-all where every rank holds ``n_bytes`` total and sends
+    an equal ``n_bytes/p`` chunk to each peer — the expert dispatch /
+    combine edge of MoE expert parallelism (survey §4; DESIGN.md §14).
+
+      * ``direct`` — all pairs exchange concurrently (XLA's fused
+        all-to-all): one launch latency, but a rank's NIC still serialises
+        its (p-1) outgoing chunks: α + (p-1)·(n/p)·β.
+      * ``ring`` — (p-1) ppermute rotations of one chunk each (what
+        ``collectives.api.all_to_all(variant="ring")`` executes):
+        (p-1)·(α + (n/p)·β) — the same bytes, (p-2) extra message
+        latencies, so direct ≤ ring always and the gap is α-dominated
+        (the planner's variant choice is a latency/topology call, not a
+        bandwidth one).
+
+    On a tiered network the edge is priced on the tier the ``ep`` axis
+    was placed on (``tier`` by index or name — ``Topology.place``
+    semantics), defaulting to the bottleneck tier of a flat traversal."""
+    if p <= 1:
+        return 0.0
+    if variant not in ("direct", "ring"):
+        raise ValueError(f"unknown all_to_all variant {variant!r}; "
+                         f"known: ('direct', 'ring')")
+    # like p2p_cost_s, the net here may be a FULL topology whose world
+    # exceeds p (the ep axis is a placed sub-group of it) — resolve the
+    # tier directly instead of as_topology's world check
+    inner = getattr(net, "topology", None)
+    if isinstance(inner, Topology):
+        net = inner
+    topo = net if isinstance(net, Topology) else Topology.flat(p, net)
+    t = _resolve_tier(topo, tier, n_bytes / p)
+    a, b = t.link.alpha_s, t.link.beta_s_per_byte
+    chunk = n_bytes / p
+    if variant == "ring":
+        return (p - 1) * (a + chunk * b)
+    return a + (p - 1) * chunk * b
+
+
 # Effective HBM bandwidth for weight-streaming decode (B/s).  Incremental
 # decode is memory-bound: every step reads the full (TP-sharded) parameter
 # set once, so compute time is param_bytes / bandwidth, not a FLOP count.

@@ -21,7 +21,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.parallelism import ParallelismSpec
 from repro.core.schedule.cost import (CompressionCostTable, LinkParams,
+                                      all_to_all_cost_s, allreduce_cost_s,
                                       bucket_sync_cost_s,
                                       shard_gather_cost_s)
 from repro.core.schedule.perf_model import LayerProfile
@@ -434,7 +436,18 @@ class StrategyPlan:
     traffic per step.  On a tiered topology ``pipe_tier`` records the
     AXIS PLACEMENT the planner chose — which tier the pipe axis consumes
     (DESIGN.md §10): ``@node`` means "pipeline across nodes, gradient
-    ring inside them"; empty means a flat network (the historical arm)."""
+    ring inside them"; empty means a flat network (the historical arm).
+
+    ``tp > 1`` / ``ep > 1`` mark the intra-layer model-parallel arms
+    (DESIGN.md §14): ``comm`` is the shrunken DP edge (1/tp of the grad
+    bytes over world/tp replicas, or the expert-sharded equivalent),
+    ``model_comm_s`` the SERIAL per-step activation traffic the mode adds
+    (Megatron's per-layer activation allreduces for TP, the expert
+    dispatch/combine all-to-alls for EP — nothing hides either in a
+    synchronous layer stack), and ``tp_tier`` / ``ep_tier`` the tier the
+    axis consumes.  The per-knob fields are consolidated in the
+    :class:`~repro.core.parallelism.ParallelismSpec` view (``.parallelism``)
+    — new code should read that."""
     schedule: RoundSchedule
     comm: CommPlan
     modeled_step_s: float
@@ -447,15 +460,41 @@ class StrategyPlan:
     bubble: float = 0.0
     pipe_p2p_s: float = 0.0
     pipe_tier: str = ""
+    tp: int = 1
+    tp_tier: str = ""
+    ep: int = 1
+    ep_tier: str = ""
+    model_comm_s: float = 0.0
 
     @property
     def key(self) -> str:
         """Arm key in ``plan_rounds``'s arms dict (and the report table)."""
+        if self.tp > 1:
+            at = f"@{self.tp_tier}" if self.tp_tier else ""
+            return f"tp({self.tp}){at}"
+        if self.ep > 1:
+            at = f"@{self.ep_tier}" if self.ep_tier else ""
+            return f"ep({self.ep}){at}"
         if self.pipeline_stages > 1:
             at = f"@{self.pipe_tier}" if self.pipe_tier else ""
             return (f"pipeline(S={self.pipeline_stages},"
                     f"M={self.micro_batches}){at}")
         return self.schedule.key + ("_sharded" if self.shard_state else "")
+
+    @property
+    def parallelism(self) -> ParallelismSpec:
+        """The arm's factorization as one :class:`ParallelismSpec` — the
+        consolidated view ``SyncStrategy`` / ``TrainSession`` / the plan
+        record speak (DESIGN.md §14)."""
+        pp = int(self.pipeline_stages)
+        return ParallelismSpec(
+            dp=max(int(self.comm.world), 1), tp=int(self.tp),
+            pp=pp, ep=int(self.ep),
+            tp_tier=self.tp_tier if self.tp > 1 else "",
+            pp_tier=self.pipe_tier if pp > 1 else "",
+            ep_tier=self.ep_tier if self.ep > 1 else "",
+            micro_batches=int(self.micro_batches) if pp > 1 else 0,
+            shard_state=self.shard_state)
 
     def describe(self) -> str:
         shard = " [shard_state 1/p]" if self.shard_state else ""
@@ -465,6 +504,12 @@ class StrategyPlan:
                       if self.pipe_tier else "")
             pipe = (f" [bubble {self.bubble:.1%}, "
                     f"p2p {self.pipe_p2p_s * 1e3:.3f} ms{placed}]")
+        if self.tp > 1 or self.ep > 1:
+            ax = "tp" if self.tp > 1 else "ep"
+            tier = self.tp_tier if self.tp > 1 else self.ep_tier
+            placed = f" on tier {tier!r}" if tier else ""
+            pipe = (f" [{ax} activation comm "
+                    f"{self.model_comm_s * 1e3:.3f} ms{placed}]")
         return (f"{self.key}{shard}{pipe}: "
                 f"{self.modeled_step_s * 1e3:.3f} ms/step"
                 f" (round {self.round_cost_s * 1e3:.3f} ms, "
@@ -742,6 +787,211 @@ def pipeline_arm(layer_profiles: Sequence[LayerProfile], link,
         opt_mem_bytes=float(mom) * max(per_stage))
 
 
+# ---------------------------------------------------------------------------
+# The intra-layer model-parallel axes: tensor + expert (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# TP/EP group sizes searched by ``plan_rounds`` when the matching axis
+# descriptor is supplied.  The group must divide the world and (on a tiered
+# topology) some tier.
+TP_GRID = (2, 4, 8)
+EP_GRID = (2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorAxis:
+    """What the planner needs to price tp arms: the per-layer activation
+    allreduce traffic.  ``global_tokens`` is batch × seq per step;
+    ``bytes_per_token`` one activation row (d_model × 4 for the f32
+    reference wire).  A tp group processes its DP replica's share —
+    ``global_tokens / (world/tp)`` tokens — and pays the Megatron pattern:
+    4 activation allreduces per layer per step (2 forward + 2 backward,
+    one per column→row pair) over the tp axis, serial (the synchronous
+    layer stack hides none of them)."""
+    global_tokens: float
+    bytes_per_token: float
+    n_layers: int
+    tp_grid: Tuple[int, ...] = TP_GRID
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertAxis:
+    """What the planner needs to price ep arms: the expert dispatch /
+    combine all-to-all traffic plus how much of the model the ep axis
+    actually shards.  ``bytes_per_token`` is the dispatched activation
+    row including the top-k fan-out (k × d_model × 4 for the f32 wire);
+    ``expert_fraction`` the share of parameter bytes living in expert
+    weights (sharded 1/ep — the rest stays replicated across ep and pays
+    an extra ep-axis reduction).  Each rank dispatches its own
+    ``global_tokens / world`` tokens: 4 all-to-alls per MoE layer per
+    step (dispatch + combine, forward + backward)."""
+    global_tokens: float
+    bytes_per_token: float
+    n_moe_layers: int
+    expert_fraction: float = 0.9
+    ep_grid: Tuple[int, ...] = EP_GRID
+    variant: str = "direct"
+
+
+def model_axis_placements(net, world: int, size: int
+                          ) -> List[Tuple[str, Any, Any]]:
+    """Tier placements for a tp/ep group of ``size`` ranks:
+    ``[(tier_name, group_net, dp_net), ...]`` — ``group_net`` prices the
+    group's activation collectives (the placed tier's link), ``dp_net``
+    is the topology the remaining world/size DP replicas see.  Flat
+    networks have the single historical placement (name "").  Mirrors
+    :func:`pipeline_placements` / :func:`serving_placements`; may return
+    ``[]`` when ``size`` divides no tier."""
+    size = int(size)
+    if size == 1 or not isinstance(net, Topology):
+        return [("", net, net)]
+    if net.world != world:
+        raise ValueError(f"topology world {net.world} != world {world}")
+    out = []
+    for ti, tier in enumerate(net.tiers):
+        if tier.size % size != 0:
+            continue
+        placed, rest = net.place(size, ti)
+        out.append(("" if net.is_flat else tier.name, placed.link, rest))
+    return out
+
+
+def tensor_parallel_arm(layer_profiles: Sequence[LayerProfile], link,
+                        world: int, tp: int, axis: TensorAxis,
+                        candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                        bucket_grid: Sequence[int] = BUCKET_GRID,
+                        dense_small_bytes: float = DENSE_SMALL_BYTES,
+                        mean: bool = True, opt_name: str = "adam",
+                        opt_moments: Optional[float] = None,
+                        placement: Optional[Tuple[str, Any, Any]] = None,
+                        cost_table: Optional[CompressionCostTable] = None
+                        ) -> StrategyPlan:
+    """Price one tp-way tensor-parallel composite on a tp × data mesh.
+
+    Per-rank compute is unchanged (1/tp of every matmul × tp× the tokens
+    of its dp group), so the arm trades three things against plain DP:
+
+      * the DP edge shrinks tp×: each rank owns 1/tp of every weight, so
+        gradient sync moves 1/tp of the bytes over world/tp replicas, on
+        the topology REMAINING after the tp axis took its tier — the
+        same overlap-planned :func:`plan` search, so compression
+        composes on the shrunken edge;
+      * the activation edges appear: 4 allreduces per layer per step of
+        the group's ``(tokens, d_model)`` activations over the tp axis
+        (Megatron's column→row f/g pattern, DESIGN.md §14), priced on
+        the PLACED tier and charged serially — the synchronous layer
+        stack hides none of them, which is exactly why TP belongs on the
+        fastest tier;
+      * optimizer state shrinks tp×: moments × param_bytes/tp per rank —
+        TP is a memory lever and competes through ``memory_budget_bytes``
+        like the shard and pipeline arms.
+    """
+    tp = int(tp)
+    if tp < 2:
+        raise ValueError(f"tensor-parallel arm needs tp >= 2, got {tp}")
+    if world % tp != 0:
+        raise ValueError(f"tp={tp} does not divide world {world}")
+    if placement is None:
+        options = model_axis_placements(link, world, tp)
+        if not options:
+            raise ValueError(f"tp={tp} fits no tier of {link.spec()}")
+        placement = options[0]
+    tier_name, group_net, dp_net = placement
+    dp = world // tp
+    shards = [LayerProfile(t_backward_s=l.t_backward_s,
+                           grad_bytes=l.grad_bytes / tp)
+              for l in layer_profiles]
+    cp = plan(shards, dp_net, dp, candidates=candidates,
+              bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
+              mean=mean, cost_table=cost_table)
+    act_bytes = axis.global_tokens / dp * axis.bytes_per_token
+    act_s = 4.0 * axis.n_layers * allreduce_cost_s("ring", act_bytes, tp,
+                                                   group_net)
+    t_bwd = sum(l.t_backward_s for l in layer_profiles)
+    pb = float(sum(l.grad_bytes for l in layer_profiles))
+    mom = OPT_MOMENTS.get(opt_name, 2) if opt_moments is None \
+        else opt_moments
+    return StrategyPlan(
+        schedule=RoundSchedule(), comm=cp,
+        modeled_step_s=cp.modeled_step_s + act_s,
+        round_cost_s=sum(_bucket_cost_s(b, dp, dp_net,
+                                        cost_table=cost_table)
+                         for b in cp.buckets),
+        t_backward_s=t_bwd, tp=tp, tp_tier=tier_name, model_comm_s=act_s,
+        opt_mem_bytes=float(mom) * pb / tp)
+
+
+def expert_parallel_arm(layer_profiles: Sequence[LayerProfile], link,
+                        world: int, ep: int, axis: ExpertAxis,
+                        candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                        bucket_grid: Sequence[int] = BUCKET_GRID,
+                        dense_small_bytes: float = DENSE_SMALL_BYTES,
+                        mean: bool = True, opt_name: str = "adam",
+                        opt_moments: Optional[float] = None,
+                        placement: Optional[Tuple[str, Any, Any]] = None,
+                        cost_table: Optional[CompressionCostTable] = None
+                        ) -> StrategyPlan:
+    """Price one ep-way expert-parallel composite.
+
+    The ep axis shards the expert weights (``axis.expert_fraction`` of
+    the param bytes) 1/ep while every rank keeps its own tokens, so:
+
+      * the DP edge shrinks on the expert fraction: per-leaf grad bytes
+        scale by ``frac/ep + (1-frac)`` over world/ep replica groups on
+        the remaining topology (each expert exists on world/ep ranks);
+      * the non-expert grads must ALSO cross the ep axis (they are
+        replicated over it but fed by different tokens): one serial ring
+        allreduce of ``(1-frac)·param_bytes`` over ep on the placed tier;
+      * the dispatch/combine edges appear: 4 all-to-alls per MoE layer
+        per step of each rank's ``global_tokens/world`` token rows over
+        the ep axis (``cost.all_to_all_cost_s``, ring or direct variant),
+        charged serially on the placed tier;
+      * optimizer state shrinks on the expert fraction:
+        moments × pb × (frac/ep + 1-frac).
+    """
+    ep = int(ep)
+    if ep < 2:
+        raise ValueError(f"expert-parallel arm needs ep >= 2, got {ep}")
+    if world % ep != 0:
+        raise ValueError(f"ep={ep} does not divide world {world}")
+    if not 0.0 <= axis.expert_fraction <= 1.0:
+        raise ValueError(f"expert_fraction must be in [0, 1], "
+                         f"got {axis.expert_fraction}")
+    if placement is None:
+        options = model_axis_placements(link, world, ep)
+        if not options:
+            raise ValueError(f"ep={ep} fits no tier of {link.spec()}")
+        placement = options[0]
+    tier_name, group_net, dp_net = placement
+    dp = world // ep
+    frac = axis.expert_fraction
+    scale = frac / ep + (1.0 - frac)
+    shards = [LayerProfile(t_backward_s=l.t_backward_s,
+                           grad_bytes=l.grad_bytes * scale)
+              for l in layer_profiles]
+    cp = plan(shards, dp_net, dp, candidates=candidates,
+              bucket_grid=bucket_grid, dense_small_bytes=dense_small_bytes,
+              mean=mean, cost_table=cost_table)
+    pb = float(sum(l.grad_bytes for l in layer_profiles))
+    a2a_bytes = axis.global_tokens / world * axis.bytes_per_token
+    model_s = 4.0 * axis.n_moe_layers * all_to_all_cost_s(
+        a2a_bytes, ep, group_net, axis.variant)
+    if frac < 1.0:
+        model_s += allreduce_cost_s("ring", (1.0 - frac) * pb, ep,
+                                    group_net)
+    t_bwd = sum(l.t_backward_s for l in layer_profiles)
+    mom = OPT_MOMENTS.get(opt_name, 2) if opt_moments is None \
+        else opt_moments
+    return StrategyPlan(
+        schedule=RoundSchedule(), comm=cp,
+        modeled_step_s=cp.modeled_step_s + model_s,
+        round_cost_s=sum(_bucket_cost_s(b, dp, dp_net,
+                                        cost_table=cost_table)
+                         for b in cp.buckets),
+        t_backward_s=t_bwd, ep=ep, ep_tier=tier_name, model_comm_s=model_s,
+        opt_mem_bytes=float(mom) * pb * scale)
+
+
 def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                 world: int,
                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
@@ -755,6 +1005,9 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                 memory_budget_bytes: Optional[float] = None,
                 opt_moments: Optional[float] = None,
                 pipeline: Optional[PipelineAxis] = None,
+                tensor: Optional[TensorAxis] = None,
+                expert: Optional[ExpertAxis] = None,
+                parallelism=None,
                 cost_table: Optional[CompressionCostTable] = None
                 ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
     """Search the rounds axis × the bits axis × the shard axis: every
@@ -790,10 +1043,48 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
     planned on the remaining topology — so "pipeline across nodes, dense
     ring inside" competes directly with "hierarchical allreduce across
     both" and with pipelining inside the node.
+
+    The MODEL axes (``tp(N)@tier`` / ``ep(N)@tier``, priced when a
+    :class:`TensorAxis` / :class:`ExpertAxis` is supplied): one arm per
+    (size, tier placement) via :func:`tensor_parallel_arm` /
+    :func:`expert_parallel_arm` — the TP×PP×DP×EP search space of
+    DESIGN.md §14, every arm priced by the same α-β model under the same
+    memory budget.  (Combined tp×pp / tp×ep arms are NOT in the search
+    space — each model axis competes against the others, not with them.)
+
+    ``parallelism`` (a :class:`~repro.core.parallelism.ParallelismSpec`,
+    spec string, or None) PINS the factorization instead of searching it:
+    pinned axes collapse their grids to the requested (size, tier), the
+    final pool is filtered to arms matching the spec exactly, and an
+    unreachable spec — axis without its descriptor, size off every grid,
+    tier it doesn't divide — raises loudly rather than silently planning
+    something else.  ``arms`` still carries every priced arm for the
+    decision record.
     """
     if isinstance(link, Topology) and link.world != world:
         raise ValueError(f"topology world {link.world} ({link.spec()}) != "
                          f"world {world}; derive world from the topology")
+    spec = None
+    if parallelism is not None:
+        spec = ParallelismSpec.coerce(parallelism).resolve(
+            link if isinstance(link, Topology) else world)
+        if spec.tp > 1 and tensor is None:
+            raise ValueError(
+                f"parallelism spec {spec.spec()!r} pins tp={spec.tp} but no "
+                f"TensorAxis was supplied — the planner cannot price the "
+                f"activation edges (pass tensor=TensorAxis(...))")
+        if spec.ep > 1 and expert is None:
+            raise ValueError(
+                f"parallelism spec {spec.spec()!r} pins ep={spec.ep} but no "
+                f"ExpertAxis was supplied — the planner cannot price the "
+                f"dispatch/combine edges (pass expert=ExpertAxis(...))")
+        if spec.pp > 1 and pipeline is None:
+            raise ValueError(
+                f"parallelism spec {spec.spec()!r} pins pp={spec.pp} but no "
+                f"PipelineAxis was supplied — the planner cannot price the "
+                f"bubble/p2p edges (pass pipeline=PipelineAxis(...))")
+        if spec.shard_state:
+            shard_grid = tuple(s for s in shard_grid if s) or (True,)
     t_bwd = sum(l.t_backward_s for l in layer_profiles)
     pb = float(sum(l.grad_bytes for l in layer_profiles))   # f32 param bytes
     arms: Dict[str, StrategyPlan] = {}
@@ -827,11 +1118,20 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
             arms[arm.schedule.key] = dataclasses.replace(
                 arm, opt_mem_bytes=mem)
     if pipeline is not None and world > 1:
-        for S in pipeline.pipe_grid:
+        pipe_grid = pipeline.pipe_grid
+        micro_grid = pipeline.micro_grid
+        if spec is not None and spec.pp > 1:
+            pipe_grid = (spec.pp,)
+            if spec.micro_batches:
+                micro_grid = (spec.micro_batches,)
+        for S in pipe_grid:
             if S < 2 or world % S != 0 or world // S < 2 \
                     or len(layer_profiles) < S:
                 continue
-            for placement in pipeline_placements(link, world, S):
+            placements = pipeline_placements(link, world, S)
+            if spec is not None and spec.pp_tier:
+                placements = [p for p in placements if p[0] == spec.pp_tier]
+            for placement in placements:
                 # the stage cuts + DP-edge bucket search depend only on
                 # (S, placement); only bubble/p2p vary with M
                 dp = pipeline_dp_plan(
@@ -839,7 +1139,7 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                     bucket_grid=bucket_grid,
                     dense_small_bytes=dense_small_bytes, mean=mean,
                     dp_net=placement[1], cost_table=cost_table)
-                for M in pipeline.micro_grid:
+                for M in micro_grid:
                     act = (pipeline.global_tokens / (world // S) / M
                            * pipeline.bytes_per_token)
                     arm = pipeline_arm(
@@ -848,12 +1148,78 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                         dp_plan=dp, placement=placement,
                         cost_table=cost_table)
                     arms[arm.key] = arm
+    if tensor is not None and world > 1:
+        tp_grid = tensor.tp_grid
+        if spec is not None and spec.tp > 1:
+            tp_grid = (spec.tp,)
+        for tp in tp_grid:
+            if tp < 2 or world % tp != 0:
+                continue
+            placements = model_axis_placements(link, world, tp)
+            if spec is not None and spec.tp_tier:
+                placements = [p for p in placements if p[0] == spec.tp_tier]
+            for placement in placements:
+                arm = tensor_parallel_arm(
+                    layer_profiles, link, world, tp, tensor,
+                    candidates=candidates, bucket_grid=bucket_grid,
+                    dense_small_bytes=dense_small_bytes, mean=mean,
+                    opt_name=opt_name, opt_moments=opt_moments,
+                    placement=placement, cost_table=cost_table)
+                arms[arm.key] = arm
+    if expert is not None and world > 1:
+        ep_grid = expert.ep_grid
+        if spec is not None and spec.ep > 1:
+            ep_grid = (spec.ep,)
+        for ep in ep_grid:
+            if ep < 2 or world % ep != 0:
+                continue
+            placements = model_axis_placements(link, world, ep)
+            if spec is not None and spec.ep_tier:
+                placements = [p for p in placements if p[0] == spec.ep_tier]
+            for placement in placements:
+                arm = expert_parallel_arm(
+                    layer_profiles, link, world, ep, expert,
+                    candidates=candidates, bucket_grid=bucket_grid,
+                    dense_small_bytes=dense_small_bytes, mean=mean,
+                    opt_name=opt_name, opt_moments=opt_moments,
+                    placement=placement, cost_table=cost_table)
+                arms[arm.key] = arm
     pool = list(arms.values())
+    if spec is not None:
+        pool = [a for a in pool if _arm_matches_spec(a, spec)]
+        if not pool:
+            raise ValueError(
+                f"parallelism spec {spec.spec()!r} matches no priced arm "
+                f"on world={world} ({link.spec() if isinstance(link, Topology) else link}) "
+                f"— the requested factorization is outside the search "
+                f"space (combined tp×pp/tp×ep placements are not searched; "
+                f"check the axis grids and tier divisibility)")
     if memory_budget_bytes is not None:
         fits = [a for a in pool if a.opt_mem_bytes <= memory_budget_bytes]
         pool = fits or [min(pool, key=lambda s: s.opt_mem_bytes)]
     best = min(pool, key=lambda s: s.modeled_step_s)
     return best, arms
+
+
+def _arm_matches_spec(arm: StrategyPlan, spec: "ParallelismSpec") -> bool:
+    """Exact-match filter for a pinned :class:`ParallelismSpec`: the arm
+    must carry the requested (tp, pp, ep, shard) sizes, the named tiers
+    when given, and the micro-batch count when set.  every_step / local
+    SGD arms only match the trivial (pure-dp) spec."""
+    if (arm.tp, arm.pipeline_stages, arm.ep) != (spec.tp, spec.pp, spec.ep):
+        return False
+    if arm.shard_state != spec.shard_state:
+        return False
+    if spec.tp > 1 and spec.tp_tier and arm.tp_tier != spec.tp_tier:
+        return False
+    if spec.ep > 1 and spec.ep_tier and arm.ep_tier != spec.ep_tier:
+        return False
+    if spec.pp > 1:
+        if spec.pp_tier and arm.pipe_tier != spec.pp_tier:
+            return False
+        if spec.micro_batches and arm.micro_batches != spec.micro_batches:
+            return False
+    return True
 
 
 def fixed_config_plan(layer_profiles: Sequence[LayerProfile],

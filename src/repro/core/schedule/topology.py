@@ -208,8 +208,9 @@ class Topology:
 
 def as_topology(net: Union[Topology, "LinkParams"], world: int) -> Topology:
     """Normalize the ``net`` argument every cost function takes: a
-    ``Topology`` must agree with ``world`` (the deprecated ``--plan-world``
-    path resolves the disagreement BEFORE pricing — see train.py); a bare
+    ``Topology`` must agree with ``world`` (the deprecated ``plan_world``
+    path resolves the disagreement BEFORE pricing — see api.plan_auto); a
+    bare
     ``LinkParams`` becomes the flat single-tier topology.  A
     ``schedule.calibration.CalibratedTopology`` (anything carrying a
     ``.topology``) unwraps to its fitted topology, so calibrated fabrics

@@ -29,12 +29,14 @@ over it.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, FrozenSet, Optional
 
 from repro.core.grad_sync import GradientSynchronizer, PlanExecutor, SyncConfig
 from repro.core.lag import LAGConfig, init_lag_state, lag_update_state
 from repro.core.local_sgd import (AsymmetricPushPullConfig, LocalSGDConfig,
                                   should_sync)
+from repro.core.parallelism import ParallelismSpec
 from repro.core.schedule.planner import CommPlan
 
 
@@ -232,10 +234,16 @@ class PushPullScheduler(RoundScheduler):
 # The composed strategy
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+_LEGACY_KNOB_MSG = (
+    "SyncStrategy({names}) is deprecated; pass "
+    "parallelism=ParallelismSpec(...) (or a spec string like "
+    "'pp=2,micro=8,shard') instead — the per-knob fields will be removed "
+    "next release (DESIGN.md §14)")
+
+
 class SyncStrategy:
-    """scheduler × reducers.  Reducers are any engine with the
-    ``init_state(tree)`` / ``__call__(tree, state, rng)`` interface
+    """scheduler × reducers × parallelism.  Reducers are any engine with
+    the ``init_state(tree)`` / ``__call__(tree, state, rng)`` interface
     (``PlanExecutor``, ``GradientSynchronizer``):
 
       * ``grad_reducer`` — runs inside 'sync' rounds on the gradients
@@ -245,41 +253,69 @@ class SyncStrategy:
         the delta instead of the raw parameters is what keeps error feedback
         and sparsification sound for periodic averaging
 
-    ``shard_state=True`` selects the sharded-DP execution mode (DESIGN.md
-    §8): gradients reduce-scatter per bucket, optimizer moments + f32
-    master params are partitioned 1/p over the data axes, and updated
-    params all-gather back on the forward edge.  Only every-step gradient
-    sync composes with it — schedulers with local phases or gradient reuse
-    need full per-worker optimizer state by construction.
+    ``parallelism`` (a :class:`~repro.core.parallelism.ParallelismSpec`,
+    spec string, or None = pure replicated DP) names how the world is
+    factored — ZeRO shard_state, pipeline (pp, micro), tensor (tp), and
+    expert (ep) axes with their tier placements — ONE object shared with
+    ``plan_rounds`` and the plan records (DESIGN.md §14).  Only every-step
+    gradient sync composes with a non-trivial spec: schedulers with local
+    phases or gradient reuse need full per-worker replicated state by
+    construction.
 
-    ``pipeline_stages > 1`` selects the pipeline-parallel execution mode
-    (DESIGN.md §9): the model is cut into S stages on a ``pipe × data``
-    mesh, ``micro_batches`` micro-batches flow through a 1F1B schedule,
-    and the grad reducer runs on the DP dimension only (per layer row).
-    Composes with every-step gradient sync exclusively, and not with
-    ``shard_state`` (each is its own answer to the optimizer-memory axis).
-    """
-    scheduler: RoundScheduler
-    grad_reducer: Any = None
-    param_reducer: Any = None
-    param_algo: str = "psum"
-    shard_state: bool = False
-    pipeline_stages: int = 1
-    micro_batches: int = 1
+    The pre-spec per-knob surface (``shard_state`` / ``pipeline_stages`` /
+    ``micro_batches`` constructor args and attributes) still works as a
+    deprecated pass-through: constructing with the knobs warns once and
+    builds the equivalent spec; READING ``.shard_state`` etc. stays silent
+    (the executor does it on every build)."""
 
-    def __post_init__(self):
-        if self.pipeline_stages < 1 or self.micro_batches < 1:
-            raise ValueError(f"pipeline_stages/micro_batches must be >= 1, "
-                             f"got {self.pipeline_stages}/"
-                             f"{self.micro_batches}")
-        if self.pipeline_stages > 1 and self.shard_state:
-            raise ValueError(
-                "pipeline_stages composes with replicated DP only: the "
-                "sharded forward-edge all-gather and the pipeline's "
-                "boundary sends are competing answers to the same memory "
-                "axis — pick one (DESIGN.md §9)")
+    def __init__(self, scheduler: RoundScheduler, grad_reducer: Any = None,
+                 param_reducer: Any = None, param_algo: str = "psum",
+                 parallelism=None,
+                 shard_state: Optional[bool] = None,
+                 pipeline_stages: Optional[int] = None,
+                 micro_batches: Optional[int] = None):
+        self.scheduler = scheduler
+        self.grad_reducer = grad_reducer
+        self.param_reducer = param_reducer
+        self.param_algo = param_algo
+        legacy = {k: v for k, v in (("shard_state", shard_state),
+                                    ("pipeline_stages", pipeline_stages),
+                                    ("micro_batches", micro_batches))
+                  if v is not None}
+        if legacy:
+            if parallelism is not None:
+                raise ValueError(
+                    f"pass either parallelism= or the deprecated "
+                    f"{sorted(legacy)} knobs, not both")
+            warnings.warn(
+                _LEGACY_KNOB_MSG.format(names=", ".join(sorted(legacy))),
+                DeprecationWarning, stacklevel=2)
+            pp = 1 if pipeline_stages is None else int(pipeline_stages)
+            mb = 1 if micro_batches is None else int(micro_batches)
+            if pp < 1 or mb < 1:
+                raise ValueError(f"pipeline_stages/micro_batches must be "
+                                 f">= 1, got {pp}/{mb}")
+            parallelism = ParallelismSpec.legacy(
+                shard_state=bool(shard_state), pipeline_stages=pp,
+                micro_batches=mb)
+        self.parallelism = ParallelismSpec.coerce(parallelism)
+
+    # -- deprecated per-knob views (silent reads; the executor uses them) --
+
+    @property
+    def shard_state(self) -> bool:
+        return self.parallelism.shard_state
+
+    @property
+    def pipeline_stages(self) -> int:
+        return int(self.parallelism.pp)
+
+    @property
+    def micro_batches(self) -> int:
+        return max(int(self.parallelism.micro_batches), 1)
 
     def describe(self) -> str:
+        p = self.parallelism
         if self.pipeline_stages > 1:
             mode = (f" [pipeline S={self.pipeline_stages} "
                     f"M={self.micro_batches}]")
@@ -287,6 +323,12 @@ class SyncStrategy:
             mode = f" [micro-batches M={self.micro_batches}]"
         else:
             mode = ""
+        if p.tp > 1:
+            mode += f" [tp={p.tp}" + (f"@{p.tp_tier}" if p.tp_tier else "") \
+                + "]"
+        if p.ep > 1:
+            mode += f" [ep={p.ep}" + (f"@{p.ep_tier}" if p.ep_tier else "") \
+                + "]"
         parts = [self.scheduler.describe()
                  + (" [shard_state 1/p]" if self.shard_state else "")
                  + mode]
@@ -319,14 +361,17 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
                   plan: Optional[CommPlan] = None,
                   param_plan: Optional[CommPlan] = None,
                   param_algo: str = "psum",
-                  shard_state: bool = False,
-                  pipeline_stages: int = 1,
-                  micro_batches: int = 1,
+                  parallelism=None,
+                  shard_state: Optional[bool] = None,
+                  pipeline_stages: Optional[int] = None,
+                  micro_batches: Optional[int] = None,
                   **scheduler_kwargs) -> SyncStrategy:
     """Convenience constructor: resolve the scheduler by registry name and
     build reducers from either a global ``SyncConfig`` or a planned
     ``CommPlan``.  For schedulers with parameter rounds the sync config /
-    ``param_plan`` feeds the param-round reducer instead."""
+    ``param_plan`` feeds the param-round reducer instead.  ``parallelism``
+    takes a :class:`~repro.core.parallelism.ParallelismSpec` or spec string;
+    the per-knob trio is the deprecated pass-through."""
     if isinstance(scheduler, str):
         scheduler = get_scheduler(scheduler, **scheduler_kwargs)
     if sync is not None and plan is not None:
@@ -346,6 +391,7 @@ def make_strategy(scheduler: str | RoundScheduler = "every_step", *,
             param_reducer, grad_reducer = grad_reducer, None
     return SyncStrategy(scheduler=scheduler, grad_reducer=grad_reducer,
                         param_reducer=param_reducer, param_algo=param_algo,
+                        parallelism=parallelism,
                         shard_state=shard_state,
                         pipeline_stages=pipeline_stages,
                         micro_batches=micro_batches)

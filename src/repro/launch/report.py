@@ -185,6 +185,18 @@ def render_strategy_plan(sp, arms=None, baselines=None,
              f"chosen arm: **{sp.key}{shard}** — "
              f"modeled {sp.modeled_step_s * 1e3:.3f} ms/step "
              f"({detail}backward {sp.t_backward_s * 1e3:.3f} ms)"]
+    if sp.tp > 1 or sp.ep > 1:
+        ax, n, tier = (("tp", sp.tp, sp.tp_tier) if sp.tp > 1
+                       else ("ep", sp.ep, sp.ep_tier))
+        wire = ("4 activation allreduces/layer, Megatron wire"
+                if ax == "tp" else "4 all-to-alls/MoE layer "
+                "(dispatch+combine, fwd+bwd)")
+        placed = f" placed on tier {tier!r}" if tier else ""
+        lines.append(
+            f"parallelism: {sp.parallelism.spec()} — {ax}={n}{placed}, "
+            f"model-axis comm {sp.model_comm_s * 1e3:.3f} ms/step "
+            f"({wire}); the comm plan below is the DP edge over "
+            f"world/{ax} replicas")
     if sp.pipeline_stages > 1:
         placed = (f" (pipe axis placed on tier {sp.pipe_tier!r}, DP edge "
                   f"on the remaining tiers)" if sp.pipe_tier else "")
@@ -280,6 +292,13 @@ def save_strategy_plan(sp, arch: str, calibration=None, drift=None) -> str:
                            "p2p_cost_s": sp.pipe_p2p_s}
         if sp.pipe_tier:
             rec["pipeline"]["pipe_tier"] = sp.pipe_tier
+    par = sp.parallelism
+    if not par.is_trivial:
+        # additive block (DESIGN.md §14): pure-dp records keep their exact
+        # pre-existing key set — the PR 8 schema-compat rule
+        rec["parallelism"] = par.to_record()
+        if sp.model_comm_s:
+            rec["parallelism"]["model_comm_s"] = sp.model_comm_s
     if sp.opt_mem_bytes == sp.opt_mem_bytes:   # not NaN
         rec["opt_mem_bytes_per_worker"] = sp.opt_mem_bytes
     if calibration is not None:
@@ -350,6 +369,20 @@ def render_sharded_memory(layout, opt_name: str, moments=None) -> str:
             f"(master+moments over world={layout.world}) vs "
             f"{rep / 2**20:.2f} MiB replicated — {verdict}; params "
             f"{layout.param_bytes() / 2**20:.2f} MiB f32")
+
+
+def render_moe_drops(dropped: float, routed: float,
+                     capacity_factor: float) -> str:
+    """One-line MoE capacity report for a training run: how many routed
+    token-choices overflowed an expert's capacity buffer and were dropped
+    (the silent signal loss the drop tap surfaces, DESIGN.md §14)."""
+    if routed <= 0:
+        return "moe capacity: no tokens routed"
+    frac = dropped / routed
+    verdict = ("no overflow" if dropped == 0 else
+               f"raise capacity_factor ({capacity_factor:g}) to shed drops")
+    return (f"moe capacity: dropped {dropped:.0f}/{routed:.0f} routed "
+            f"token-choices ({frac:.1%}) — {verdict}")
 
 
 def render_pipeline_stages(staged, params_split, micro_batches: int,

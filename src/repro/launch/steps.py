@@ -153,7 +153,7 @@ def _make_synced_train_step(model: Model, optimizer, synchronizer, mesh,
         if per_worker_params:
             params = jax.tree.map(lambda s: s[0], params)
             opt_state = jax.tree.map(lambda s: s[0], opt_state)
-        with manual_region():
+        with manual_region(data_axes):
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
         grads, sync_state = synchronizer(grads, sync_state, rng)
         updates, opt_state = optimizer.update(grads, opt_state, params, step)
@@ -229,7 +229,7 @@ def make_sharded_train_step(model: Model, executor, layout, sharded_opt,
         from repro.models.sharding_ctx import manual_region
         sync_state = jax.tree.map(lambda s: s[0], sync_state)
         opt = jax.tree.map(lambda s: s[0], opt_rows)
-        with manual_region():
+        with manual_region(data_axes):
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
         gshards, sync_state = executor.sync_shards(grads, sync_state, rng)
         updates, inner = sharded_opt.update(gshards, opt["opt"],
@@ -384,7 +384,7 @@ def make_pipeline_train_step(staged, optimizer, engine, mesh,
 
     def body(params, opt_state, sync_state, batch, step, rng):
         from repro.models.sharding_ctx import manual_region
-        with manual_region():
+        with manual_region((pipe_axis,) + axes):
             return _body(params, opt_state, sync_state, batch, step, rng)
 
     def _body(params, opt_state, sync_state, batch, step, rng):
@@ -582,7 +582,7 @@ def make_local_train_step(model: Model, optimizer, mesh,
         from repro.models.sharding_ctx import manual_region
         params = jax.tree.map(lambda s: s[0], params)
         opt_state = jax.tree.map(lambda s: s[0], opt_state)
-        with manual_region():
+        with manual_region(data_axes):
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
         updates, opt_state = optimizer.update(grads, opt_state, params, step)
         params = apply_updates(params, updates)
@@ -683,7 +683,7 @@ def make_lag_programs(model: Model, optimizer, synchronizer, mesh,
 
     def probe_body(params, batch, g_last):
         from repro.models.sharding_ctx import manual_region
-        with manual_region():
+        with manual_region(data_axes):
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
 
         def sq(t):

@@ -28,10 +28,12 @@ production mesh).  Example (the e2e driver, deliverable b):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 from repro.api import SessionConfig, TrainSession
 from repro.configs import ALL_ARCHS
-from repro.core import SyncConfig, SyncStrategy, get_scheduler, make_strategy
+from repro.core import (ParallelismSpec, SyncConfig, SyncStrategy,
+                        get_scheduler, make_strategy)
 from repro.core.schedule import LINK_PRESETS
 from repro.launch.report import render_strategy_plan, save_strategy_plan
 
@@ -61,8 +63,8 @@ def parse_args(argv=None):
                          "tier first, @link names a --link preset) or a "
                          "TOPOLOGY_PRESETS name.  The planner prices every "
                          "collective phase on the tier it traverses and "
-                         "searches pipe-axis placements; its world (the "
-                         "tier-size product) supersedes --plan-world.  "
+                         "searches pipe/tp/ep-axis placements; its world "
+                         "is the tier-size product.  "
                          "When it matches this host's device count the "
                          "mesh is rebuilt one-axis-per-tier so collectives "
                          "dispatch axis→tier")
@@ -76,12 +78,6 @@ def parse_args(argv=None):
     ap.add_argument("--beta-gbps", type=float, default=None,
                     help="override link bandwidth in GB/s (--sync auto; "
                          "flat shim, ignored under --topology)")
-    ap.add_argument("--plan-world", type=int, default=0,
-                    help="DEPRECATED: plan for this world size instead of "
-                         "the mesh's (model a pod from a laptop).  Prefer "
-                         "--topology, whose tier-size product defines the "
-                         "world; on disagreement the topology wins (with a "
-                         "warning)")
     ap.add_argument("--plan-backward-ms", type=float, default=0.0,
                     help="plan for this per-step backward time instead of "
                          "measuring (model a TPU's backward from a laptop; "
@@ -92,8 +88,20 @@ def parse_args(argv=None):
                          "--write-compression-costs); replaces the analytic "
                          "compression-compute term in --sync auto's model "
                          "(DESIGN.md §11)")
+    ap.add_argument("--parallelism", default="", metavar="SPEC",
+                    help="the whole parallelism axis in one spec "
+                         "(DESIGN.md §14): "
+                         "'dp=4,tp=2@device,pp=2@node,micro=8,shard' — "
+                         "dp/tp/pp/ep group sizes with optional @tier "
+                         "placements (tier names from --topology), plus "
+                         "the micro=M and shard tokens.  Subsumes the "
+                         "deprecated --shard-state/--pipeline-stages/"
+                         "--micro-batches trio; under --sync auto the "
+                         "planner prices every arm but only spec-matching "
+                         "arms may win (impossible specs fail loudly)")
     ap.add_argument("--shard-state", action="store_true",
-                    help="sharded data parallelism (ZeRO-style): gradients "
+                    help="DEPRECATED shim for --parallelism '...,shard'. "
+                         "Sharded data parallelism (ZeRO-style): gradients "
                          "reduce-scatter per bucket, optimizer moments + "
                          "f32 master params partitioned 1/p over the data "
                          "axes, params all-gathered on the forward edge")
@@ -102,14 +110,16 @@ def parse_args(argv=None):
                          ": arms that do not fit are dropped, which is how "
                          "the shard axis wins (it never wins on wall clock)")
     ap.add_argument("--pipeline-stages", type=int, default=1, metavar="S",
-                    help="pipeline parallelism (DESIGN.md §9): cut the "
+                    help="DEPRECATED shim for --parallelism 'pp=S'. "
+                         "Pipeline parallelism (DESIGN.md §9): cut the "
                          "model into S stages on a pipe x data mesh and "
                          "run 1F1B micro-batching; the gradient sync "
                          "(--compressor/--algo, or the planner's pick "
                          "under --sync auto) runs on the DP dimension "
                          "only, per layer row")
     ap.add_argument("--micro-batches", type=int, default=0, metavar="M",
-                    help="micro-batches per step (default: 8 in pipeline "
+                    help="DEPRECATED shim for --parallelism 'micro=M'. "
+                         "Micro-batches per step (default: 8 in pipeline "
                          "mode, 1 otherwise; bubble fraction "
                          "(S-1)/(S-1+M); the global batch must split into "
                          "DP shards x M).  M>1 with --pipeline-stages 1 "
@@ -162,6 +172,49 @@ def scheduler_from_args(args):
     return None
 
 
+def resolve_cli_parallelism(args):
+    """Fold the CLI's parallelism surface — the unified ``--parallelism``
+    spec and the deprecated ``--shard-state``/``--pipeline-stages``/
+    ``--micro-batches`` shims — into ``(par_spec, shard, pipe, micro)``.
+    Mixing the spec with a shim is a loud SystemExit; a shim alone warns
+    and builds the equivalent spec via :meth:`ParallelismSpec.legacy`."""
+    legacy_used = [f for f, on in
+                   (("--shard-state", args.shard_state),
+                    ("--pipeline-stages", args.pipeline_stages != 1),
+                    ("--micro-batches", args.micro_batches != 0)) if on]
+    if args.parallelism:
+        if legacy_used:
+            raise SystemExit(
+                f"--parallelism subsumes {', '.join(legacy_used)}; fold "
+                f"them into the spec (e.g. 'dp=4,pp=2,micro=8,shard')")
+        try:
+            par_spec = ParallelismSpec.from_spec(args.parallelism)
+        except ValueError as e:
+            raise SystemExit(f"--parallelism: {e}")
+        if par_spec.pp > 1 and not par_spec.micro_batches:
+            # the executor's pipeline default (bubble (S-1)/(S-1+M))
+            par_spec = dataclasses.replace(par_spec, micro_batches=8)
+        return (par_spec, par_spec.shard_state, par_spec.pp,
+                par_spec.micro_batches or 1)
+    if legacy_used:
+        print(f"warning: {', '.join(legacy_used)} deprecated; use "
+              f"--parallelism (e.g. 'dp=4,pp=2,micro=8,shard')",
+              flush=True)
+    shard = args.shard_state
+    pipe = args.pipeline_stages
+    if pipe < 1:
+        raise SystemExit(f"--pipeline-stages must be >= 1, got {pipe}")
+    micro = args.micro_batches or (8 if pipe > 1 else 1)
+    if pipe > 1 and shard:
+        raise SystemExit("--pipeline-stages and --shard-state are "
+                         "competing answers to the optimizer-memory "
+                         "axis; pick one (DESIGN.md §9)")
+    par_spec = ParallelismSpec.legacy(shard_state=shard,
+                                      pipeline_stages=pipe,
+                                      micro_batches=micro)
+    return par_spec, shard, pipe, micro
+
+
 def main(argv=None):
     args = parse_args(argv)
     scfg = SessionConfig(
@@ -169,23 +222,16 @@ def main(argv=None):
         batch=args.batch, seq=args.seq, lr=args.lr, warmup=args.warmup,
         optimizer=args.optimizer, data_parallel=args.data_parallel)
     scheduler = scheduler_from_args(args)
-    if args.shard_state and scheduler is not None:
-        raise SystemExit("--shard-state partitions optimizer state, which "
+    par_spec, shard, pipe, micro = resolve_cli_parallelism(args)
+    if shard and scheduler is not None:
+        raise SystemExit("shard_state partitions optimizer state, which "
                          "requires every-step gradient sync; drop "
                          "--local-sgd/--lag/--push-pull")
-    pipe = args.pipeline_stages
-    if pipe < 1:
-        raise SystemExit(f"--pipeline-stages must be >= 1, got {pipe}")
-    micro = args.micro_batches or (8 if pipe > 1 else 1)
     pipe_mode = pipe > 1 or micro > 1
     if pipe_mode and scheduler is not None:
-        raise SystemExit("--pipeline-stages/--micro-batches require "
+        raise SystemExit("pipeline stages / micro-batches require "
                          "every-step gradient sync; drop "
                          "--local-sgd/--lag/--push-pull")
-    if pipe_mode and args.shard_state:
-        raise SystemExit("--pipeline-stages and --shard-state are "
-                         "competing answers to the optimizer-memory axis; "
-                         "pick one (DESIGN.md §9)")
     session = TrainSession(scfg)
     if args.topology:
         superseded = [f for f, on in (("--link", args.link != "fast_ici"),
@@ -222,17 +268,26 @@ def main(argv=None):
         if args.calibrate:
             cal = session.calibrate()
             print(cal.describe(), flush=True)
-        sp = session.plan_auto(
+        if args.parallelism and scheduler is not None:
+            raise SystemExit("--parallelism pins arms of --sync auto's "
+                             "free search; a pinned rounds scheduler "
+                             "bypasses that search — drop one")
+        plan_kw = dict(
             link=args.link, alpha=args.alpha, beta_gbps=args.beta_gbps,
-            plan_world=args.plan_world, scheduler=scheduler,
             t_backward_s=(args.plan_backward_ms / 1e3
                           if args.plan_backward_ms > 0 else None),
-            shard_state=(True if args.shard_state else None),
             memory_budget_gb=args.memory_budget_gb,
-            pipeline_stages=(pipe if pipe > 1 else None),
-            micro_batches=(micro if pipe > 1 else None),
             compression_costs=args.compression_costs or None,
             calibration=cal)
+        if args.parallelism:
+            sp = session.plan_auto(parallelism=par_spec, **plan_kw)
+        else:
+            sp = session.plan_auto(
+                scheduler=scheduler,
+                shard_state=(True if shard else None),
+                pipeline_stages=(pipe if pipe > 1 else None),
+                micro_batches=(micro if pipe > 1 else None),
+                **plan_kw)
         if pipe <= 1 and micro > 1:
             # S=1 accumulation rides the winning arm when it composes
             session.apply_micro_batching(micro)
@@ -244,8 +299,9 @@ def main(argv=None):
         print(f"plan record: {plan_path}", flush=True)
         best_fixed = min(p.modeled_step_s
                          for p in session.planned["baselines"].values())
-        unconstrained = (scheduler is None and not args.shard_state
-                         and args.memory_budget_gb is None and pipe <= 1)
+        unconstrained = (scheduler is None and not shard
+                         and args.memory_budget_gb is None and pipe <= 1
+                         and par_spec.is_trivial)
         if unconstrained and sp.modeled_step_s > best_fixed + 1e-12:
             # a memory budget / pinned shard axis may legitimately force an
             # arm that is modeled slower than the replicated baselines —
@@ -261,19 +317,12 @@ def main(argv=None):
             bucket_bytes=int(args.bucket_mb * 2**20))
         session.strategy = make_strategy(
             scheduler if scheduler is not None else "every_step",
-            axes=session.axes, sync=sync_cfg,
-            shard_state=args.shard_state,
-            pipeline_stages=pipe, micro_batches=micro)
-    elif pipe_mode:
-        # vanilla + --pipeline-stages/--micro-batches: dense psum wires on
-        # the DP edge
+            axes=session.axes, sync=sync_cfg, parallelism=par_spec)
+    elif pipe_mode or shard or not par_spec.is_trivial:
+        # vanilla + a parallelism spec: dense psum wires on the DP edge,
+        # pipeline/micro-batching/partitioned state per the spec
         session.strategy = make_strategy(
-            "every_step", axes=session.axes,
-            pipeline_stages=pipe, micro_batches=micro)
-    elif args.shard_state:
-        # vanilla + --shard-state: dense psum wires, partitioned state
-        session.strategy = make_strategy("every_step", axes=session.axes,
-                                         shard_state=True)
+            "every_step", axes=session.axes, parallelism=par_spec)
     elif scheduler is not None:
         # vanilla + an explicit rounds schedule: dense reducers
         session.strategy = SyncStrategy(scheduler=scheduler)
@@ -286,7 +335,7 @@ def main(argv=None):
         print(session.calibrate().describe(), flush=True)
     if args.replan_drift_pct > 0:
         if args.sync != "auto" or scheduler is not None or pipe_mode \
-                or args.shard_state:
+                or shard:
             raise SystemExit("--replan-drift-pct re-runs the free planner "
                              "search; it requires --sync auto without a "
                              "pinned scheduler/pipeline/shard axis")
@@ -310,6 +359,11 @@ def main(argv=None):
         from repro.launch.report import render_sharded_memory
         print(render_sharded_memory(session.layout, args.optimizer,
                                     moments=session.opt_moments),
+              flush=True)
+    if session.routed_tokens:
+        from repro.launch.report import render_moe_drops
+        print(render_moe_drops(session.dropped_tokens, session.routed_tokens,
+                               session.model_cfg.capacity_factor),
               flush=True)
     if getattr(session, "staged", None) is not None:
         from repro.launch.report import render_pipeline_stages

@@ -9,6 +9,7 @@ allocating anything.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -160,6 +161,100 @@ def mlp(params, x, activation: str = "swiglu"):
     gate = act(x @ params["wi_gate"])
     up = x @ params["wi_up"]
     return (gate * up) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel MLP: the Megatron f/g operator pair (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# Column-parallel wi then row-parallel wo: each tp rank holds a 1/tp slice
+# of the ffn dim and computes its partial output; one allreduce per MLP in
+# forward (tp_out) and one in backward (tp_in's transpose) — the classic
+# 4-collectives-per-layer wire cost.all_to_all_cost_s's sibling
+# ``allreduce_cost_s`` prices in ``tensor_parallel_arm``.
+#
+# The f/g pair is explicit custom_vjp rather than relying on XLA sharding
+# propagation so the wire is OURS: the forward reduction goes through
+# ``collectives.api.allreduce`` (any registered algo), and the backward
+# activation-grad reduction makes every NON-tp-sharded parameter's gradient
+# bit-identical across tp ranks — which is what lets the executor reduce
+# all grads over the data axis only, with no tp-specific grad plumbing.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_in(x, axis: str):
+    """Megatron's ``f``: identity forward, psum over the tp ``axis`` in
+    backward.  Wrap the activations ENTERING a column-parallel block; the
+    backward psum sums the partial input-grads each rank's weight shard
+    produced.  psum of the tp group's 2 (or p) partials is a plain
+    commutative float add — the bit-exactness checks lean on p=2."""
+    return x
+
+
+def _tp_in_fwd(x, axis):
+    return x, None
+
+
+def _tp_in_bwd(axis, _, g):
+    return (jax.lax.psum(g, axis),)
+
+
+tp_in.defvjp(_tp_in_fwd, _tp_in_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_out(x, axis: str, algo: str = "psum"):
+    """Megatron's ``g``: allreduce the row-parallel partial output over the
+    tp ``axis`` in forward (via ``collectives.api.allreduce`` — any algo),
+    identity in backward (the output-grad is already full on every rank)."""
+    from repro.core.collectives.api import allreduce
+    return allreduce(x, algo, (axis,))
+
+
+def _tp_out_fwd(x, axis, algo):
+    return tp_out(x, axis, algo), None
+
+
+def _tp_out_bwd(axis, algo, _, g):
+    return (g,)
+
+
+tp_out.defvjp(_tp_out_fwd, _tp_out_bwd)
+
+
+def mlp_tp(params, x, activation: str = "swiglu", *, axis: str,
+           algo: str = "psum"):
+    """Tensor-parallel SwiGLU MLP: ``params`` hold this rank's 1/tp slice
+    of the ffn dim (wi_gate/wi_up column-sharded, wo row-sharded).  Runs
+    inside shard_map with ``axis`` manual; bit-identical at tp=2 to
+    :func:`mlp_blocked` with 2 blocks (float add is commutative)."""
+    act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+    xin = tp_in(x, axis)
+    gate = act(xin @ params["wi_gate"])
+    up = xin @ params["wi_up"]
+    return tp_out((gate * up) @ params["wo"], axis, algo)
+
+
+def mlp_blocked(params, x, activation: str = "swiglu", blocks: int = 2):
+    """Reference for the TP conformance checks: the SAME contraction as
+    :func:`mlp` but computed in ``blocks`` ffn-slices summed pairwise —
+    the arithmetic a tp group performs, on one device.  Each block reads
+    ``x`` through an optimization barrier: a tp rank's input-cotangent is
+    its two local matmul contributions summed BEFORE the psum across
+    ranks, and the barrier forces the same per-block-first association
+    here (an unconstrained 4-use fan-out folds in reverse equation order,
+    which differs from the tp wire by an ulp)."""
+    act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+    gates = jnp.split(params["wi_gate"], blocks, axis=1)
+    ups = jnp.split(params["wi_up"], blocks, axis=1)
+    wos = jnp.split(params["wo"], blocks, axis=0)
+    parts = []
+    for wg, wu, wo in zip(gates, ups, wos):
+        xb = jax.lax.optimization_barrier(x)
+        parts.append((act(xb @ wg) * (xb @ wu)) @ wo)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
 
 
 # ---------------------------------------------------------------------------

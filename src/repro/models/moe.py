@@ -10,7 +10,7 @@ collectives — the expert-parallel pattern the survey's §4 discusses.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +18,44 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import ParamDesc, mlp, mlp_desc
 from repro.models.sharding_ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Dropped-token tap (ISSUE 9: capacity overflow must not vanish silently)
+# ---------------------------------------------------------------------------
+#
+# Capacity dispatch DROPS tokens that overflow an expert's buffer; with
+# capacity_factor near 1 under a skewed router that is real signal loss the
+# step log used to hide.  The tap is a host-side accumulator fed by
+# ``jax.debug.callback`` — the only side channel that crosses jit/grad/scan
+# without changing every loss signature between here and the train loop.
+# Toggling changes the traced program, so enable it BEFORE the first step
+# compiles (TrainSession does this for MoE archs); counts drain per step via
+# ``drain_drop_tap``.
+
+_DROP_TAP = {"enabled": False, "dropped": 0.0, "routed": 0.0}
+
+
+def enable_drop_tap(enable: bool = True) -> bool:
+    """Turn the tap on/off (returns the previous state).  Must happen
+    before tracing: the callback is baked into the jitted program."""
+    old = _DROP_TAP["enabled"]
+    _DROP_TAP["enabled"] = bool(enable)
+    return old
+
+
+def drain_drop_tap() -> Tuple[float, float]:
+    """Return ``(dropped, routed)`` token-choice counts accumulated since
+    the last drain, and reset.  Callers must block on the step's outputs
+    first (e.g. ``float(loss)``) so the callbacks have fired."""
+    d, r = _DROP_TAP["dropped"], _DROP_TAP["routed"]
+    _DROP_TAP["dropped"] = _DROP_TAP["routed"] = 0.0
+    return d, r
+
+
+def _drop_tap_cb(dropped, routed: float):
+    _DROP_TAP["dropped"] += float(dropped)
+    _DROP_TAP["routed"] += float(routed)
 
 
 def moe_desc(cfg: ModelConfig) -> Dict[str, ParamDesc]:
@@ -49,7 +87,11 @@ def _route(cfg: ModelConfig, logits: jnp.ndarray):
     return weights, experts, aux
 
 
-def moe_ffn(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_ffn(params, cfg: ModelConfig, x, *,
+            groups: Optional[int] = None,
+            ep_axis: Optional[str] = None,
+            a2a_variant: str = "direct"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, T, d) -> (out, aux_loss).
 
     Tokens are grouped per data shard (per-group capacity — real
@@ -57,17 +99,44 @@ def moe_ffn(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     ``vmap`` over the group dim, which makes G a scatter BATCH dimension the
     SPMD partitioner can shard over the data axes; the expert einsums keep
     explicit (G, E, cap, ·) shapes with G over 'b' and E over 'model' — the
-    expert-parallel all-to-all pattern of survey §4."""
+    expert-parallel all-to-all pattern of survey §4.
+
+    ``groups`` overrides the context-derived group count (the conformance
+    checks use it to mirror an ep group's source batching on one device).
+
+    ``ep_axis`` names a manual shard_map axis carrying TRUE expert
+    parallelism (DESIGN.md §14): ``params`` hold only this rank's
+    ``E/ep`` expert block (router replicated, routing still over global
+    E), the capacity buffer is exchanged over the wire with
+    ``collectives.api.all_to_all`` (dispatch), the local experts run, and
+    the reverse all-to-all (combine — also the edge autodiff inserts for
+    the backward pass) returns every token's output to its owner.  Chunks
+    move verbatim, so the EP step is bit-identical to the same math on
+    one device with source-batched groups."""
     from repro.models.sharding_ctx import num_batch_shards
     B, T, d = x.shape
     N = B * T
     E, k = cfg.num_experts, cfg.top_k
     cdt = x.dtype
-    G = num_batch_shards()
+    G = groups if groups is not None else num_batch_shards()
     if N % G:
         G = 1
     ng = N // G
     cap = int(max(1, ng * k / E * cfg.capacity_factor))
+    ep = 1
+    if ep_axis is not None:
+        ep = jax.lax.axis_size(ep_axis)
+        if G != 1:
+            raise ValueError(f"ep_axis={ep_axis!r} wants one token group "
+                             f"per rank, got G={G} (the rank IS the group)")
+        if E % ep:
+            raise ValueError(f"num_experts={E} not divisible by "
+                             f"ep={ep} ({ep_axis!r})")
+        if params["wi_gate"].shape[0] != E // ep:
+            raise ValueError(
+                f"expert-parallel moe_ffn wants the LOCAL expert block "
+                f"({E // ep} of {E}), got params with "
+                f"{params['wi_gate'].shape[0]} experts")
 
     xf = constrain(x.reshape(N, d), ("b", None))
     weights, experts, aux = _route(cfg, xf @ params["router"])
@@ -79,6 +148,14 @@ def moe_ffn(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     flat_slot = slot.sum(-1)
     keep = flat_slot < cap
     dest = jnp.where(keep, eg * cap + flat_slot, E * cap)         # (G, ng*k)
+    if _DROP_TAP["enabled"]:
+        # host callbacks abort XLA inside a PARTIAL-manual shard_map body
+        # (manual data axes + a live auto model axis); skip the tap there
+        # rather than crash — counts then read 0 and the summary stays
+        # silent for that (programmatic, model>1) configuration
+        from repro.models.sharding_ctx import host_callback_safe
+        if host_callback_safe():
+            jax.debug.callback(_drop_tap_cb, (~keep).sum(), float(keep.size))
 
     tok_idx = jnp.repeat(jnp.arange(ng), k)
     xg = constrain(xf.reshape(G, ng, d), ("b", None, None))
@@ -90,12 +167,33 @@ def moe_ffn(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     buf = jax.vmap(scatter_one)(src, dest)                        # (G, E*cap, d)
     buf = constrain(buf.reshape(G, E, cap, d), ("b", "m", None, None))
 
-    h_gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["wi_gate"]))
-    h_up = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"])
-    h_mid = constrain((h_gate * h_up).astype(cdt), ("b", "m", None, None))
-    out_buf = constrain(jnp.einsum("gecf,efd->gecd", h_mid, params["wo"]),
-                        ("b", "m", None, None))
-    out_flat = constrain(out_buf.reshape(G, E * cap, d), ("b", None, None))
+    if ep_axis is not None:
+        from repro.core.collectives.api import all_to_all
+        El = E // ep
+        # dispatch: chunk s of the capacity buffer is the payload for ep
+        # rank s (its expert block, GLOBAL expert order = rank-major)
+        b = all_to_all(buf.reshape(ep, El * cap, d), ep_axis, a2a_variant)
+        b = b.reshape(ep, El, cap, d)         # row s: source rank s's tokens
+        h_gate = jax.nn.silu(jnp.einsum("secd,edf->secf", b,
+                                        params["wi_gate"]))
+        h_up = jnp.einsum("secd,edf->secf", b, params["wi_up"])
+        h_mid = (h_gate * h_up).astype(cdt)
+        out_b = jnp.einsum("secf,efd->secd", h_mid, params["wo"])
+        # combine: the reverse all-to-all returns each token's outputs to
+        # its owner, re-assembling the (E, cap, d) buffer in global order
+        out_flat = all_to_all(out_b.reshape(ep, El * cap, d), ep_axis,
+                              a2a_variant).reshape(G, E * cap, d)
+    else:
+        h_gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                                        params["wi_gate"]))
+        h_up = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"])
+        h_mid = constrain((h_gate * h_up).astype(cdt),
+                          ("b", "m", None, None))
+        out_buf = constrain(jnp.einsum("gecf,efd->gecd", h_mid,
+                                       params["wo"]),
+                            ("b", "m", None, None))
+        out_flat = constrain(out_buf.reshape(G, E * cap, d),
+                             ("b", None, None))
 
     def gather_one(flat, idx, kp):
         g = jnp.take(flat, jnp.minimum(idx, E * cap - 1), axis=0)

@@ -22,21 +22,61 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-_CTX = {"mesh": None, "batch_axes": None, "model_axis": None, "manual": False}
+_CTX = {"mesh": None, "batch_axes": None, "model_axis": None, "manual": False,
+        "manual_axes": (), "tp_axis": None}
 
 
 @contextlib.contextmanager
-def manual_region():
-    """Inside a shard_map whose manual axes include the data axes, sharding
-    constraints must not name them (and WSC on auto axes under shard_map is
-    buggy in this JAX) — so all constraints become no-ops while tracing the
-    manual body."""
-    old = _CTX["manual"]
-    _CTX["manual"] = True
+def tp_region(axis: Optional[str]):
+    """Declare a MANUAL tensor-parallel shard_map axis for the duration of
+    tracing: transformer dense-FFN blocks switch from ``layers.mlp`` to the
+    explicit Megatron wire ``layers.mlp_tp`` over ``axis`` (DESIGN.md §14).
+    This is the manual-collectives sibling of ``model_axis`` (which lets
+    XLA's partitioner insert the TP collectives): inside a shard_map whose
+    manual axes include ``axis``, the activation reductions go through
+    ``collectives.api`` and are OURS to schedule and price."""
+    old = _CTX["tp_axis"]
+    _CTX["tp_axis"] = axis
     try:
         yield
     finally:
-        _CTX["manual"] = old
+        _CTX["tp_axis"] = old
+
+
+def tp_axis() -> Optional[str]:
+    """The active manual tp axis name, or None."""
+    return _CTX["tp_axis"]
+
+
+@contextlib.contextmanager
+def manual_region(axes: Sequence[str] = ()):
+    """Inside a shard_map whose manual axes include the data axes, sharding
+    constraints must not name them (and WSC on auto axes under shard_map is
+    buggy in this JAX) — so all constraints become no-ops while tracing the
+    manual body.  ``axes`` names the shard_map's manual axes so
+    :func:`host_callback_safe` can tell full-manual bodies (host callbacks
+    fine) from partial-manual ones (XLA aborts on them — see compat)."""
+    old = _CTX["manual"], _CTX["manual_axes"]
+    _CTX["manual"] = True
+    _CTX["manual_axes"] = tuple(axes)
+    try:
+        yield
+    finally:
+        _CTX["manual"], _CTX["manual_axes"] = old
+
+
+def host_callback_safe() -> bool:
+    """Whether a host callback (``jax.debug.callback``) may be baked into
+    the program being traced.  False exactly in a PARTIAL-manual shard_map
+    body: manual over some mesh axes while another live (size>1) axis
+    stays auto — XLA's partitioner aborts on the callback custom-call
+    there (hlo_sharding.cc ``!IsManual()``).  Full-manual bodies and
+    ordinary pjit programs are safe."""
+    mesh = _CTX["mesh"]
+    if not _CTX["manual"] or mesh is None:
+        return True
+    manual = set(_CTX["manual_axes"])
+    return all(a in manual or mesh.shape[a] == 1 for a in mesh.axis_names)
 
 
 def set_mesh_ctx(mesh, batch_axes: Sequence[str], model_axis: Optional[str] = "model"):

@@ -21,8 +21,9 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.layers import ParamDesc, mlp, mlp_desc, norm_desc, rmsnorm, stack_desc
-from repro.models.sharding_ctx import constrain
+from repro.models.layers import (ParamDesc, mlp, mlp_desc, mlp_tp, norm_desc,
+                                 rmsnorm, stack_desc)
+from repro.models.sharding_ctx import constrain, tp_axis
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +82,11 @@ def block_train(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
         h = rmsnorm(params["norm2"], x, eps=cfg.norm_eps)
         if spec.ffn == "moe":
             h, aux = moe_mod.moe_ffn(params["ffn"], cfg, h)
+        elif tp_axis():
+            # manual tensor parallelism (DESIGN.md §14): params hold this
+            # rank's ffn slice; the Megatron f/g wire reduces activations
+            # over the tp axis via collectives.api
+            h = mlp_tp(params["ffn"], h, cfg.activation, axis=tp_axis())
         else:
             h = mlp(params["ffn"], h, cfg.activation)
         x = x + _boundary(h)

@@ -724,6 +724,283 @@ def check_hlo_collective_parse():
     print("hlo parse ok")
 
 
+def check_all_to_all_bit_identity():
+    """ISSUE 9: the expert-dispatch edge.  ``all_to_all`` on an 8-rank axis
+    must match the gather-and-slice reference (all_gather the full (p, p,
+    m, ...) exchange, slice column i) BIT-EXACTLY for both wire variants —
+    chunks move verbatim, no arithmetic — be an involution (the exchange is
+    a rank<->chunk transpose), transpose under autodiff to the REVERSE
+    all-to-all (the combine edge), and the ring variant must really lower
+    to collective-permute rotations, not a fused all-to-all."""
+    from repro.core.collectives.api import A2A_VARIANTS, all_to_all
+
+    mesh = jax.make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
+    x = jax.random.normal(jax.random.PRNGKey(17), (8, 8, 5, 7))
+    w = jax.random.normal(jax.random.PRNGKey(18), (8, 8, 5, 7))
+
+    for variant in A2A_VARIANTS:
+        def body(xs, ws):
+            c = xs[0]                                   # (p, m, ...) chunks
+            out = all_to_all(c, "ep", variant)
+            # gather-and-slice reference: full[j] = rank j's chunk row;
+            # my row of the exchange is column i of the gathered matrix
+            full = jax.lax.all_gather(c, "ep")          # (p, p, m, ...)
+            ref = full[:, jax.lax.axis_index("ep")]
+            back = all_to_all(out, "ep", variant)       # involution
+            g = jax.grad(lambda t: jnp.sum(
+                ws[0] * all_to_all(t, "ep", variant)))(c)
+            return out[None], ref[None], back[None], g[None]
+
+        f = jax.shard_map(body, mesh=mesh,
+                          in_specs=(P("ep"), P("ep")),
+                          out_specs=(P("ep"),) * 4,
+                          axis_names={"ep"}, check_vma=False)
+        out, ref, back, g = jax.jit(f)(x, w)
+        assert np.array_equal(np.asarray(out), np.asarray(ref)), variant
+        # global view: out[r, j] = x[j, r] — the rank<->chunk transpose
+        assert np.array_equal(np.asarray(out),
+                              np.asarray(x).transpose(1, 0, 2, 3)), variant
+        assert np.array_equal(np.asarray(back), np.asarray(x)), variant
+        # d/dx sum(w * a2a(x)) = reverse-a2a(w) = a2a(w) (involution)
+        assert np.array_equal(np.asarray(g),
+                              np.asarray(w).transpose(1, 0, 2, 3)), variant
+        txt = jax.jit(f).lower(x, w).compile().as_text()
+        if variant == "ring":
+            assert "collective-permute" in txt, "ring a2a must ppermute"
+    print("all_to_all bit-identity ok (direct/ring vs gather-and-slice, "
+          "involution, autodiff reverse edge)")
+
+
+def _adam_sgd_step(p, g, m, v, t, lr=0.05, b1=0.9, b2=0.999, eps=1e-8):
+    """Inline elementwise adam (same arithmetic on full arrays and on
+    shards — the property the TP/EP bit-exactness checks lean on)."""
+    upd = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+    vel = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+    def leaf(pi, mi, vi):
+        mh = mi / (1 - b1 ** t)
+        vh = vi / (1 - b2 ** t)
+        return pi - lr * mh / (jnp.sqrt(vh) + eps)
+    return jax.tree.map(leaf, p, upd, vel), upd, vel
+
+
+def check_tp_dp_bit_exact():
+    """ISSUE 9's tentpole acceptance criterion, TP leg: a TP=2 x DP=4
+    train step (Megatron f/g wire — ``mlp_tp`` under shard_map with
+    wi_gate/wi_up column-sharded and wo row-sharded over the tp axis) must
+    match the unsharded DP=4 step (``mlp_blocked(blocks=2)`` — the same
+    contraction order a tp pair performs, on one device) BIT-EXACTLY:
+    params AND adam moments over 3 steps on the 8-device (data=4, tp=2)
+    mesh.  What makes this exact: tp_out's forward psum of p=2 partials is
+    one commutative float add (== the blocked reference's pairwise sum),
+    and tp_in's backward psum makes every non-tp parameter's gradient
+    bit-identical across tp ranks, so BOTH programs reduce grads over the
+    data axis only, with the same 4-way tree."""
+    from repro.models.layers import mlp_blocked, mlp_tp
+
+    d, dff, vocab = 16, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    params0 = {"emb": jax.random.normal(ks[0], (vocab, d)) * 0.1,
+               "wi_gate": jax.random.normal(ks[1], (d, dff)) * 0.3,
+               "wi_up": jax.random.normal(ks[2], (d, dff)) * 0.3,
+               "wo": jax.random.normal(ks[3], (dff, d)) * 0.3,
+               "out": jax.random.normal(ks[4], (d, vocab)) * 0.1,
+               "b": jnp.zeros((vocab,))}
+
+    def loss_with(mlp_fn, p, toks):
+        x = p["emb"][toks[:, :-1]]
+        # barrier at the swap boundary (the DESIGN.md §9 trick): keeps XLA
+        # fusion from crossing into the mlp, so the embed/softmax graph —
+        # and its backward — compiles identically whether the block inside
+        # is mlp_tp or mlp_blocked
+        xb = jax.lax.optimization_barrier(x)
+        h = x + jax.lax.optimization_barrier(mlp_fn(p, xb))
+        logits = h @ p["out"] + p["b"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, toks[:, 1:][..., None], -1))
+
+    def make_body(mlp_fn):
+        def body(p, m, v, toks, t):
+            l, g = jax.value_and_grad(
+                lambda q: loss_with(mlp_fn, q, toks))(p)
+            g = jax.tree.map(lambda gi: jax.lax.psum(gi, "data") / 4.0, g)
+            p, m, v = _adam_sgd_step(p, g, m, v, t)
+            return jax.lax.psum(l, "data") / 4.0, p, m, v
+        return body
+
+    def run(mesh, specs, body):
+        zeros = jax.tree.map(jnp.zeros_like, params0)
+        p, m, v = params0, zeros, zeros
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(specs, specs, specs, P("data"), P()),
+            out_specs=(P(), specs, specs, specs),
+            axis_names=set(mesh.axis_names), check_vma=False))
+        for s in range(3):
+            toks = _tiny_batch(s, batch=16, seq=12)["tokens"]
+            l, p, m, v = f(p, m, v, toks, jnp.asarray(s + 1, jnp.float32))
+        return float(l), p, m, v
+
+    mesh_tp = jax.make_mesh((4, 2), ("data", "tp"),
+                            axis_types=(AxisType.Auto,) * 2)
+    specs_tp = {"emb": P(), "wi_gate": P(None, "tp"), "wi_up": P(None, "tp"),
+                "wo": P("tp", None), "out": P(), "b": P()}
+    l_tp, p_tp, m_tp, v_tp = run(
+        mesh_tp, specs_tp,
+        make_body(lambda p, x: mlp_tp(p, x, axis="tp")))
+
+    mesh_dp = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+    specs_dp = {k: P() for k in params0}
+    l_dp, p_dp, m_dp, v_dp = run(
+        mesh_dp, specs_dp,
+        make_body(lambda p, x: mlp_blocked(p, x, blocks=2)))
+
+    assert abs(l_tp - l_dp) < 1e-6, (l_tp, l_dp)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path((p_tp, m_tp, v_tp)),
+            jax.tree_util.tree_leaves_with_path((p_dp, m_dp, v_dp))):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.array_equal(a, b), \
+            (jax.tree_util.keystr(path), np.abs(a - b).max())
+    print("TP=2 x DP=4 bit-exact vs unsharded DP=4 ok "
+          "(params + adam moments, 3 steps)")
+
+
+def check_ep_dp_bit_exact():
+    """ISSUE 9's tentpole acceptance criterion, EP leg: an EP=2 x DP=4
+    MoE train step (``moe_ffn(ep_axis='ep')`` — experts sharded E/ep per
+    rank, capacity buffer exchanged with ``all_to_all`` dispatch/combine)
+    must match the unsharded DP=4 step (``moe_ffn(groups=2)`` — the same
+    per-group capacity math with both of an ep pair's token groups
+    source-batched on one device) BIT-EXACTLY: expert params AND adam
+    moments over 3 steps, both wire variants.  Chunks move verbatim and
+    the expert einsums treat e/s as batch dims, so the only float sums are
+    the SAME contractions in both programs; expert grads reduce over the
+    data axis only (ep contributions arrive through the combine edge's
+    autodiff, already summed inside the einsum).  The router stays frozen:
+    routing is pure-DP compute (each rank routes its own tokens, no ep
+    wire), and training it would hang grad equality on an 8-way-vs-4-way
+    psum tree rather than on the EP wire this check pins.  Loss scalars
+    differ in the last bits for exactly that reason — compared loosely."""
+    from repro.configs.base import ModelConfig
+    from repro.models import moe
+
+    cfg = ModelConfig(name="t", family="qwen3", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      num_experts=4, top_k=2, moe_d_ff=24,
+                      capacity_factor=1.5)
+    d, E = 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    router = jax.random.normal(ks[0], (d, E)) * 0.1
+    ew0 = {"wi_gate": jax.random.normal(ks[1], (E, d, 24)) * 0.3,
+           "wi_up": jax.random.normal(ks[2], (E, d, 24)) * 0.3,
+           "wo": jax.random.normal(ks[3], (E, 24, d)) * 0.3}
+
+    def batch(s):
+        return jax.random.normal(jax.random.fold_in(ks[4], s), (8, 4, d))
+
+    def make_body(moe_kwargs, loss_axes):
+        def body(ew, m, v, xs, t):
+            def loss_fn(w):
+                out, _ = moe.moe_ffn(dict(w, router=router), cfg, xs,
+                                     **moe_kwargs)
+                return jnp.sum(out ** 2)
+            l, g = jax.value_and_grad(loss_fn)(ew)
+            g = jax.tree.map(lambda gi: jax.lax.psum(gi, "data") / 4.0, g)
+            ew, m, v = _adam_sgd_step(ew, g, m, v, t)
+            return jax.lax.psum(l, loss_axes), ew, m, v
+        return body
+
+    def run(mesh, espec, xspec, body):
+        zeros = jax.tree.map(jnp.zeros_like, ew0)
+        ew, m, v = ew0, zeros, zeros
+        specs = {k: espec for k in ew0}
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(specs, specs, specs, xspec, P()),
+            out_specs=(P(), specs, specs, specs),
+            axis_names=set(mesh.axis_names), check_vma=False))
+        for s in range(3):
+            l, ew, m, v = f(ew, m, v, batch(s),
+                            jnp.asarray(s + 1, jnp.float32))
+        return float(l), ew, m, v
+
+    mesh_dp = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+    l_dp, ew_dp, m_dp, v_dp = run(
+        mesh_dp, P(), P("data"),
+        make_body({"groups": 2}, ("data",)))
+
+    mesh_ep = jax.make_mesh((4, 2), ("data", "ep"),
+                            axis_types=(AxisType.Auto,) * 2)
+    for variant in ("direct", "ring"):
+        l_ep, ew_ep, m_ep, v_ep = run(
+            mesh_ep, P("ep"), P(("data", "ep")),
+            make_body({"ep_axis": "ep", "a2a_variant": variant},
+                      ("data", "ep")))
+        assert abs(l_ep - l_dp) < 1e-4 * max(abs(l_dp), 1.0), \
+            (variant, l_ep, l_dp)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path((ew_ep, m_ep, v_ep)),
+                jax.tree_util.tree_leaves_with_path((ew_dp, m_dp, v_dp))):
+            a, b = np.asarray(a), np.asarray(b)
+            assert np.array_equal(a, b), \
+                (variant, jax.tree_util.keystr(path), np.abs(a - b).max())
+    print("EP=2 x DP=4 bit-exact vs unsharded DP=4 ok "
+          "(direct/ring a2a, expert params + adam moments, 3 steps)")
+
+
+def check_drop_tap_shard_map():
+    """The MoE drop tap (DESIGN.md §14) must survive the shard_map sync
+    paths: a host callback baked into a PARTIAL-manual body — manual data
+    axes with a size-1 auto model axis left over on the same mesh — made
+    XLA abort outright (hlo_sharding.cc ``!IsManual()``), which is
+    exactly the standard ``data(N) × model(1)`` session mesh every
+    multi-device ``--sync comm`` / ``--parallelism`` run shard_maps over.
+    compat's shard_map now promotes size-1 leftover axes into the manual
+    set (semantically a no-op), so the body is full-manual and the tap
+    FIRES.  (A >1 auto axis remaining is a genuinely-partial-manual body;
+    jax 0.4.37 cannot partition the MoE scatter there at all, tap or no
+    tap — ``moe_ffn`` additionally skips the callback in that case via
+    ``host_callback_safe`` so the tap is never the crashing element.)"""
+    from repro.configs.base import ModelConfig
+    from repro.models import moe
+    from repro.models.sharding_ctx import manual_region, mesh_ctx
+
+    cfg = ModelConfig(name="t", family="qwen3", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      num_experts=4, top_k=2, moe_d_ff=24,
+                      capacity_factor=0.5)          # forced overflow
+    d, E = 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    params = {"router": jax.random.normal(ks[0], (d, E)) * 0.1,
+              "wi_gate": jax.random.normal(ks[1], (E, d, 24)) * 0.3,
+              "wi_up": jax.random.normal(ks[2], (E, d, 24)) * 0.3,
+              "wo": jax.random.normal(ks[3], (E, 24, d)) * 0.3}
+    x = jax.random.normal(ks[4], (8, 4, d))
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+    def body(p, xs):
+        with manual_region(("data",)):
+            out, _ = moe.moe_ffn(p, cfg, xs)
+        return jax.lax.psum(jnp.sum(out ** 2), "data")
+
+    old = moe.enable_drop_tap(True)
+    try:
+        with mesh_ctx(mesh, ("data",)):
+            f = jax.jit(jax.shard_map(
+                body, mesh=mesh,
+                in_specs=({k: P() for k in params}, P("data")),
+                out_specs=P(), axis_names={"data"}, check_vma=False))
+            moe.drain_drop_tap()
+            float(f(params, x))            # blocks → callbacks have fired
+        dropped, routed = moe.drain_drop_tap()
+        assert routed > 0, (dropped, routed)
+        assert dropped > 0, (dropped, routed)      # cap 0.5 must drop
+    finally:
+        moe.enable_drop_tap(old)
+    print("moe drop tap under shard_map ok (size-1 model axis promoted "
+          "to manual; callback fires on the data(8) x model(1) mesh)")
+
+
 if __name__ == "__main__":
     check_collectives()
     check_ring_fused()
@@ -742,4 +1019,8 @@ if __name__ == "__main__":
     check_topology_dispatched_collectives()
     check_tree_nonpow2_raises_value_error()
     check_hlo_collective_parse()
+    check_all_to_all_bit_identity()
+    check_tp_dp_bit_exact()
+    check_ep_dp_bit_exact()
+    check_drop_tap_shard_map()
     print("ALL MULTI-DEVICE CHECKS PASSED")

@@ -336,9 +336,10 @@ def test_plan_auto_prefers_topology_over_plan_world(capsys):
     out = capsys.readouterr().out
     assert "disagrees with the topology" in out
     assert "deprecated" in out
-    assert sess.planned["strategy_plan"].comm.world in (32, 8)  # arm world
+    # arm worlds: 32 (dp), world/S (pipe), world/tp / world/ep (model axes)
+    assert sess.planned["strategy_plan"].comm.world in (32, 16, 8, 4)
     # every arm was priced at the topology's world, not 999
-    assert all(a.comm.world in (32, 8, 16, 4)   # pipe arms use world/S
+    assert all(a.comm.world in (32, 16, 8, 4)
                for a in sess.planned["arms"].values())
     assert sp.modeled_step_s > 0
 
