@@ -328,6 +328,87 @@ def collect_parallelism() -> dict:
     return out
 
 
+def collect_elastic() -> dict:
+    """Elastic suite (DESIGN.md §15): fully deterministic — a canned
+    fault trace replayed host-side (no model, no wall clock) plus the
+    planner on the surviving fabric.  Gated numbers: the trace's recovery
+    shape (reshard count, steps spent degraded, kill→restore recovery
+    interval), the modeled step cost of the post-reshard auto plan on the
+    surviving 6-world topology, and the straggler-priced search — whose
+    gated cost pins the cadence-demotion math (``straggler_penalty_s``
+    charges every-step the full skew per step but a τ-round local-SGD arm
+    only skew/τ, so a persistent straggler flips the winner)."""
+    from repro.core.schedule import Topology, plan_rounds
+    from repro.elastic import FaultSchedule, replay_world_sizes
+    from repro.elastic.reshard import surviving_topology
+
+    out: dict = {}
+    topo = Topology.from_spec("node:2@datacenter,device:4@fast_ici")
+    trace = "kill:3@3,kill:7@3,restore:3@6,restore:7@6"
+    sched = FaultSchedule.from_spec(trace, world=topo.world)
+    steps = 10
+    sizes, changes = replay_world_sizes(sched, steps)
+    out["trace/reshards"] = {
+        "metric": "n_reshards", "n_reshards": len(changes),
+        "arm": f"at steps {changes}"}
+    out["trace/degraded_steps"] = {
+        "metric": "degraded_steps",
+        "degraded_steps": sum(1 for s in sizes if s < topo.world),
+        "arm": f"min world {min(sizes)}"}
+    out["trace/recovery_steps"] = {
+        "metric": "recovery_steps",
+        "recovery_steps": changes[1] - changes[0],
+        "arm": f"kill@{changes[0]} restore@{changes[1]}"}
+
+    arch = "xlstm-125m"
+    _, profiles = _profiles()[arch]
+    surviving = surviving_topology(topo, {3, 7})
+    best, arms = plan_rounds(profiles, surviving, surviving.world,
+                             opt_name=OPT)
+    out[f"{arch}/{surviving.spec()}/auto"] = {
+        "modeled_step_ms": best.modeled_step_s * 1e3, "arm": best.key}
+    out[f"{arch}/{surviving.spec()}/every_step"] = {
+        "modeled_step_ms": arms["every_step"].modeled_step_s * 1e3,
+        "arm": "every_step"}
+    # a straggler skewing 4 every-step comm rounds: the priced search
+    # must demote the cadence away from every-step
+    skew = arms["every_step"].modeled_step_s * 4.0
+    sbest, _ = plan_rounds(profiles, surviving, surviving.world,
+                           opt_name=OPT, straggler_s=skew)
+    out[f"{arch}/{surviving.spec()}/straggler_auto"] = {
+        "modeled_step_ms": sbest.modeled_step_s * 1e3, "arm": sbest.key}
+
+    # the visible cadence demotion: a compute-bound point (4× backward)
+    # on the flat fast fabric where every-step wins skew-free, and a 2×
+    # skew flips the winner to a τ-round arm — the straggler pays per
+    # ROUND, so stretching the cadence amortizes it (survey §3.1.2)
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.schedule import LINK_PRESETS, profiles_from_grads
+    from repro.models import Model
+    params = Model(get_config(arch)).abstract_params()
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    heavy = profiles_from_grads(params, 4.0 * 4.0 * n * TOKENS / PEAK_FLOPS)
+    flat6 = Topology.flat(6, LINK_PRESETS["fast_ici"],
+                          link_name="fast_ici")
+    calm, carms = plan_rounds(heavy, flat6, 6, opt_name=OPT)
+    skew6 = carms["every_step"].modeled_step_s * 2.0
+    demoted, _ = plan_rounds(heavy, flat6, 6, opt_name=OPT,
+                             straggler_s=skew6)
+    out[f"{arch}/flat6_heavy/auto"] = {
+        "modeled_step_ms": calm.modeled_step_s * 1e3, "arm": calm.key}
+    out[f"{arch}/flat6_heavy/straggler_auto"] = {
+        "modeled_step_ms": demoted.modeled_step_s * 1e3,
+        "arm": demoted.key}
+    if demoted.schedule.kind == calm.schedule.kind:
+        raise RuntimeError(
+            f"straggler pricing lost the cadence demotion: calm winner "
+            f"{calm.key} vs skewed winner {demoted.key}")
+    return out
+
+
 def collect() -> dict:
     """All tracked records, keyed by suite name."""
     from repro.core.schedule import (LINK_PRESETS, PipelineAxis, Topology,
@@ -429,7 +510,8 @@ def collect() -> dict:
     return {"planner": planner, "sharded": sharded, "pipeline": pipeline,
             "topology": topology, "parallelism": collect_parallelism(),
             "kernels": collect_kernels(), "serving": collect_serving(),
-            "calibration": collect_calibration()}
+            "calibration": collect_calibration(),
+            "elastic": collect_elastic()}
 
 
 def gate(records: dict, baseline_dir: str, tolerance: float) -> list:

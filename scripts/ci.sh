@@ -77,6 +77,30 @@ PY
       --steps 3 --batch 2 --seq 32 --sync comm \
       --compressor int8_fused --algo ring --log-every 1
 
+  step "smoke: elastic kill-at-step-k train (8→6→8, DESIGN.md §15)"
+  # the fault-tolerant runtime end to end: kill one device per node at
+  # step 3, reshard 8→6 through the portable checkpoint WITHOUT a
+  # process restart, restore the fleet at step 6 — and the resumed loss
+  # trajectory must reproduce the unfaulted run bit for bit (on a
+  # 1-device host the world is a planning model, so the executed math is
+  # world-independent; any difference is a restore bug)
+  python - <<'PY'
+import numpy as np
+from repro.launch.train import main
+faulted = main(["--arch", "xlstm-125m", "--reduced", "--steps", "8",
+                "--batch", "2", "--seq", "32", "--elastic",
+                "--topology", "node:2@datacenter,device:4@fast_ici",
+                "--fault-trace",
+                "kill:3@3,kill:7@3,restore:3@6,restore:7@6",
+                "--log-every", "0"])
+plain = main(["--arch", "xlstm-125m", "--reduced", "--steps", "8",
+              "--batch", "2", "--seq", "32", "--log-every", "0"])
+np.testing.assert_array_equal(
+    np.asarray(faulted), np.asarray(plain),
+    err_msg="elastic resume diverged from the unfaulted trajectory")
+print("elastic kill-at-step-3 smoke OK: 8 losses bit-identical")
+PY
+
   step "smoke: 3-step two-tier --topology --sync auto train"
   # the tiered network model (DESIGN.md §10): the planner prices every
   # phase per tier and must pick a tier-aware arm (hierarchical buckets

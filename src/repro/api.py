@@ -42,7 +42,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import load_arrays as load_ckpt_arrays
 from repro.checkpoint import save as save_ckpt
+from repro.checkpoint.checkpoint import _flatten_with_paths
 from repro.configs import get_config, reduced
 from repro.core import (GradientSynchronizer, ParallelismSpec, PlanExecutor,
                         ShardLayout, SyncConfig, SyncStrategy, get_scheduler)
@@ -120,6 +122,19 @@ def strategy_from_plan(sp: StrategyPlan,
                         parallelism=sp.parallelism)
 
 
+def _collapse_mean(tree):
+    """Collapse per-worker state (leading world axis, the diverging-
+    scheduler carry) to its consensus view: the mean for inexact leaves —
+    exactly the parameter-averaging round a local scheduler would run
+    next — and worker 0 for integer/bool leaves (step counters etc.,
+    identical across workers by construction)."""
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            return jnp.mean(x, axis=0).astype(x.dtype)
+        return x[0]
+    return jax.tree.map(one, tree)
+
+
 class TrainSession:
     """One training run driven by a :class:`SyncStrategy`.
 
@@ -193,6 +208,7 @@ class TrainSession:
         self._max_replans = 1
         self._window: List[float] = []         # step times since last check
         self._plan_kwargs: Optional[Dict[str, Any]] = None
+        self._restore_opt: Optional[Dict[str, Any]] = None  # load_checkpoint
         self._built = False
 
     # -- state views ---------------------------------------------------------
@@ -371,7 +387,8 @@ class TrainSession:
                   parallelism=None,
                   topology=None,
                   compression_costs=None,
-                  calibration=None) -> StrategyPlan:
+                  calibration=None,
+                  straggler_s: float = 0.0) -> StrategyPlan:
         """``--sync auto``: profile one step, search (rounds schedule ×
         per-bucket strategy × shard axis × parallelism axis), install the
         winning composite as this session's strategy.  ``scheduler`` pins
@@ -406,8 +423,12 @@ class TrainSession:
         matching the spec may win (impossible specs fail loudly inside
         ``plan_rounds``).  It subsumes the single-axis pins, so combining
         it with ``shard_state``/``pipeline_stages``/``micro_batches`` or
-        a pinned ``scheduler`` is an error.  Stashes the full decision
-        record in ``self.planned`` for reporting."""
+        a pinned ``scheduler`` is an error.  ``straggler_s`` (measured
+        worst-vs-median step-time skew, the elastic runtime's signal)
+        prices ``cost.straggler_penalty_s`` into every arm so a
+        persistent straggler demotes the winning cadence (DESIGN.md §15).
+        Stashes the full decision record in ``self.planned`` for
+        reporting."""
         if self._built:
             raise RuntimeError("plan_auto must run before the first step")
         if parallelism is not None:
@@ -482,6 +503,23 @@ class TrainSession:
             global_tokens=float(self.cfg.batch * self.cfg.seq),
             bytes_per_token=float(self.model_cfg.d_model * 4))
         tensor_axis, expert_axis = self._model_axes(pipe_axis)
+        mem_budget = (memory_budget_gb * 2**30
+                      if memory_budget_gb is not None else None)
+
+        def _stash(sg) -> Dict[str, Any]:
+            # what _replan / replan_now re-runs with a fresh profile.
+            # Pinned-scheduler sessions stash the FREE search (their pin
+            # is a user preference, not an execution constraint), so a
+            # straggler-priced re-plan can demote a pinned-LAG cadence
+            # to local SGD mid-run (DESIGN.md §15).
+            return {"lp": lp, "world": world,
+                    "opt_name": self.cfg.optimizer, "shard_grid": sg,
+                    "opt_moments": self.opt_moments,
+                    "memory_budget_bytes": mem_budget,
+                    "pipe_axis": pipe_axis, "tensor_axis": tensor_axis,
+                    "expert_axis": expert_axis, "parallelism": parallelism,
+                    "kw": dict(kw), "tau_grid": tau_grid,
+                    "straggler_s": straggler_s}
 
         arms: Dict[str, StrategyPlan]
         if pipeline_stages is not None and pipeline_stages > 1:
@@ -514,24 +552,14 @@ class TrainSession:
             shard_grid = ((False, True) if shard_state is None
                           else (bool(shard_state),))
             # replan hook re-runs exactly this search with a fresh profile
-            self._plan_kwargs = {
-                "lp": lp, "world": world, "opt_name": self.cfg.optimizer,
-                "shard_grid": shard_grid, "opt_moments": self.opt_moments,
-                "memory_budget_bytes": (memory_budget_gb * 2**30
-                                        if memory_budget_gb is not None
-                                        else None),
-                "pipe_axis": pipe_axis, "tensor_axis": tensor_axis,
-                "expert_axis": expert_axis, "parallelism": parallelism,
-                "kw": dict(kw), "tau_grid": tau_grid}
+            self._plan_kwargs = _stash(shard_grid)
             best, arms = plan_rounds(
                 profiles, lp, world,
                 opt_name=self.cfg.optimizer, shard_grid=shard_grid,
                 opt_moments=self.opt_moments,
-                memory_budget_bytes=(memory_budget_gb * 2**30
-                                     if memory_budget_gb is not None
-                                     else None),
+                memory_budget_bytes=mem_budget,
                 pipeline=pipe_axis, tensor=tensor_axis, expert=expert_axis,
-                parallelism=parallelism,
+                parallelism=parallelism, straggler_s=straggler_s,
                 **dict(kw, **({"tau_grid": tau_grid}
                               if tau_grid is not None else {})))
             exec_best = best
@@ -549,6 +577,7 @@ class TrainSession:
                       f"build; executing {exec_best.key} instead", flush=True)
             self.strategy = strategy_from_plan(exec_best, self.axes)
         elif isinstance(scheduler, LocalSGDScheduler):
+            self._plan_kwargs = _stash((False,))
             rp = serial_round_plan(profiles, lp, world, **kw)
             best = local_sgd_arm(rp, t_bwd, scheduler.cfg.period)
             arms = {best.schedule.key: best}
@@ -561,6 +590,7 @@ class TrainSession:
             # the scheduler's (data-dependent for LAG), so the every-step
             # modeled time is an upper bound.  The schedule records the
             # scheduler actually executed, not every_step.
+            self._plan_kwargs = _stash((False,))
             cp = plan(profiles, lp, world, **kw)
             best = StrategyPlan(
                 schedule=RoundSchedule(kind=scheduler.name), comm=cp,
@@ -780,7 +810,31 @@ class TrainSession:
         step_fn, init_opt_rows, init_sync_state = make_sharded_train_step(
             self.model, engine, self.layout, shopt, self.mesh, self.axes)
         self._sync = jax.jit(step_fn, donate_argnums=(0, 1, 2))
-        self._opt_state = init_opt_rows(self._params)   # replaces replicated
+        if self._restore_opt is not None:
+            # elastic-resharding restore (DESIGN.md §15): re-partition the
+            # checkpoint's LEAF-SHAPED optimizer state onto THIS layout —
+            # the f32 master (synthesized from the restored params when
+            # the checkpoint came from a replicated run) and each moment
+            # tree become canonical shard rows via ``shard_rows``, which
+            # is what makes an 8-world checkpoint land bit-equal on a
+            # 6-rank fabric
+            full = dict(self._restore_opt)
+            master = full.pop("master", None)
+            if master is None:
+                master = jax.tree.map(lambda p: p.astype(jnp.float32),
+                                      self._params)
+            masters = self.layout.shard_rows(master)
+            fresh = shopt.init(masters)
+            if sorted(fresh) != sorted(full):
+                raise ValueError(
+                    f"checkpoint optimizer buffers {sorted(full)} do not "
+                    f"match {self.cfg.optimizer!r}'s {sorted(fresh)}")
+            self._opt_state = {
+                "master": masters,
+                "opt": {k: self.layout.shard_rows(full[k]) for k in fresh}}
+            self._restore_opt = None
+        else:
+            self._opt_state = init_opt_rows(self._params)  # replaces replicated
         self._sync_state = init_sync_state(self._params)
         self._anchor = None
         self._red_state = None
@@ -956,51 +1010,92 @@ class TrainSession:
             return
         self._replan(drift, measured)
 
-    def _replan(self, drift: float, measured_s: float) -> None:
+    def replan_now(self, straggler_s: float = 0.0,
+                   t_backward_s: Optional[float] = None) -> Dict[str, Any]:
+        """Force one re-plan outside the drift gate — the elastic
+        runtime's straggler escalation (DESIGN.md §15): re-run the stashed
+        planner search pricing every arm with
+        ``cost.straggler_penalty_s(straggler_s, rounds/step)``, so a
+        persistent straggler demotes the winning cadence (every-step pays
+        the full skew per step; a local-SGD τ arm pays skew/τ) instead of
+        stalling the bus.  ``t_backward_s`` skips the wall-clock backward
+        re-profile (deterministic replans).  Returns the recorded event;
+        requires a prior :meth:`plan_auto` (the stashed search)."""
+        if self.planned is None:
+            raise RuntimeError("replan_now needs a prior plan_auto")
+        self._replan(0.0, self.measured_step_s(),
+                     straggler_s=straggler_s, t_backward_s=t_backward_s)
+        return self.replan_events[-1]
+
+    def _replan(self, drift: float, measured_s: float,
+                straggler_s: float = 0.0,
+                t_backward_s: Optional[float] = None) -> None:
         """Re-run the stashed planner search with a FRESH backward profile
-        (the measured fabric disagreed with the modeled one).  The new
-        winner is installed only when both the outgoing and incoming arms
-        are plain every-step replicated sync — swapping rounds schedules
-        or shard layouts mid-run would discard scheduler/optimizer state;
-        for those the event records the recommendation without acting."""
+        (the measured fabric disagreed with the modeled one, or a
+        straggler skew was reported).  The new winner is installed when
+        neither the outgoing nor the incoming arm pins an execution shape
+        that would strand state: no pipeline/micro-batch mesh and no shard
+        rows on either side, and an incoming arm the session can rebuild
+        from the live leaf-shaped params — plain every-step or local SGD.
+        Rounds-schedule swaps (every_step↔local_sgd, LAG→either) ARE
+        installed: an outgoing diverging scheduler's per-worker state is
+        collapsed to its mean view first (counted as one parameter round —
+        it IS the averaging round the scheduler owed), scheduler/EF state
+        re-initializes on the rebuild.  Pipeline and sharded shapes still
+        only record the recommendation."""
         event: Dict[str, Any] = {
             "step": self.step, "drift_frac": drift,
             "measured_step_s": measured_s,
             "old_key": self.planned["strategy_plan"].key,
             "applied": False, "note": ""}
+        if straggler_s > 0.0:
+            event["straggler_s"] = straggler_s
         pk = self._plan_kwargs
         if pk is None:
             event["note"] = ("no free-search plan to rerun (pinned "
-                             "scheduler or pipeline)")
+                             "pipeline)")
             event["new_key"] = event["old_key"]
             self.replans += 1
             self.replan_events.append(event)
             return
-        t_bwd = self.profile_backward()
-        profiles = profiles_from_grads(self._params, t_bwd)
+        t_bwd = t_backward_s if t_backward_s is not None \
+            else self.profile_backward()
+        params = worker_view(self._params) if (self._built
+                                               and self._diverging) \
+            else self._params
+        if self.staged is not None:
+            params = self.params
+        profiles = profiles_from_grads(params, t_bwd)
         extra = dict(pk["kw"])
         if pk["tau_grid"] is not None:
             extra["tau_grid"] = pk["tau_grid"]
+        ss = straggler_s if straggler_s > 0.0 \
+            else pk.get("straggler_s", 0.0)
         best, arms = plan_rounds(
             profiles, pk["lp"], pk["world"], opt_name=pk["opt_name"],
             shard_grid=pk["shard_grid"], opt_moments=pk["opt_moments"],
             memory_budget_bytes=pk["memory_budget_bytes"],
             pipeline=pk["pipe_axis"], tensor=pk["tensor_axis"],
             expert=pk["expert_axis"], parallelism=pk["parallelism"],
-            **extra)
+            straggler_s=ss, **extra)
         event["new_key"] = best.key
         old = self.strategy
-        old_plain = (old is not None
-                     and old.scheduler.computes == frozenset({"sync"})
-                     and not old.scheduler.has_param_rounds
-                     and not old.scheduler.needs_grad_probe
-                     and old.pipeline_stages <= 1 and old.micro_batches <= 1)
-        new_sched = best.schedule.kind == "every_step"
-        new_plain = (new_sched and not best.shard_state
-                     and best.pipeline_stages <= 1
-                     and best.micro_batches <= 1)
-        if old_plain and new_plain:
-            if best.key != event["old_key"]:
+        old_ok = (old is not None
+                  and old.pipeline_stages <= 1 and old.micro_batches <= 1
+                  and not old.shard_state)
+        new_ok = (best.schedule.kind in ("every_step", "local_sgd")
+                  and not best.shard_state
+                  and best.pipeline_stages <= 1
+                  and best.micro_batches <= 1)
+        if old_ok and new_ok:
+            if best.key != event["old_key"] \
+                    or type(old.scheduler).name != best.schedule.kind:
+                if self._built and old.scheduler.diverges_params:
+                    # the collapse IS the parameter-averaging round the
+                    # outgoing local scheduler owed — count it honestly
+                    self._params = _collapse_mean(self._params)
+                    self._opt_state = _collapse_mean(self._opt_state)
+                    self.param_rounds += 1
                 self.strategy = strategy_from_plan(best, self.axes)
                 self._built = False    # rebuild lazily; EF residual resets
                 event["applied"] = True
@@ -1008,14 +1103,16 @@ class TrainSession:
                 event["note"] = "re-plan kept the incumbent arm"
         else:
             event["note"] = ("winner needs a different execution shape "
-                             "(rounds/shard/pipeline); not swapped mid-run")
+                             "(shard/pipeline); not swapped mid-run")
         self.planned = dict(self.planned, strategy_plan=best, arms=arms,
                             t_backward_s=t_bwd)
         self.replans += 1
         self.replan_events.append(event)
-        print(f"replan @step {self.step}: drift {drift * 100:+.1f}% -> "
-              f"{best.key}" + (" (installed)" if event["applied"]
-                               else f" ({event['note']})"), flush=True)
+        print(f"replan @step {self.step}: drift {drift * 100:+.1f}%"
+              + (f", straggler {ss * 1e3:.1f} ms" if ss > 0 else "")
+              + f" -> {best.key}"
+              + (" (installed)" if event["applied"]
+                 else f" ({event['note']})"), flush=True)
 
     def drift_report(self) -> Optional[Dict[str, Any]]:
         """The modeled-vs-measured closing of the loop: per-arm predicted
@@ -1065,6 +1162,65 @@ class TrainSession:
         re-partitions on restore."""
         save_ckpt(path, {"params": self.params, "opt": self.full_opt_state()},
                   step=self.step)
+
+    def load_checkpoint(self, path: str) -> int:
+        """Restore a checkpoint written by :meth:`save_checkpoint` into
+        this session, BEFORE the first step compiles the programs.  The
+        payload checksum is verified first (a truncated file raises
+        ``ValueError``, DESIGN.md §15).  Because checkpoints are
+        leaf-shaped, restore is execution-mode agnostic: params load
+        directly; optimizer state fills the replicated template when this
+        session runs replicated (a sharded checkpoint's f32 master is
+        simply dropped — the params carry the same values), and the full
+        leaf-shaped dict is stashed for :meth:`_build_sharded` to
+        re-partition onto THIS session's ``ShardLayout`` — the elastic
+        resharding path: a checkpoint saved on world 8 restores onto a
+        6-rank fabric without restart.  Sets and returns the restored
+        step; the synthetic data pipeline is a pure function of the step
+        index, so resumption replays the exact batch sequence."""
+        if self._built:
+            raise RuntimeError("load_checkpoint must run before the first "
+                               "step")
+        if self.strategy is not None and (
+                self.strategy.pipeline_stages > 1
+                or self.strategy.micro_batches > 1):
+            raise NotImplementedError(
+                "load_checkpoint composes with replicated and sharded DP "
+                "builds; restoring into a pipeline/micro-batched build is "
+                "not supported")
+        data, manifest = load_ckpt_arrays(path)
+
+        def tree_at(prefix, like):
+            flat = _flatten_with_paths(like)
+            missing = [k for k in flat if f"{prefix}/{k}" not in data]
+            if missing:
+                raise ValueError(
+                    f"checkpoint {path!r} lacks {prefix!r} leaves "
+                    f"{missing[:3]}{'…' if len(missing) > 3 else ''} — "
+                    f"was it saved from a different model config?")
+            leaves = [jnp.asarray(data[f"{prefix}/{k}"]) for k in flat]
+            return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+        self._params = tree_at("params", self._params)
+        # every top-level optimizer entry is params-shaped by the
+        # checkpoint contract (full_opt_state): moments, momentum, and —
+        # for sharded-run checkpoints — the f32 "master" copy
+        tops = sorted({k.split("/", 2)[1]
+                       for k in data if k.startswith("opt/")})
+        full = {t: tree_at(f"opt/{t}", self._params) for t in tops}
+        self._restore_opt = dict(full)
+        moments = {k: v for k, v in full.items() if k != "master"}
+        if isinstance(self._opt_state, dict):
+            missing = sorted(set(self._opt_state) - set(moments))
+            if missing:
+                raise ValueError(
+                    f"checkpoint {path!r} lacks optimizer buffers "
+                    f"{missing} required by {self.cfg.optimizer!r}")
+            self._opt_state = {k: moments[k] for k in self._opt_state}
+        else:                      # non-dict optimizer state: structural
+            self._opt_state = tree_at("opt", self._opt_state)
+        self.step = int(manifest.get("step") or 0)
+        return self.step
 
     def summary(self) -> str:
         parts = [f"steps {self.step}", f"comm rounds {self.comm_rounds} "

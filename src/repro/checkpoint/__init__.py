@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, load_arrays, restore, save, verify)

@@ -5,12 +5,24 @@ manifest of the tree structure.
 Sharded-aware: arrays are gathered to host before writing and re-placed with
 ``jax.device_put(..., sharding)`` on restore, so the same checkpoint moves
 between mesh layouts (the usual resharding-restore pattern).
+
+Crash-safe (DESIGN.md §15): both files are written to temporary siblings
+and ``os.replace``-d into place, so a kill mid-write leaves either the
+previous checkpoint or none — never a truncated file that loads as
+garbage.  The manifest additionally records a sha256 of the array payload,
+verified BEFORE any array is deserialized: a torn write that lands between
+the two renames (or bit rot on disk) raises a loud :class:`ValueError`
+instead of restoring silently corrupt state.  Manifests written before the
+checksum existed (no ``"sha256"`` key) still load — verification is
+skipped for them, keeping old checkpoints readable.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any, Dict, Optional
+import tempfile
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -24,21 +36,86 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return flat
 
 
+def _sha256_file(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            h.update(b)
+    return h.hexdigest()
+
+
+def _atomic_bytes(path: str, write_fn) -> str:
+    """Write via a temp sibling + ``os.replace`` (atomic on POSIX within a
+    filesystem); returns the sha256 of the written bytes."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        digest = _sha256_file(tmp)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    return digest
+
+
 def save(path: str, tree, step: Optional[int] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(path + ".npz", **arrays)
+    # np.savez appends ".npz" to bare paths but honors open file handles —
+    # the handle form is what lets the payload go through the atomic tmp
+    digest = _atomic_bytes(path + ".npz", lambda f: np.savez(f, **arrays))
     treedef = jax.tree_util.tree_structure(tree)
-    with open(path + ".json", "w") as f:
-        json.dump({"treedef": str(treedef), "step": step,
-                   "keys": sorted(arrays)}, f)
+    manifest = {"treedef": str(treedef), "step": step,
+                "keys": sorted(arrays), "sha256": digest}
+    _atomic_bytes(path + ".json",
+                  lambda f: f.write(json.dumps(manifest).encode()))
+
+
+def verify(path: str) -> Dict[str, Any]:
+    """Check the ``.npz`` payload against the manifest's sha256; returns
+    the manifest.  Raises :class:`ValueError` on mismatch (truncated or
+    corrupt checkpoint) BEFORE anything is deserialized.  Pre-checksum
+    manifests (no ``"sha256"`` key) pass unverified."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    want = manifest.get("sha256")
+    if want is not None:
+        got = _sha256_file(path + ".npz")
+        if got != want:
+            raise ValueError(
+                f"checkpoint {path!r} is truncated or corrupt: payload "
+                f"sha256 {got[:16]}… does not match the manifest's "
+                f"{want[:16]}… — restore refused (a kill mid-write, torn "
+                f"rename, or on-disk corruption)")
+    return manifest
+
+
+def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Checksum-verified raw load: ``({path_key: array}, manifest)``.
+    The structure-agnostic entry point ``TrainSession.load_checkpoint``
+    restores through (leaf-shaped payloads are mode-portable)."""
+    manifest = verify(path)
+    with np.load(path + ".npz") as data:
+        arrays = {k: data[k] for k in data.files}
+    return arrays, manifest
 
 
 def restore(path: str, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
-    NamedSharding to place shards directly."""
+    NamedSharding to place shards directly.  The payload checksum is
+    verified first (:func:`verify`)."""
+    verify(path)
     data = np.load(path + ".npz")
     flat_like = _flatten_with_paths(like)
     flat_shard = _flatten_with_paths(shardings) if shardings is not None else None

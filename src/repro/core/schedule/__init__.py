@@ -3,7 +3,7 @@ from repro.core.schedule.cost import (  # noqa: F401
     all_to_all_cost_s, allgather_cost_s, allreduce_cost_s,
     allreduce_phases, bucket_sync_cost_s, bucket_sync_phases,
     compressed_wire_bytes, decode_step_cost_s, p2p_cost_s,
-    reduce_scatter_cost_s, shard_gather_cost_s)
+    reduce_scatter_cost_s, shard_gather_cost_s, straggler_penalty_s)
 from repro.core.schedule.calibration import (  # noqa: F401
     CALIBRATION_SET, AffineFit, CalibratedTopology, LinkFit,
     calibrate_topology, drift_fraction, fit_affine,

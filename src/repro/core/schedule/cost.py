@@ -200,6 +200,24 @@ def allgather_cost_s(n_bytes: float, p: int, net: Net) -> float:
     return (p - 1) * (link.alpha_s + n_bytes * link.beta_s_per_byte)
 
 
+def straggler_penalty_s(skew_s: float, rounds_per_step: float = 1.0) -> float:
+    """Per-step cost of a straggling worker under a given round cadence
+    (survey §3.1.2 — the stale-synchronous motivation): a lockstep
+    collective waits for its slowest member, so every ROUND that actually
+    runs pays the measured worst-vs-median step-time skew ``skew_s``.  A
+    schedule running ``rounds_per_step`` global rounds per step therefore
+    pays ``skew_s · rounds_per_step``: every-step BSP eats the full skew
+    each step, a local-SGD τ arm amortizes it τ× — which is exactly the
+    cadence-demotion lever the elastic runtime's backpressure exercises
+    (``plan_rounds(..., straggler_s=)`` adds this term to every arm, so a
+    persistent straggler can flip the planner's winner; DESIGN.md §15).
+    Zero skew prices to exactly 0.0, keeping straggler-free plans
+    bit-identical to the committed baselines."""
+    if skew_s <= 0.0:
+        return 0.0
+    return float(skew_s) * max(float(rounds_per_step), 0.0)
+
+
 def _resolve_tier(topo: Topology, tier: Optional[Union[int, str]],
                   m_bytes: float) -> Tier:
     """Tier selection shared by the placed-axis cost functions: by index

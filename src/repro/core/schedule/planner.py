@@ -25,7 +25,8 @@ from repro.core.parallelism import ParallelismSpec
 from repro.core.schedule.cost import (CompressionCostTable, LinkParams,
                                       all_to_all_cost_s, allreduce_cost_s,
                                       bucket_sync_cost_s,
-                                      shard_gather_cost_s)
+                                      shard_gather_cost_s,
+                                      straggler_penalty_s)
 from repro.core.schedule.perf_model import LayerProfile
 from repro.core.schedule.topology import Topology, as_topology
 
@@ -1008,7 +1009,8 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                 tensor: Optional[TensorAxis] = None,
                 expert: Optional[ExpertAxis] = None,
                 parallelism=None,
-                cost_table: Optional[CompressionCostTable] = None
+                cost_table: Optional[CompressionCostTable] = None,
+                straggler_s: float = 0.0
                 ) -> Tuple[StrategyPlan, Dict[str, StrategyPlan]]:
     """Search the rounds axis × the bits axis × the shard axis: every
     candidate composite is a (RoundSchedule, CommPlan) pair; returns
@@ -1060,6 +1062,14 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
     tier it doesn't divide — raises loudly rather than silently planning
     something else.  ``arms`` still carries every priced arm for the
     decision record.
+
+    ``straggler_s`` (the elastic runtime's measured worst-vs-median
+    step-time skew) adds ``cost.straggler_penalty_s(straggler_s,
+    rounds/step)`` to every arm: schedules that sync every step pay the
+    full skew per step, local-SGD τ arms pay skew/τ — a persistent
+    straggler thereby demotes the winning cadence instead of stalling the
+    bus (DESIGN.md §15).  The default 0.0 prices to exactly zero, keeping
+    straggler-free plans bit-identical.
     """
     if isinstance(link, Topology) and link.world != world:
         raise ValueError(f"topology world {link.world} ({link.spec()}) != "
@@ -1184,6 +1194,15 @@ def plan_rounds(layer_profiles: Sequence[LayerProfile], link,
                     opt_name=opt_name, opt_moments=opt_moments,
                     placement=placement, cost_table=cost_table)
                 arms[arm.key] = arm
+    if straggler_s > 0.0:
+        # price the straggler on every arm (the decision record stays
+        # honest): rounds/step is 1 except for local-SGD's 1/τ cadence
+        for key, a in list(arms.items()):
+            rps = (1.0 / max(a.schedule.period, 1)
+                   if a.schedule.kind == "local_sgd" else 1.0)
+            arms[key] = dataclasses.replace(
+                a, modeled_step_s=a.modeled_step_s
+                + straggler_penalty_s(straggler_s, rps))
     pool = list(arms.values())
     if spec is not None:
         pool = [a for a in pool if _arm_matches_spec(a, spec)]

@@ -153,7 +153,17 @@ class ShardLayout:
         """Move saved shard rows to a different mesh shape (checkpoint
         restore on a new world size): returns (new_layout, new_rows).
         Full state round-trips bit-equal because both layouts chunk the
-        same canonical flat buffer."""
+        same canonical flat buffer — including NON-DIVISOR world changes
+        (8 → 6 → 8, the elastic-resharding path, DESIGN.md §15): nested
+        ceil-chunking only pads the tail, it never requires the old and
+        new worlds to divide each other.  Invalid target shapes (empty,
+        zero or negative axes, non-integers) fail loudly here instead of
+        producing silently misaligned rows."""
+        sizes = tuple(new_axis_sizes)
+        if not sizes or any(int(p) != p or int(p) < 1 for p in sizes):
+            raise ValueError(
+                f"cannot reshard to axis sizes {sizes!r}: every axis must "
+                f"be a positive integer (world = their product)")
         new = dataclasses.replace(
             self, axis_sizes=tuple(int(p) for p in new_axis_sizes),
             buckets=tuple(dataclasses.replace(

@@ -61,15 +61,28 @@ class RoundScheduler:
       * ``diverges_params`` — local phases let per-worker parameters drift,
         so the trainer must carry params/optimizer state PER WORKER
         (leading device axis) instead of replicated
+      * ``supports_backpressure`` — the scheduler has a cadence lever a
+        straggler signal can demote (:meth:`backpressure`)
     """
     name: str = "base"
     computes: FrozenSet[str] = frozenset({"sync"})
     has_param_rounds: bool = False
     needs_grad_probe: bool = False
     diverges_params: bool = False
+    supports_backpressure: bool = False
 
     def init_state(self, params) -> Dict[str, Any]:
         return {}
+
+    def backpressure(self, factor: float = 2.0) -> bool:
+        """Demote this scheduler's global round cadence in response to a
+        straggler signal (survey §3.1.2: trade synchronization frequency
+        for stall time instead of blocking the bus on the slowest
+        worker).  Returns True when the cadence actually changed; the
+        base scheduler has no cadence lever and returns False — the
+        elastic runtime then escalates to a straggler-priced re-plan
+        (``plan_rounds(straggler_s=...)``, DESIGN.md §15)."""
+        return False
 
     def round(self, step: int, state: Dict[str, Any],
               probe: Optional[Dict[str, float]] = None
@@ -136,6 +149,7 @@ class LocalSGDScheduler(RoundScheduler):
     computes = frozenset({"local"})
     has_param_rounds = True
     diverges_params = True
+    supports_backpressure = True
 
     def __init__(self, period: int = 4, post_local_after: int = 0,
                  cfg: Optional[LocalSGDConfig] = None):
@@ -148,6 +162,14 @@ class LocalSGDScheduler(RoundScheduler):
     def round(self, step, state, probe=None):
         return RoundAction("local",
                            param_round=should_sync(step, self.cfg)), state
+
+    def backpressure(self, factor: float = 2.0) -> bool:
+        # stretching τ is pure host-side dispatch: the compiled local /
+        # param-round programs don't depend on the period, so the demotion
+        # is safe mid-run (rounds just get rarer from the next step on)
+        new = max(int(round(self.cfg.period * factor)), self.cfg.period + 1)
+        self.cfg = dataclasses.replace(self.cfg, period=new)
+        return True
 
     def describe(self):
         return (f"local_sgd τ={self.cfg.period}"
@@ -169,6 +191,7 @@ class LAGScheduler(RoundScheduler):
     name = "lag"
     computes = frozenset({"sync", "reuse"})
     needs_grad_probe = True
+    supports_backpressure = True
 
     def __init__(self, threshold: float = 0.1,
                  cfg: Optional[LAGConfig] = None):
@@ -201,6 +224,13 @@ class LAGScheduler(RoundScheduler):
             return lag_update_state(state, synced_grads, True)
         return state
 
+    def backpressure(self, factor: float = 2.0) -> bool:
+        # a larger threshold makes the lazy trigger lazier: more reuse
+        # rounds, fewer bus-stalling syncs — LAG's native demotion lever
+        self.cfg = dataclasses.replace(
+            self.cfg, threshold=self.cfg.threshold * max(factor, 1.0))
+        return True
+
     def describe(self):
         return f"lag θ={self.cfg.threshold}"
 
@@ -215,11 +245,19 @@ class PushPullScheduler(RoundScheduler):
     computes = frozenset({"sync", "local"})
     has_param_rounds = True
     diverges_params = True
+    supports_backpressure = True
 
     def __init__(self, n_push: int = 1, n_fetch: int = 1,
                  cfg: Optional[AsymmetricPushPullConfig] = None):
         self.cfg = cfg or AsymmetricPushPullConfig(n_push=n_push,
                                                    n_fetch=n_fetch)
+
+    def backpressure(self, factor: float = 2.0) -> bool:
+        c = self.cfg
+        self.cfg = AsymmetricPushPullConfig(
+            n_push=max(int(round(c.n_push * factor)), c.n_push + 1),
+            n_fetch=max(int(round(c.n_fetch * factor)), c.n_fetch + 1))
+        return True
 
     def round(self, step, state, probe=None):
         compute = "sync" if self.cfg.should_push(step) else "local"

@@ -1,0 +1,9 @@
+"""Elastic fault-tolerant training runtime (DESIGN.md §15): survive
+preemption, reshard across world changes without restart, and demote the
+sync cadence under stragglers instead of stalling the bus."""
+from repro.elastic.faults import (  # noqa: F401
+    FaultEvent, FaultSchedule, replay_world_sizes)
+from repro.elastic.reshard import surviving_topology  # noqa: F401
+from repro.elastic.runtime import (  # noqa: F401
+    ElasticConfig, ElasticRuntime, ReshardEvent, SimulatedExecutor,
+    StepOutcome)

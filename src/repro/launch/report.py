@@ -343,6 +343,24 @@ def render_drift_table(drift: dict) -> str:
     return "\n".join(lines)
 
 
+def render_elastic_events(events) -> str:
+    """The elastic runtime's decision log (``--elastic`` epilogue): every
+    reshard, backpressure demotion, and straggler re-plan with the world
+    transition and surviving topology (DESIGN.md §15)."""
+    if not events:
+        return "elastic: no membership changes or straggler actions"
+    lines = [f"elastic events ({len(events)}):",
+             "| step | event | world | topology / plan | note |",
+             "|---|---|---|---|---|"]
+    for e in events:
+        world = (f"{e.old_world}→{e.new_world}"
+                 if e.new_world != e.old_world else f"{e.old_world}")
+        what = e.topology or e.plan_key or "—"
+        lines.append(f"| {e.step} | {e.kind} | {world} | {what} | "
+                     f"{e.note} |")
+    return "\n".join(lines)
+
+
 def render_sharded_memory(layout, opt_name: str, moments=None) -> str:
     """One-line per-worker memory report for a sharded-DP run (the ZeRO
     identity the acceptance criterion checks): partitioned moments + f32

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 from repro.api import SessionConfig, TrainSession
 from repro.configs import ALL_ARCHS
@@ -147,6 +148,21 @@ def parse_args(argv=None):
     ap.add_argument("--replan-every", type=int, default=25,
                     help="steps between drift checks for "
                          "--replan-drift-pct (default 25)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="supervised fault-tolerant step loop (DESIGN.md "
+                         "§15): survive worker preemption by resharding "
+                         "through the portable checkpoint — no process "
+                         "restart — and demote the sync cadence under "
+                         "stragglers.  Requires --topology (its world is "
+                         "the fleet the fault trace runs against); "
+                         "composes with vanilla/comm/auto and pinned "
+                         "rounds schedulers, not with pipeline stages")
+    ap.add_argument("--fault-trace", default="", metavar="SPEC_OR_PATH",
+                    help="deterministic fault schedule for --elastic: a "
+                         "compact spec 'kill:3@5,slow:1x4@3,restore:3@9' "
+                         "(kind:worker[xfactor]@step) or a path to a JSON "
+                         "trace file (FaultSchedule.to_json).  Empty = "
+                         "no faults (the supervised loop still runs)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=10)
     return ap.parse_args(argv)
@@ -215,12 +231,80 @@ def resolve_cli_parallelism(args):
     return par_spec, shard, pipe, micro
 
 
+def run_elastic(args, scfg):
+    """``--elastic``: drive the session through the supervised
+    fault-tolerant loop instead of a bare ``run()``.  Fresh sessions (and
+    fresh scheduler instances — backpressure mutates scheduler config)
+    come from a factory so resharding rebuilds from scratch every time."""
+    import tempfile
+
+    from repro.elastic import ElasticConfig, ElasticRuntime, FaultSchedule
+    from repro.launch.report import render_elastic_events
+
+    if not args.topology:
+        raise SystemExit("--elastic needs --topology: the tier-size "
+                         "product is the fleet the fault trace runs "
+                         "against")
+    _, shard, pipe, micro = resolve_cli_parallelism(args)
+    if pipe > 1 or micro > 1:
+        raise SystemExit("--elastic resharding composes with replicated "
+                         "and sharded DP; pipeline/micro-batched builds "
+                         "cannot restore mid-run (DESIGN.md §15)")
+
+    def factory():
+        s = TrainSession(SessionConfig(**dataclasses.asdict(scfg)))
+        scheduler = scheduler_from_args(args)
+        if args.sync == "comm":
+            sync_cfg = SyncConfig(
+                compressor=args.compressor, algo=args.algo,
+                error_feedback=not args.no_error_feedback,
+                bucket_bytes=int(args.bucket_mb * 2**20))
+            s.strategy = make_strategy(
+                scheduler if scheduler is not None else "every_step",
+                axes=s.axes, sync=sync_cfg)
+        elif scheduler is not None:
+            s.strategy = SyncStrategy(scheduler=scheduler)
+        return s
+
+    from repro.core.schedule import Topology
+    topo = Topology.from_spec(args.topology)
+    trace = args.fault_trace
+    if trace and os.path.exists(trace):
+        schedule = FaultSchedule.from_json(trace)
+        if schedule.world != topo.world:
+            raise SystemExit(
+                f"fault trace {trace} is against world={schedule.world} "
+                f"but --topology {topo.spec()!r} has world={topo.world}")
+    else:
+        schedule = FaultSchedule.from_spec(trace, world=topo.world)
+    cfg = ElasticConfig(
+        topology=topo, checkpoint_dir=tempfile.mkdtemp(prefix="elastic_"),
+        plan=(args.sync == "auto"), link=args.link,
+        t_backward_s=(args.plan_backward_ms / 1e3
+                      if args.plan_backward_ms > 0 else 0.05))
+    rt = ElasticRuntime(factory, schedule, cfg)
+    losses = rt.run(args.steps)
+    print(render_elastic_events(rt.events), flush=True)
+    if args.checkpoint:
+        rt.session.save_checkpoint(args.checkpoint)
+        print("checkpoint written:", args.checkpoint)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) | "
+          f"steps {rt.session.step}, comm rounds {rt.comm_rounds} "
+          f"(grad {rt.grad_rounds}, param {rt.param_rounds}), "
+          f"{len(rt.events)} elastic events")
+    return losses
+
+
 def main(argv=None):
     args = parse_args(argv)
     scfg = SessionConfig(
         arch=args.arch, reduced=args.reduced, steps=args.steps,
         batch=args.batch, seq=args.seq, lr=args.lr, warmup=args.warmup,
         optimizer=args.optimizer, data_parallel=args.data_parallel)
+    if args.elastic:
+        return run_elastic(args, scfg)
+    if args.fault_trace:
+        raise SystemExit("--fault-trace only applies under --elastic")
     scheduler = scheduler_from_args(args)
     par_spec, shard, pipe, micro = resolve_cli_parallelism(args)
     if shard and scheduler is not None:

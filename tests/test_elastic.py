@@ -1,0 +1,350 @@
+"""Elastic fault-tolerant runtime (DESIGN.md §15, ISSUE 10).
+
+Covers the three pillars end to end plus their unit surfaces:
+
+  * **conformance**: kill one device per node at step 3 under a seeded
+    FaultSchedule, reshard 8→6 through the portable checkpoint WITHOUT a
+    process restart, restore the fleet at step 6 — and the full loss
+    trajectory must match the unfaulted reference bit for bit (on a
+    1-device host the world is a planning model, so the executed math is
+    world-independent; any difference is a restore bug);
+  * **checkpoint integrity**: atomic temp+rename writes, content
+    checksums verified BEFORE deserialization (a truncated real
+    checkpoint raises ``ValueError``), legacy manifests still load;
+  * **straggler demotion**: per-worker backpressure stretches the
+    installed scheduler's cadence (local-SGD τ), and — when the
+    scheduler has no cadence lever — escalates to a straggler-priced
+    re-plan that INSTALLS the demoted arm (every_step↔local_sgd and
+    pinned-LAG swaps, the drift-replan follow-through).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import SessionConfig, TrainSession
+from repro.core import SyncStrategy
+from repro.core.schedule import (LayerProfile, Topology, plan_rounds,
+                                 straggler_penalty_s)
+from repro.core.strategy import get_scheduler
+from repro.elastic import (ElasticConfig, ElasticRuntime, FaultEvent,
+                           FaultSchedule, replay_world_sizes,
+                           surviving_topology)
+
+ARCH_KW = dict(arch="xlstm-125m", reduced=True, batch=2, seq=16, seed=0)
+TOPO8 = "node:2@datacenter,device:4@fast_ici"
+
+
+def _factory(steps=10, **kw):
+    def make():
+        return TrainSession(SessionConfig(steps=steps, **ARCH_KW, **kw))
+    return make
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule: parsing, validation, determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_spec_roundtrip_and_order():
+    s = FaultSchedule.from_spec("restore:3@9,kill:3@5,slow:1x4@3", world=8)
+    assert [e.describe() for e in s.events] == \
+        ["slow:1x4@3", "kill:3@5", "restore:3@9"]
+    assert FaultSchedule.from_spec(s.spec(), world=8) == s
+    assert s.last_step == 9
+    assert [e.kind for e in s.events_at(5)] == ["kill"]
+    # JSON round trip (the committed-trace format)
+    assert FaultSchedule.from_json(s.to_json()) == s
+
+
+def test_fault_schedule_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(step=0, worker=0, kind="pause")
+    with pytest.raises(ValueError, match="factor must be > 1"):
+        FaultEvent(step=0, worker=0, kind="slow", factor=1.0)
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSchedule.from_spec("kill:8@1", world=8)
+    with pytest.raises(ValueError, match="already dead"):
+        FaultSchedule.from_spec("kill:1@1,kill:1@2", world=4)
+    with pytest.raises(ValueError, match="not dead"):
+        FaultSchedule.from_spec("restore:1@1", world=4)
+    with pytest.raises(ValueError, match="no survivors"):
+        FaultSchedule.from_spec("kill:0@1,kill:1@1", world=2)
+    with pytest.raises(ValueError, match="dead worker"):
+        FaultSchedule.from_spec("kill:1@1,slow:1x2@2", world=4)
+    with pytest.raises(ValueError, match="cannot parse"):
+        FaultSchedule.from_spec("kill3@", world=4)
+
+
+def test_fault_schedule_random_is_seeded():
+    a = FaultSchedule.random(world=8, steps=20, n_faults=6, seed=42)
+    b = FaultSchedule.random(world=8, steps=20, n_faults=6, seed=42)
+    c = FaultSchedule.random(world=8, steps=20, n_faults=6, seed=43)
+    assert a == b
+    assert a != c                    # overwhelmingly likely with 6 faults
+    FaultSchedule(events=a.events, world=8)   # replays valid
+
+
+def test_replay_world_sizes():
+    s = FaultSchedule.from_spec(
+        "kill:3@3,kill:7@3,restore:3@6,restore:7@6", world=8)
+    sizes, changes = replay_world_sizes(s, 10)
+    assert sizes == [8, 8, 8, 6, 6, 6, 8, 8, 8, 8]
+    assert changes == [3, 6]
+
+
+# ---------------------------------------------------------------------------
+# surviving_topology
+# ---------------------------------------------------------------------------
+
+def test_surviving_topology_shapes():
+    topo = Topology.from_spec(TOPO8)
+    # uniform partial loss (one device per node): tiered shape survives
+    t = surviving_topology(topo, {3, 7})
+    assert t.spec() == "node:2@datacenter,device:3@fast_ici"
+    # whole group gone: inner stack intact, outer tier dropped
+    t = surviving_topology(topo, {4, 5, 6, 7})
+    assert t.spec() == "device:4@fast_ici"
+    # irregular loss: conservative flat fallback on the SLOWEST link
+    t = surviving_topology(topo, {5})
+    assert t.is_flat and t.world == 7
+    assert t.tiers[0].link_name == "datacenter"
+    # no dead -> unchanged; flat topology just shrinks
+    assert surviving_topology(topo, set()) is topo
+    flat = Topology.from_spec("device:8@fast_ici")
+    assert surviving_topology(flat, {0, 1}).world == 6
+    with pytest.raises(ValueError, match="out of range"):
+        surviving_topology(topo, {8})
+    with pytest.raises(ValueError, match="no survivors"):
+        surviving_topology(flat, set(range(8)))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity (atomic writes + checksums)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_truncation_detected(tmp_path):
+    """Satellite (b): truncate a REAL checkpoint mid-payload — the
+    checksum must fail verification BEFORE deserialization with a loud
+    ValueError, from both verify() and the session restore path."""
+    from repro import checkpoint as ckpt
+    s = TrainSession(SessionConfig(steps=2, **ARCH_KW))
+    path = str(tmp_path / "ck")
+    s.save_checkpoint(path)
+    ckpt.verify(path)                              # intact: no raise
+    payload = path + ".npz"
+    n = os.path.getsize(payload)
+    with open(payload, "rb") as f:
+        head = f.read(n // 2)
+    with open(payload, "wb") as f:
+        f.write(head)                              # truncated write
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        ckpt.verify(path)
+    fresh = TrainSession(SessionConfig(steps=2, **ARCH_KW))
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        fresh.load_checkpoint(path)
+
+
+def test_checkpoint_atomic_and_legacy(tmp_path):
+    """Writes are temp+rename (no partial files left beside the
+    checkpoint) and a pre-checksum manifest still loads — verify() skips
+    rather than rejecting history."""
+    from repro import checkpoint as ckpt
+    s = TrainSession(SessionConfig(steps=2, **ARCH_KW))
+    path = str(tmp_path / "ck")
+    s.save_checkpoint(path)
+    s.save_checkpoint(path)                        # overwrite is clean
+    assert sorted(os.listdir(tmp_path)) == ["ck.json", "ck.npz"]
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    assert "sha256" in manifest
+    legacy = {k: v for k, v in manifest.items() if k != "sha256"}
+    with open(path + ".json", "w") as f:
+        json.dump(legacy, f)
+    ckpt.verify(path)                              # legacy: no raise
+    fresh = TrainSession(SessionConfig(steps=2, **ARCH_KW))
+    assert fresh.load_checkpoint(path) == 0
+    import jax
+    for a, b in zip(jax.tree.leaves(fresh.params),
+                    jax.tree.leaves(s.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# The conformance run: kill at step k, 8 -> 6 -> 8, bit-for-bit resume
+# ---------------------------------------------------------------------------
+
+def test_elastic_reshard_conformance_bit_for_bit(tmp_path):
+    sched = FaultSchedule.from_spec(
+        "kill:3@3,kill:7@3,restore:3@6,restore:7@6", world=8)
+    rt = ElasticRuntime(_factory(), sched, ElasticConfig(
+        topology=TOPO8, checkpoint_dir=str(tmp_path)))
+    losses = rt.run(8)
+    assert len(losses) == 8
+    # the runtime went 8 -> 6 -> 8 without a process restart
+    kinds = [(e.step, e.kind, e.old_world, e.new_world) for e in rt.events]
+    assert kinds == [(3, "reshard", 8, 6), (6, "reshard", 6, 8)]
+    assert rt.events[0].topology == "node:2@datacenter,device:3@fast_ici"
+    # round accounting survives session generations (BSP: 1 grad round
+    # per step, aggregated across all three sessions)
+    assert rt.grad_rounds == 8
+    # post-recovery trajectory matches the unfaulted reference EXACTLY
+    ref = _factory()()
+    ref_losses = [ref.step_once() for _ in range(8)]
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.asarray(ref_losses))
+
+
+def test_elastic_replan_on_reshard_carries_topology_block(tmp_path):
+    """plan=True: resharding re-runs the planner on the SURVIVING fabric
+    and the plan record carries the re-planned topology block (the
+    acceptance criterion's record contract)."""
+    from repro.launch.report import comm_plan_record
+    sched = FaultSchedule.from_spec("kill:3@2,kill:7@2", world=8)
+    rt = ElasticRuntime(_factory(steps=4), sched, ElasticConfig(
+        topology=TOPO8, checkpoint_dir=str(tmp_path), plan=True,
+        t_backward_s=0.05))
+    rt.run(4)
+    ev = [e for e in rt.events if e.kind == "reshard"]
+    assert len(ev) == 1 and ev[0].new_world == 6
+    assert ev[0].plan_key          # a plan was installed post-reshard
+    sp = rt.session.planned["strategy_plan"]
+    rec = comm_plan_record(sp.comm)
+    assert "topology" in rec, "re-planned record lost the topology block"
+    assert rec["topology"]["spec"] == "node:2@datacenter,device:3@fast_ici"
+    assert rec["world"] == 6
+
+
+# ---------------------------------------------------------------------------
+# Straggler demotion: backpressure and the re-plan escalation
+# ---------------------------------------------------------------------------
+
+def test_scheduler_backpressure_units():
+    ls = get_scheduler("local_sgd", period=4)
+    assert ls.supports_backpressure and ls.backpressure(2.0)
+    assert ls.cfg.period == 8
+    lag = get_scheduler("lag", threshold=0.5)
+    assert lag.supports_backpressure and lag.backpressure(3.0)
+    assert lag.cfg.threshold == pytest.approx(1.5)
+    pp = get_scheduler("push_pull", n_push=2, n_fetch=4)
+    assert pp.supports_backpressure and pp.backpressure(2.0)
+    assert (pp.cfg.n_push, pp.cfg.n_fetch) == (4, 8)
+    es = get_scheduler("every_step")
+    assert not es.supports_backpressure and not es.backpressure(2.0)
+
+
+def test_runtime_backpressure_demotes_local_sgd_cadence(tmp_path):
+    def factory():
+        s = TrainSession(SessionConfig(steps=6, **ARCH_KW))
+        s.strategy = SyncStrategy(
+            scheduler=get_scheduler("local_sgd", period=2))
+        return s
+    sched = FaultSchedule.from_spec("slow:1x4@1", world=8)
+    rt = ElasticRuntime(factory, sched, ElasticConfig(
+        topology=TOPO8, checkpoint_dir=str(tmp_path)))
+    rt.run(6)
+    ev = [e for e in rt.events if e.kind == "backpressure"]
+    assert len(ev) == 1, "one demotion per straggler episode"
+    assert "local_sgd" in ev[0].note
+    # the installed scheduler's cadence was stretched, not the bus stalled
+    assert rt.session.strategy.scheduler.cfg.period == 4
+
+
+def test_replan_now_installs_cadence_swap():
+    """Satellite (f), session level: a straggler-priced re-plan INSTALLS
+    an every_step -> local_sgd swap (not just records it) — the planner's
+    cadence demotion reaches the executed strategy."""
+    s = TrainSession(SessionConfig(steps=4, **ARCH_KW))
+    s.apply_topology("device:8@fast_ici")
+    sp = s.plan_auto(t_backward_s=0.5)        # compute-bound: every-step
+    assert sp.schedule.kind == "every_step"
+    ev = s.replan_now(straggler_s=2.0, t_backward_s=0.5)
+    assert ev["applied"] and ev["straggler_s"] == 2.0
+    assert s.strategy.scheduler.name == "local_sgd"
+    # the swapped strategy executes (rebuild from leaf-shaped params)
+    assert np.isfinite(s.step_once())
+
+
+def test_replan_now_swaps_pinned_lag():
+    """Satellite (f): the stash now covers PINNED schedulers, so a
+    straggler re-plan can demote a LAG session to a τ-round cadence."""
+    s = TrainSession(SessionConfig(steps=4, **ARCH_KW))
+    s.apply_topology("device:8@fast_ici")
+    s.plan_auto(scheduler=get_scheduler("lag", threshold=0.5),
+                t_backward_s=0.5)
+    assert s.strategy.scheduler.name == "lag"
+    assert s._plan_kwargs is not None, "pinned-scheduler plan not stashed"
+    s.step_once()                              # build + run LAG once
+    ev = s.replan_now(straggler_s=2.0, t_backward_s=0.5)
+    assert ev["applied"], ev
+    assert s.strategy.scheduler.name in ("every_step", "local_sgd")
+    assert np.isfinite(s.step_once())
+
+
+def test_runtime_escalates_to_replan(tmp_path):
+    """Runtime level: every-step has no cadence lever, so a persistent
+    straggler escalates to the straggler-priced re-plan and the installed
+    cadence CHANGES mid-run."""
+    def factory():
+        return TrainSession(SessionConfig(steps=6, **ARCH_KW))
+    sched = FaultSchedule.from_spec("slow:1x6@1", world=8)
+    rt = ElasticRuntime(factory, sched, ElasticConfig(
+        topology="device:8@fast_ici", checkpoint_dir=str(tmp_path),
+        plan=True, t_backward_s=0.5))
+    assert rt.session.strategy.scheduler.name == "every_step"
+    rt.run(5)
+    ev = [e for e in rt.events if e.kind == "replan"]
+    assert len(ev) == 1 and "installed" in ev[0].note
+    assert rt.session.strategy.scheduler.name == "local_sgd"
+
+
+# ---------------------------------------------------------------------------
+# Straggler pricing units
+# ---------------------------------------------------------------------------
+
+def test_straggler_penalty_units():
+    assert straggler_penalty_s(0.0) == 0.0
+    assert straggler_penalty_s(-1.0, 4.0) == 0.0
+    assert straggler_penalty_s(0.2) == pytest.approx(0.2)
+    # a tau-round cadence amortizes the skew: skew/tau per step
+    assert straggler_penalty_s(0.2, 1.0 / 8) == pytest.approx(0.025)
+
+
+def test_plan_rounds_straggler_zero_is_identity():
+    profs = [LayerProfile(t_backward_s=2e-4, grad_bytes=4 * 2**20)
+             for _ in range(8)]
+    topo = Topology.from_spec("node:2@datacenter,device:4@fast_ici")
+    b0, a0 = plan_rounds(profs, topo, 8, opt_name="adam")
+    b1, a1 = plan_rounds(profs, topo, 8, opt_name="adam", straggler_s=0.0)
+    assert b0.key == b1.key
+    assert {k: a.modeled_step_s for k, a in a0.items()} == \
+        {k: a.modeled_step_s for k, a in a1.items()}
+
+
+def test_plan_rounds_straggler_prices_every_step_hardest():
+    profs = [LayerProfile(t_backward_s=5e-3, grad_bytes=4 * 2**20)
+             for _ in range(8)]
+    topo = Topology.from_spec("device:8@fast_ici")
+    _, a0 = plan_rounds(profs, topo, 8, opt_name="adam")
+    skew = 0.05
+    _, a1 = plan_rounds(profs, topo, 8, opt_name="adam", straggler_s=skew)
+    # every-step pays the full skew; a tau-round arm pays skew/tau
+    assert a1["every_step"].modeled_step_s == pytest.approx(
+        a0["every_step"].modeled_step_s + skew)
+    for key in a0:
+        if a0[key].schedule.kind == "local_sgd":
+            tau = a0[key].schedule.period
+            assert a1[key].modeled_step_s == pytest.approx(
+                a0[key].modeled_step_s + skew / tau)
+
+
+def test_render_elastic_events():
+    from repro.elastic.runtime import ReshardEvent
+    from repro.launch.report import render_elastic_events
+    assert "no membership changes" in render_elastic_events([])
+    out = render_elastic_events([ReshardEvent(
+        step=3, kind="reshard", old_world=8, new_world=6,
+        topology="node:2@datacenter,device:3@fast_ici",
+        note="dead=[3, 7]")])
+    assert "8→6" in out and "device:3" in out and "dead=[3, 7]" in out

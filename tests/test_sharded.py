@@ -95,6 +95,34 @@ def test_layout_seg_ids_and_reshard():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_reshard_non_divisor_worlds_bit_exact():
+    """The elastic path (DESIGN.md §15): state saved on world 8 must land
+    bit-exactly on worlds that do NOT divide it — 6 (preemption), 5, 3,
+    and a nested (2, 3) mesh — and back to 8 again.  Nested ceil-chunking
+    only pads the tail, so no divisibility is required; a silent
+    misalignment here would corrupt every post-reshard optimizer step."""
+    rng = np.random.default_rng(7)
+    params = {"w": jnp.asarray(rng.normal(size=(13, 5)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(11,)).astype(np.float32))}
+    plan_ = sharded_plan_from_config(SyncConfig(bucket_bytes=128), params)
+    lay8 = ShardLayout.from_plan(plan_, params, (8,))
+    rows8 = lay8.shard_rows(params)
+    for sizes in ((6,), (5,), (3,), (2, 3)):
+        new_lay, new_rows = lay8.reshard(rows8, sizes)
+        assert new_lay.world == int(np.prod(sizes))
+        got = new_lay.tree_from_rows(new_rows, params)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and back to 8: the full 8 -> 6 -> 8 elastic round trip
+        back_lay, back_rows = new_lay.reshard(new_rows, (8,))
+        for r8, rb in zip(rows8, back_rows):
+            np.testing.assert_array_equal(np.asarray(r8), np.asarray(rb))
+    # invalid target shapes fail loudly, not with misaligned rows
+    for bad in ((), (0,), (-2,), (2.5,)):
+        with pytest.raises(ValueError, match="positive integer"):
+            lay8.reshard(rows8, bad)
+
+
 # ---------------------------------------------------------------------------
 # Cost-model properties
 # ---------------------------------------------------------------------------
